@@ -1,0 +1,42 @@
+"""Fig 4 reproduction: accelerator derating (SM-disable) and the
+CPU/GPU-ratio metric across real systems + the provisioning rule."""
+
+from repro.core.provisioning import (cpu_gpu_ratio, fit_paper_derating,
+                                     provision)
+from repro.hw import DGX1_HOST, HostSpec, TPU_V5E, V100, V5E_HOST
+
+
+def main():
+    print("# fig4: slowdown vs compute fraction (40 CPU threads fixed)")
+    print("name,value,derived")
+    m = fit_paper_derating()
+    for sms in (80, 64, 40, 20, 8, 2):
+        f = sms / 80.0
+        print(f"fig4_slowdown_{sms}sm,{float(m.slowdown(f)):.3f},"
+              f"paper_at_40sm=1.06")
+
+    print("# cpu/gpu ratio of real systems (paper Conclusion 3: want >= 1)")
+    dgx_a100_host = HostSpec("dgx-a100", 256, 1500.0)
+    a100ish = V100  # SM-equivalents normalized to V100 SMs
+    rows = [
+        ("dgx1", cpu_gpu_ratio(DGX1_HOST, V100, 8)),          # paper: 1/16
+        ("dgx_a100", 256 / (8 * 108 * (312e12 / 108) / (125e12 / 80))),
+        ("v5e_host_8chip", cpu_gpu_ratio(V5E_HOST, TPU_V5E, 8)),
+    ]
+    for name, r in rows:
+        print(f"ratio_{name},{r:.4f},threads_per_v100_sm_equivalent")
+
+    print("# provisioning: host threads needed per workload (v5e-8 host)")
+    for name, flops_frame in (("r2d2_atari_2M", 2e6),
+                              ("lm_policy_1B", 2e9),
+                              ("lm_policy_32B_active", 6.4e10)):
+        p = provision(TPU_V5E, V5E_HOST, 8,
+                      train_flops_per_frame=6 * flops_frame,
+                      infer_flops_per_frame=2 * flops_frame, mfu=0.4)
+        print(f"provision_{name},{p.threads_required:.1f},"
+              f"threads_needed demand={p.frames_demand_per_s:.0f}fps "
+              f"balanced={p.balanced}")
+
+
+if __name__ == "__main__":
+    main()

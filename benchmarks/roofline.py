@@ -1,0 +1,63 @@
+"""Roofline table: per (arch x shape) terms from the dry-run JSONL, plus
+MODEL_FLOPS = 6·N·D (or 6·N_active·D) and the useful-compute ratio."""
+
+import json
+import os
+
+from repro.configs import SHAPES, active_param_count, get_config, param_count
+from repro.hw import TPU_V5E
+
+
+def model_flops(cfg, shape):
+    n = active_param_count(cfg) if cfg.family == "moe" else param_count(cfg)
+    if shape.kind == "train":
+        d = shape.global_batch * shape.seq_len
+        return 6.0 * n * d
+    if shape.kind == "prefill":
+        d = shape.global_batch * shape.seq_len
+        return 2.0 * n * d
+    return 2.0 * n * shape.global_batch          # decode: one token per seq
+
+
+def rows(path):
+    for line in open(path):
+        r = json.loads(line)
+        cfg = get_config(r["arch"])
+        shape = SHAPES[r["shape"]]
+        t = r["terms"]
+        total = t["compute_s"] + t["memory_s"] + t["collective_s"]
+        bound = max(t["compute_s"], t["memory_s"], t["collective_s"])
+        mf = model_flops(cfg, shape)
+        hlo_total = r["flops_per_chip"] * r["n_chips"]
+        ratio = mf / hlo_total if hlo_total else 0.0
+        # roofline fraction: useful model FLOPs per second vs peak, with the
+        # step time lower-bounded by the dominant term (perfect overlap)
+        step_s = bound
+        mfu = mf / (r["n_chips"] * TPU_V5E.peak_bf16_flops * step_s) if step_s else 0.0
+        yield {
+            "arch": r["arch"], "shape": r["shape"], "mesh": r["mesh"],
+            "compute_s": t["compute_s"], "memory_s": t["memory_s"],
+            "collective_s": t["collective_s"], "dominant": t["dominant"],
+            "model_flops": mf, "hlo_flops": hlo_total, "useful_ratio": ratio,
+            "roofline_frac": mfu, "mem_gb": r["memory"]["total_bytes"] / 1e9,
+        }
+
+
+def main():
+    path = os.path.join(os.path.dirname(__file__), "..", "results",
+                        "dryrun.jsonl")
+    print("name,value,derived")
+    if not os.path.exists(path):
+        print("roofline_table,0,missing results/dryrun.jsonl — run "
+              "`python -m repro.launch.dryrun --all --out results/dryrun.jsonl`")
+        return
+    for r in rows(path):
+        print(f"roofline_{r['arch']}_{r['shape']},{r['roofline_frac']:.4f},"
+              f"dominant={r['dominant']} compute={r['compute_s']*1e3:.1f}ms "
+              f"memory={r['memory_s']*1e3:.1f}ms "
+              f"collective={r['collective_s']*1e3:.1f}ms "
+              f"useful_ratio={r['useful_ratio']:.3f} mem={r['mem_gb']:.1f}GB")
+
+
+if __name__ == "__main__":
+    main()

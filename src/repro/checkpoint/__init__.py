@@ -1,0 +1,1 @@
+from repro.checkpoint.ckpt import CheckpointManager, save_pytree, restore_pytree  # noqa: F401

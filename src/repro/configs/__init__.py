@@ -1,0 +1,3 @@
+from repro.configs.base import ModelConfig, pad_to, param_count, active_param_count  # noqa: F401
+from repro.configs.registry import ARCHS, get_config, list_archs  # noqa: F401
+from repro.configs.shapes import SHAPES, shape_cells, InputShape  # noqa: F401

@@ -1,0 +1,4 @@
+# The paper's primary contribution: the SEED-style distributed RL training
+# system (actor/learner/central inference), plus its analysis machinery —
+# the sequential-idealization bottleneck breakdown and the CPU/GPU-ratio
+# provisioning metric.

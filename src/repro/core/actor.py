@@ -1,0 +1,72 @@
+"""Actor: environment-interaction loop (the paper's bottleneck resource).
+
+Each actor owns one (or several, SEED-style multi-env) host environment
+instances, queries the central inference server for actions, and emits
+fixed-length unrolls to the trajectory sink (replay buffer or on-policy
+queue). Actors are plain threads: in the paper's terms, each consumes one
+CPU hardware thread while stepping.
+"""
+
+import threading
+import time
+from typing import Callable, Optional
+
+import numpy as np
+
+
+class Actor:
+    def __init__(self, actor_id: int, env, server, sink: Callable,
+                 unroll: int, num_envs: int = 1):
+        self.actor_id = actor_id
+        self.envs = [env() for _ in range(num_envs)] if callable(env) else [env]
+        self.server = server
+        self.sink = sink                     # sink(traj_dict)
+        self.unroll = unroll
+        self._stop = threading.Event()
+        self._thread: Optional[threading.Thread] = None
+        self.steps = 0
+        self.episodes = 0
+        self.episode_return = 0.0
+        self.returns = []
+
+    def start(self):
+        self._thread = threading.Thread(target=self._loop, daemon=True)
+        self._thread.start()
+
+    def stop(self):
+        self._stop.set()
+
+    def join(self, timeout=5.0):
+        if self._thread:
+            self._thread.join(timeout=timeout)
+
+    def _loop(self):
+        env = self.envs[0]
+        obs = env.reset()
+        traj = {"obs": [], "actions": [], "rewards": [], "dones": []}
+        while not self._stop.is_set():
+            reply = self.server.submit(self.actor_id, obs)
+            try:
+                action = reply.get(timeout=5.0)
+            except Exception:
+                continue
+            nobs, reward, done = env.step(int(action))
+            traj["obs"].append(obs)
+            traj["actions"].append(int(action))
+            traj["rewards"].append(reward)
+            traj["dones"].append(bool(done))
+            self.steps += 1
+            self.episode_return += reward
+            if done:
+                self.episodes += 1
+                self.returns.append(self.episode_return)
+                self.episode_return = 0.0
+            obs = nobs
+            if len(traj["actions"]) >= self.unroll:
+                self.sink({
+                    "obs": np.asarray(traj["obs"]),
+                    "actions": np.asarray(traj["actions"], np.int32),
+                    "rewards": np.asarray(traj["rewards"], np.float32),
+                    "dones": np.asarray(traj["dones"], np.float32),
+                })
+                traj = {"obs": [], "actions": [], "rewards": [], "dones": []}

@@ -1,0 +1,101 @@
+"""Central inference server — SEED RL's core mechanism.
+
+Actors do NOT run the policy network locally (IMPALA-style); they send
+observations to this server, which batches them and runs one jitted
+forward step on the accelerator, returning actions. Two SEED details are
+first-class here:
+
+  * **batching deadline** (straggler mitigation): the server closes a batch
+    when it is full OR when `deadline_ms` elapses, so one slow actor cannot
+    stall the pipeline — the learner's analogue of the paper's observation
+    that slow environment interaction starves the accelerator;
+  * **recurrent state residency**: per-actor core state (LSTM / KV / SSM)
+    stays on the server, so actors exchange only (obs -> action).
+
+In-process queues stand in for the gRPC transport of a real deployment;
+the interface below is the only seam a networked transport would replace.
+"""
+
+import queue
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, Optional
+
+import numpy as np
+
+
+@dataclass
+class InferenceRequest:
+    actor_id: int
+    obs: np.ndarray
+    reply: "queue.Queue"
+    t_enqueue: float = field(default_factory=time.perf_counter)
+
+
+class InferenceServer:
+    """policy_step: (stacked_obs (N, ...), actor_ids (N,)) -> actions (N,).
+
+    The callable owns all device state (params, per-actor recurrent state).
+    """
+
+    def __init__(self, policy_step: Callable, max_batch: int,
+                 deadline_ms: float = 10.0):
+        self.policy_step = policy_step
+        self.max_batch = max_batch
+        self.deadline_ms = deadline_ms
+        self.requests: "queue.Queue[InferenceRequest]" = queue.Queue()
+        self._stop = threading.Event()
+        self._thread: Optional[threading.Thread] = None
+        self.stats = {"batches": 0, "requests": 0, "batch_occupancy": 0.0,
+                      "queue_wait_s": 0.0, "compute_s": 0.0}
+
+    def start(self):
+        self._thread = threading.Thread(target=self._loop, daemon=True)
+        self._thread.start()
+
+    def stop(self):
+        self._stop.set()
+        if self._thread:
+            self._thread.join(timeout=5.0)
+
+    def submit(self, actor_id: int, obs: np.ndarray) -> "queue.Queue":
+        r = InferenceRequest(actor_id, obs, queue.Queue(maxsize=1))
+        self.requests.put(r)
+        return r.reply
+
+    def _loop(self):
+        while not self._stop.is_set():
+            batch = self._collect()
+            if not batch:
+                continue
+            t0 = time.perf_counter()
+            obs = np.stack([r.obs for r in batch])
+            ids = np.array([r.actor_id for r in batch], np.int32)
+            actions = np.asarray(self.policy_step(obs, ids))
+            dt = time.perf_counter() - t0
+            for r, a in zip(batch, actions):
+                r.reply.put(a)
+                self.stats["queue_wait_s"] += t0 - r.t_enqueue
+            self.stats["compute_s"] += dt
+            self.stats["batches"] += 1
+            self.stats["requests"] += len(batch)
+            self.stats["batch_occupancy"] += len(batch) / self.max_batch
+
+    def _collect(self):
+        """Fill a batch until max_batch or the deadline — straggler cut."""
+        batch = []
+        try:
+            batch.append(self.requests.get(timeout=0.05))
+        except queue.Empty:
+            return batch
+        deadline = time.perf_counter() + self.deadline_ms / 1e3
+        while len(batch) < self.max_batch:
+            remaining = deadline - time.perf_counter()
+            if remaining <= 0:
+                break
+            try:
+                batch.append(self.requests.get(timeout=remaining))
+            except queue.Empty:
+                break
+        return batch

@@ -1,0 +1,78 @@
+"""Learner loop: sample -> train_step -> publish params.
+
+The learner is the accelerator-resident half of SEED: it consumes
+trajectory batches (prioritized replay for R2D2, on-policy queue for
+V-trace), runs the jitted/pjitted train_step, and publishes fresh params
+to the inference server under a version counter. Periodic checkpointing
+and restart-on-failure live here (see repro.checkpoint)."""
+
+import queue
+import threading
+import time
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import numpy as np
+
+
+class Learner:
+    def __init__(self, train_step: Callable, state, batch_fn: Callable,
+                 publish: Optional[Callable] = None,
+                 checkpoint_manager=None, checkpoint_every: int = 0,
+                 priority_update: Optional[Callable] = None):
+        """batch_fn() -> (batch, info) blocking; publish(params, step)."""
+        self.train_step = train_step
+        self.state = state
+        self.batch_fn = batch_fn
+        self.publish = publish
+        self.ckpt = checkpoint_manager
+        self.checkpoint_every = checkpoint_every
+        self.priority_update = priority_update
+        self._stop = threading.Event()
+        self._thread: Optional[threading.Thread] = None
+        self.steps = 0
+        self.metrics: Dict[str, float] = {}
+        self.train_time_s = 0.0
+        self.wait_time_s = 0.0
+
+    def start(self):
+        self._thread = threading.Thread(target=self._loop, daemon=True)
+        self._thread.start()
+
+    def stop(self):
+        self._stop.set()
+
+    def join(self, timeout=30.0):
+        if self._thread:
+            self._thread.join(timeout=timeout)
+
+    def run_steps(self, n: int):
+        for _ in range(n):
+            self._one_step()
+
+    def _one_step(self):
+        t0 = time.perf_counter()
+        batch, info = self.batch_fn()
+        t1 = time.perf_counter()
+        self.state, metrics = self.train_step(self.state, batch)
+        jax.block_until_ready(self.state["step"])
+        t2 = time.perf_counter()
+        self.wait_time_s += t1 - t0
+        self.train_time_s += t2 - t1
+        self.steps += 1
+        self.metrics = {k: float(np.asarray(v).mean()) for k, v in metrics.items()
+                        if np.asarray(v).ndim == 0}
+        if self.priority_update and "priorities" in metrics:
+            self.priority_update(info, np.asarray(metrics["priorities"]))
+        if self.publish:
+            self.publish(self.state["params"], self.steps)
+        if self.ckpt and self.checkpoint_every and \
+                self.steps % self.checkpoint_every == 0:
+            self.ckpt.save(self.state, self.steps)
+
+    def _loop(self):
+        while not self._stop.is_set():
+            try:
+                self._one_step()
+            except queue.Empty:
+                continue

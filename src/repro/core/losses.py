@@ -1,0 +1,176 @@
+"""Train-step builders: V-trace actor-critic (LM policies) and R2D2
+(recurrent Q-learning, the paper's workload).
+
+The train state is a plain pytree dict: {params, opt_state, step[, target]}.
+`make_*_train_step` returns a pure function suitable for jax.jit / pjit —
+this is the function the multi-pod dry-run lowers.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.r2d2 import r2d2_loss
+from repro.core.vtrace import vtrace, vtrace_losses
+from repro.optim.adamw import apply_updates
+
+
+def init_train_state(bundle, optimizer, rng, with_target=False):
+    params = bundle.init(rng)
+    st = {"params": params, "opt_state": optimizer.init(params),
+          "step": jnp.zeros((), jnp.int32)}
+    if with_target:
+        st["target"] = jax.tree.map(jnp.copy, params)  # distinct buffers (donation)
+    return st
+
+
+def _token_logprobs_entropy(logits, actions):
+    """logits (B,T,V) fp32, actions (B,T). Returns (logprob, entropy) (B,T).
+
+    The action logit is extracted with a one-hot contraction, NOT
+    take_along_axis: a gather over the vocab-sharded logits would force
+    GSPMD to all-gather the full (B,T,V) tensor; the one-hot form stays
+    sharded and reduces to a tiny (B,T) all-reduce."""
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    onehot = (actions[..., None] == jnp.arange(logits.shape[-1])[None, None, :])
+    a_logit = jnp.sum(jnp.where(onehot, logits, 0.0), axis=-1)
+    logprob = a_logit - lse
+    # entropy = lse - E_p[logit]
+    p = jax.nn.softmax(logits, axis=-1)
+    entropy = lse - jnp.sum(p * logits, axis=-1)
+    return logprob, entropy
+
+
+def make_vtrace_loss(bundle, *, value_coef=0.5, entropy_coef=0.01,
+                     rho_bar=1.0, c_bar=1.0, mtp_weight=0.1):
+    """LM-policy V-trace loss. Batch fields, all (B, S) unless noted:
+    tokens, rewards, discounts, behavior_logprobs, mask[, frontend (B,F,D)].
+    Token at position t>=1 is the *action* taken given the prefix <t.
+    """
+    cfg = bundle.cfg
+
+    def loss_fn(params, batch):
+        out = bundle.forward(params, batch)
+        f = out.logits.shape[1] - batch["tokens"].shape[1]  # frontend offset
+        logits = out.logits[:, f:]
+        value = out.value[:, f:]
+
+        actions = batch["tokens"][:, 1:]
+        logits_t = logits[:, :-1]
+        values_t = value[:, :-1]
+        bootstrap = value[:, -1]
+        logprob, entropy = _token_logprobs_entropy(logits_t, actions)
+        mask = batch["mask"][:, 1:].astype(jnp.float32)
+
+        vtr = vtrace(logprob, batch["behavior_logprobs"][:, 1:],
+                     batch["rewards"][:, 1:], batch["discounts"][:, 1:],
+                     values_t, bootstrap, rho_bar=rho_bar, c_bar=c_bar)
+        pg, vl, en = vtrace_losses(logprob, entropy, vtr, values_t, mask,
+                                   value_coef=value_coef,
+                                   entropy_coef=entropy_coef)
+        loss = pg + vl + en
+        metrics = {"pg_loss": pg, "value_loss": vl, "entropy_loss": en}
+        if isinstance(out.aux_loss, jax.Array) and out.aux_loss.size == 1:
+            loss = loss + cfg.router_aux_coef * out.aux_loss
+            metrics["router_aux"] = out.aux_loss
+        if out.mtp_logits is not None:
+            # auxiliary MTP CE: position t predicts token t+2
+            mtp = out.mtp_logits[:, f:][:, :-2]
+            tgt = batch["tokens"][:, 2:]
+            lp, _ = _token_logprobs_entropy(mtp, tgt)
+            m2 = batch["mask"][:, 2:].astype(jnp.float32)
+            mtp_ce = -(lp * m2).sum() / jnp.maximum(m2.sum(), 1.0)
+            loss = loss + mtp_weight * mtp_ce
+            metrics["mtp_ce"] = mtp_ce
+        metrics["loss"] = loss
+        return loss, metrics
+
+    return loss_fn
+
+
+def make_r2d2_loss(bundle, acfg):
+    """R2D2 loss over replayed sequences. Batch: obs (B, burn+T, ...),
+    actions/rewards/dones (B, burn+T), core: initial LSTM state."""
+    from repro.models.atari import atari_forward
+
+    def loss_fn(params, target_params, batch):
+        burn = acfg.burn_in
+        out, _ = atari_forward(acfg, params, batch)
+        q = out.logits[:, burn:]
+        tout, _ = atari_forward(acfg, target_params, batch)
+        q_t = jax.lax.stop_gradient(tout.logits[:, burn:])
+        res = r2d2_loss(None, q, q_t,
+                        batch["actions"][:, burn:], batch["rewards"][:, burn:],
+                        batch["dones"][:, burn:], n_step=acfg.n_step,
+                        gamma=acfg.gamma,
+                        priority_exponent=acfg.priority_exponent)
+        loss = res.loss
+        if "is_weights" in batch:  # prioritized-replay importance correction
+            w = batch["is_weights"][:, None]
+            loss = 0.5 * jnp.mean(w * jnp.square(res.td_error))
+        return loss, {"loss": loss, "priorities": res.priorities}
+
+    return loss_fn
+
+
+def make_train_step(bundle, optimizer, *, algo="vtrace", acfg=None, **kw):
+    """Returns train_step(state, batch) -> (state, metrics)."""
+    if algo == "vtrace":
+        loss_fn = make_vtrace_loss(bundle, **kw)
+        accum = getattr(bundle.cfg, "grad_accum", 1)
+
+        def train_step(state, batch):
+            grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+            if accum <= 1:
+                (_, metrics), grads = grad_fn(state["params"], batch)
+            else:
+                # gradient accumulation: scan micro-batches, accumulate in
+                # fp32 (sharded like the params, so the extra state is tiny
+                # per chip). Cuts activation memory by the accum factor.
+                b = batch["tokens"].shape[0]
+                mbs = b // accum
+
+                def micro(i):
+                    return jax.tree.map(
+                        lambda x: jax.lax.dynamic_slice_in_dim(x, i * mbs, mbs, 0),
+                        batch)
+
+                def body(gsum, i):
+                    (_, metrics), g = grad_fn(state["params"], micro(i))
+                    gsum = jax.tree.map(
+                        lambda a, gg: a + gg.astype(jnp.float32), gsum, g)
+                    return gsum, metrics
+
+                g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                                  state["params"])
+                gsum, ms = jax.lax.scan(body, g0, jnp.arange(accum))
+                grads = jax.tree.map(
+                    lambda g, p: (g / accum).astype(p.dtype), gsum,
+                    state["params"])
+                metrics = jax.tree.map(lambda m: m.mean(), ms)
+            updates, opt_state, om = optimizer.update(
+                grads, state["opt_state"], state["params"], state["step"])
+            params = apply_updates(state["params"], updates)
+            metrics.update(om)
+            return {"params": params, "opt_state": opt_state,
+                    "step": state["step"] + 1}, metrics
+
+        return train_step
+
+    assert algo == "r2d2" and acfg is not None
+    loss_fn = make_r2d2_loss(bundle, acfg)
+
+    def train_step(state, batch):
+        grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+        (_, metrics), grads = grad_fn(state["params"], state["target"], batch)
+        updates, opt_state, om = optimizer.update(
+            grads, state["opt_state"], state["params"], state["step"])
+        params = apply_updates(state["params"], updates)
+        step = state["step"] + 1
+        sync = (step % acfg.target_update_period) == 0
+        target = jax.tree.map(
+            lambda t, p: jnp.where(sync, p, t), state["target"], params)
+        metrics.update(om)
+        return {"params": params, "opt_state": opt_state, "step": step,
+                "target": target}, metrics
+
+    return train_step

@@ -1,0 +1,136 @@
+"""The paper's contribution #3: the CPU/GPU-ratio provisioning metric and
+the actor/learner system-throughput model behind Figs 3-4.
+
+Model (per actor): one env interaction costs `t_env` of CPU time and a
+`t_inf(n)` inference round-trip during which the actor's thread is idle
+(SEED central inference). With H hardware threads and n actors:
+
+    T(n) = n / (t_env * max(1, n / H) + t_inf(n)),   t_inf(n) = t0 + t1 * n
+
+  * n <= H: oversubscription hides inference latency -> near-linear,
+    degraded by the batch-linear term t1*n (the paper's sub-linear 5.8x
+    for 4 -> 40);
+  * n > H: CPU contention multiplies t_env -> throughput approaches the
+    ceiling H / t_env (the paper's saturation: only 2x more from 40->256).
+
+Fig 4 (accelerator derating): with compute scaled by f (SMs disabled),
+round time T(f) = t_overlap + t_serial / f — actors hide most accelerator
+time, so halving the accelerator costs only ~6%.
+
+The provisioning rule: balance actor supply against learner demand and
+express the required host threads per 'SM equivalent' of accelerator
+compute (paper: ratio >= 1 for current-generation SMs).
+"""
+
+from dataclasses import dataclass
+
+import numpy as np
+
+from repro.hw import ChipSpec, HostSpec, sm_equivalents
+
+
+@dataclass(frozen=True)
+class SystemModel:
+    """Two regimes:
+      * latency-limited: each actor cycles t_env + t_inf(batch), and the
+        inference batch grows with the number of concurrent actors up to
+        the server's batch cap (SEED batches inference requests);
+      * capacity-limited: H hardware threads can sustain at most H / t_env
+        env-steps/s regardless of actor count (actors beyond that only
+        hide inference latency, which is already hidden).
+    """
+    t_env: float          # CPU seconds per env step (per actor)
+    t_inf0: float         # inference round-trip base latency (s)
+    t_inf1: float         # inference latency growth per batched request (s)
+    hw_threads: int
+    batch_cap: int = 64   # SEED inference server max batch
+
+    def throughput(self, n_actors):
+        n = np.asarray(n_actors, np.float64)
+        t_inf = self.t_inf0 + self.t_inf1 * np.minimum(n, self.batch_cap)
+        latency_limited = n / (self.t_env + t_inf)
+        capacity = self.hw_threads / self.t_env
+        return np.minimum(latency_limited, capacity)
+
+    def speedup(self, n_actors, base_actors=4):
+        return self.throughput(n_actors) / self.throughput(base_actors)
+
+
+def fit_paper_actor_model(hw_threads=40, target_5p8=5.8, target_2p0=2.0):
+    """Solve (t_inf0, t_inf1)/t_env so the model reproduces the paper's
+    measured speedups exactly: 4->40 actors = 5.8x, 40->256 = 2.0x.
+
+    With T(n) = n/(1 + t0 + t1*min(n, cap)) below capacity H/t_env:
+      4->40:  10 (1 + t0 + 4 t1) / (1 + t0 + 40 t1) = 5.8
+      40->256: capacity-bound at 256 -> H (1 + t0 + 40 t1) / H = 2.0
+    => t0 + 40 t1 = 1, t0 + 4 t1 = 2*5.8/10 - 1.
+    """
+    a = target_2p0 - 1.0                     # t0 + 40 t1
+    b = 2.0 * target_5p8 / 10.0 - 1.0        # t0 + 4 t1
+    t1 = (a - b) / 36.0
+    t0 = b - 4.0 * t1
+    m = SystemModel(1.0, t0, t1, hw_threads)
+    s40 = float(m.speedup(40, 4))
+    s256 = float(m.throughput(256) / m.throughput(40))
+    err = np.sqrt((s40 / target_5p8 - 1) ** 2 + (s256 / target_2p0 - 1) ** 2)
+    return m, float(err)
+
+
+@dataclass(frozen=True)
+class DeratingModel:
+    """Fig 4: slowdown when accelerator compute is scaled by f (SM-disable)."""
+    overlap_s: float      # actor-side time the accelerator hides behind
+    accel_s: float        # accelerator-serial time at full compute
+
+    def slowdown(self, f):
+        f = np.asarray(f, np.float64)
+        t_full = self.overlap_s + self.accel_s
+        return (self.overlap_s + self.accel_s / f) / t_full
+
+
+def fit_paper_derating(slowdown_at_half=1.06):
+    """Calibrate so that 40/80 SMs costs 6% (paper's Fig 4)."""
+    # T(0.5) = o + 2a = s * (o + a)  ->  a = o (s - 1) / (2 - s)
+    o = 1.0
+    a = o * (slowdown_at_half - 1.0) / (2.0 - slowdown_at_half)
+    return DeratingModel(overlap_s=o, accel_s=a)
+
+
+def cpu_gpu_ratio(host: HostSpec, chip: ChipSpec, n_chips: int = 1):
+    """The paper's metric: host hardware threads per (V100-)SM-equivalent."""
+    return host.hw_threads / (sm_equivalents(chip) * n_chips)
+
+
+@dataclass(frozen=True)
+class Provisioning:
+    frames_demand_per_s: float    # env frames/s the learner+inference consume
+    threads_required: float       # host threads to supply that
+    sm_equivalents: float
+    ratio_required: float         # threads per SM-equivalent
+    ratio_available: float
+    balanced: bool
+
+
+def provision(chip: ChipSpec, host: HostSpec, n_chips: int, *,
+              train_flops_per_frame: float, infer_flops_per_frame: float,
+              mfu: float = 0.4, replay_ratio: float = 1.0):
+    """Balance actor supply vs accelerator demand for an RL workload.
+
+    train_flops_per_frame: learner FLOPs per environment frame consumed
+    (batch*unroll amortized); replay_ratio: times each frame is replayed.
+    """
+    accel_flops = chip.peak_bf16_flops * n_chips * mfu
+    flops_per_fresh_frame = (train_flops_per_frame * replay_ratio
+                             + infer_flops_per_frame)
+    demand = accel_flops / flops_per_fresh_frame          # frames/s at full util
+    threads = demand / host.env_steps_per_thread_s
+    sm_eq = sm_equivalents(chip) * n_chips
+    avail = host.hw_threads / sm_eq
+    return Provisioning(
+        frames_demand_per_s=demand,
+        threads_required=threads,
+        sm_equivalents=sm_eq,
+        ratio_required=threads / sm_eq,
+        ratio_available=avail,
+        balanced=avail >= threads / sm_eq,
+    )

@@ -1,0 +1,82 @@
+"""R2D2 loss (Kapturowski et al. 2019): recurrent replay distributed
+Q-learning — burn-in, n-step double-Q targets, value-function rescaling,
+and the mixed max/mean priority used by the prioritized replay buffer.
+"""
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+EPS = 1e-3
+
+
+def rescale(x):
+    """h(x) = sign(x) (sqrt(|x|+1) - 1) + eps x."""
+    return jnp.sign(x) * (jnp.sqrt(jnp.abs(x) + 1.0) - 1.0) + EPS * x
+
+
+def inv_rescale(x):
+    """h^{-1}(x), closed form."""
+    n = jnp.sqrt(1.0 + 4.0 * EPS * (jnp.abs(x) + 1.0 + EPS)) - 1.0
+    return jnp.sign(x) * (jnp.square(n / (2.0 * EPS)) - 1.0)
+
+
+class R2D2Out(NamedTuple):
+    loss: jax.Array         # scalar
+    priorities: jax.Array   # (B,)
+    td_error: jax.Array     # (B, T)
+
+
+def n_step_targets(q_target, q_online, actions, rewards, dones, *, n_step,
+                   gamma):
+    """Double-Q n-step targets with value rescaling.
+
+    q_target/q_online (B, T, A): target/online nets over the training
+    (post-burn-in) segment; actions/rewards/dones (B, T).
+    Returns targets (B, T-n) aligned with positions 0..T-n-1.
+    """
+    b, t, _ = q_online.shape
+    best = jnp.argmax(q_online, axis=-1)                       # (B,T) double-Q
+    q_next = jnp.take_along_axis(q_target, best[..., None], -1)[..., 0]
+    q_next = inv_rescale(q_next)
+
+    # accumulate n-step discounted rewards, cutting at dones
+    def step_back(carry, xs):
+        ret, disc, valid = carry
+        r, d = xs
+        ret = r + gamma * (1.0 - d) * ret
+        disc = gamma * (1.0 - d) * disc
+        return (ret, disc, valid), None
+
+    # vectorized: returns_k = sum_{i<n} gamma^i r_{t+i} prod(1-d) + gamma^n Q(s_{t+n})
+    ret = jnp.zeros((b, t))
+    disc = jnp.ones((b, t))
+    alive = jnp.ones((b, t))
+    for i in range(n_step):
+        r_i = jnp.roll(rewards, -i, axis=1)
+        d_i = jnp.roll(dones, -i, axis=1)
+        ret = ret + disc * alive * r_i
+        alive = alive * (1.0 - d_i)
+        disc = disc * gamma
+    q_boot = jnp.roll(q_next, -n_step, axis=1)
+    targets = ret + disc * alive * q_boot
+    return rescale(targets[:, : t - n_step])
+
+
+def r2d2_loss(q_online_burn, q_online, q_target, actions, rewards, dones, *,
+              n_step=5, gamma=0.997, priority_exponent=0.9):
+    """q_online (B,T,A) over training segment (burn-in already consumed by
+    the caller when unrolling the net); actions/rewards/dones (B,T)."""
+    del q_online_burn
+    t = q_online.shape[1]
+    targets = n_step_targets(q_target, q_online, actions, rewards, dones,
+                             n_step=n_step, gamma=gamma)
+    q_a = jnp.take_along_axis(q_online, actions[..., None], -1)[..., 0]
+    td = targets - q_a[:, : t - n_step]
+    loss = 0.5 * jnp.mean(jnp.square(td))
+    abs_td = jnp.abs(td)
+    pri = (priority_exponent * abs_td.max(axis=1)
+           + (1.0 - priority_exponent) * abs_td.mean(axis=1))
+    return R2D2Out(loss=loss, priorities=jax.lax.stop_gradient(pri),
+                   td_error=jax.lax.stop_gradient(td))

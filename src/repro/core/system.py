@@ -1,0 +1,89 @@
+"""End-to-end SEED system wiring: N actors + central inference + learner.
+
+This is the measured system behind the Fig-3 reproduction: construct with
+`num_actors` and run; `throughput()` reports env-frames/s, inference batch
+occupancy, and learner steps/s — the quantities the paper sweeps.
+"""
+
+import queue
+import threading
+import time
+from typing import Callable, Optional
+
+import numpy as np
+
+from repro.core.actor import Actor
+from repro.core.inference import InferenceServer
+from repro.core.learner import Learner
+from repro.core.replay import PrioritizedReplay
+
+
+class SeedSystem:
+    def __init__(self, *, env_factory: Callable, policy_step: Callable,
+                 num_actors: int, unroll: int,
+                 train_step: Optional[Callable] = None, state=None,
+                 learner_batch: int = 8, replay_capacity: int = 512,
+                 min_replay: int = 16, deadline_ms: float = 5.0,
+                 inference_batch: Optional[int] = None,
+                 checkpoint_manager=None, checkpoint_every: int = 0):
+        self.replay = PrioritizedReplay(replay_capacity)
+        self.min_replay = min_replay
+        self.learner_batch = learner_batch
+        self.server = InferenceServer(
+            policy_step, max_batch=inference_batch or max(num_actors, 1),
+            deadline_ms=deadline_ms)
+        self.actors = [Actor(i, env_factory, self.server,
+                             self._sink, unroll) for i in range(num_actors)]
+        self.learner = None
+        if train_step is not None:
+            self.learner = Learner(
+                train_step, state, self._learner_batch,
+                priority_update=lambda idx, pri: self.replay.update_priorities(idx, pri),
+                checkpoint_manager=checkpoint_manager,
+                checkpoint_every=checkpoint_every)
+
+    def _sink(self, traj):
+        self.replay.add(traj, priority=float(np.abs(traj["rewards"]).mean()) + 1.0)
+
+    def _learner_batch(self):
+        while len(self.replay) < max(self.min_replay, self.learner_batch):
+            time.sleep(0.005)
+        batch, idx, w = self.replay.sample(self.learner_batch)
+        batch["is_weights"] = w
+        return batch, idx
+
+    def run(self, seconds: float, with_learner: bool = True):
+        self.server.start()
+        for a in self.actors:
+            a.start()
+        if self.learner and with_learner:
+            self.learner.start()
+        t0 = time.perf_counter()
+        time.sleep(seconds)
+        elapsed = time.perf_counter() - t0
+        for a in self.actors:
+            a.stop()
+        self.server.stop()
+        if self.learner and with_learner:
+            self.learner.stop()
+            self.learner.join()
+        for a in self.actors:
+            a.join()
+        return self.throughput(elapsed)
+
+    def throughput(self, elapsed: float):
+        frames = sum(a.steps for a in self.actors)
+        s = self.server.stats
+        return {
+            "elapsed_s": elapsed,
+            "env_frames": frames,
+            "env_frames_per_s": frames / elapsed,
+            "inference_batches": s["batches"],
+            "mean_batch_occupancy": s["batch_occupancy"] / max(s["batches"], 1),
+            "mean_queue_wait_ms": 1e3 * s["queue_wait_s"] / max(s["requests"], 1),
+            "inference_compute_s": s["compute_s"],
+            "learner_steps": self.learner.steps if self.learner else 0,
+            "learner_steps_per_s": (self.learner.steps / elapsed) if self.learner else 0.0,
+            "episode_return_mean": float(np.mean(
+                [r for a in self.actors for r in a.returns[-20:]] or [0.0])),
+        }

@@ -1,0 +1,1 @@
+from repro.data.pipeline import prefetch, shard_batch  # noqa: F401

@@ -1,0 +1,53 @@
+"""Host-side data pipeline: background prefetch + device sharding.
+
+The learner must never wait on host batch assembly (the paper's point:
+host-side work competes with actors for CPU threads — so it is both
+minimized and overlapped). `prefetch` runs the producer in a thread with a
+bounded queue; `shard_batch` device_puts a host batch with the mesh
+sharding so pjit consumes it without a host-sync gather."""
+
+import queue
+import threading
+from typing import Callable, Iterator
+
+import jax
+from jax.sharding import NamedSharding
+
+from repro.sharding.rules import logical_to_spec
+
+
+def prefetch(it: Iterator, size: int = 2) -> Iterator:
+    q: "queue.Queue" = queue.Queue(maxsize=size)
+    _done = object()
+
+    def producer():
+        try:
+            for x in it:
+                q.put(x)
+        finally:
+            q.put(_done)
+
+    threading.Thread(target=producer, daemon=True).start()
+    while True:
+        x = q.get()
+        if x is _done:
+            return
+        yield x
+
+
+def shard_batch(batch, mesh, rules, seq_axis=None):
+    """Shard a host batch dict: dim0 = batch -> 'act_batch' mesh axes."""
+    def put(x):
+        axes = ["act_batch"] + [None] * (x.ndim - 1)
+        if seq_axis is not None and x.ndim > 1:
+            axes[1] = seq_axis
+        spec = logical_to_spec(axes, rules)
+        return jax.device_put(x, NamedSharding(mesh, spec))
+    return jax.tree.map(put, batch)
+
+
+def batch_iterator(gen_fn: Callable, n: int = None):
+    i = 0
+    while n is None or i < n:
+        yield gen_fn(i)
+        i += 1

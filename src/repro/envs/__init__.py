@@ -1,0 +1,4 @@
+from repro.envs.catch import CatchEnv  # noqa: F401
+from repro.envs.cartpole import CartPoleEnv  # noqa: F401
+from repro.envs.alesim import ALESimEnv  # noqa: F401
+from repro.envs.tokenworld import TokenWorld  # noqa: F401

@@ -1,0 +1,47 @@
+"""CartPole (classic control), pure JAX, auto-resetting."""
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+GRAVITY, MASSCART, MASSPOLE, LENGTH = 9.8, 1.0, 0.1, 0.5
+FORCE_MAG, TAU = 10.0, 0.02
+THETA_LIMIT, X_LIMIT = 12 * 2 * jnp.pi / 360, 2.4
+MAX_STEPS = 200
+
+
+class CartPoleState(NamedTuple):
+    s: jax.Array       # (4,) x, x_dot, theta, theta_dot
+    t: jax.Array
+    key: jax.Array
+
+
+class CartPoleEnv:
+    num_actions = 2
+    obs_shape = (4,)
+
+    def reset(self, key):
+        key, k = jax.random.split(key)
+        st = CartPoleState(s=jax.random.uniform(k, (4,), minval=-0.05, maxval=0.05),
+                           t=jnp.zeros((), jnp.int32), key=key)
+        return st, st.s
+
+    def step(self, st, action):
+        x, x_dot, th, th_dot = st.s
+        force = jnp.where(action == 1, FORCE_MAG, -FORCE_MAG)
+        total_m = MASSCART + MASSPOLE
+        pm_l = MASSPOLE * LENGTH
+        temp = (force + pm_l * th_dot ** 2 * jnp.sin(th)) / total_m
+        th_acc = (GRAVITY * jnp.sin(th) - jnp.cos(th) * temp) / \
+            (LENGTH * (4.0 / 3.0 - MASSPOLE * jnp.cos(th) ** 2 / total_m))
+        x_acc = temp - pm_l * th_acc * jnp.cos(th) / total_m
+        s = jnp.array([x + TAU * x_dot, x_dot + TAU * x_acc,
+                       th + TAU * th_dot, th_dot + TAU * th_acc])
+        t = st.t + 1
+        done = (jnp.abs(s[0]) > X_LIMIT) | (jnp.abs(s[2]) > THETA_LIMIT) | (t >= MAX_STEPS)
+        key, k = jax.random.split(st.key)
+        s_reset = jax.random.uniform(k, (4,), minval=-0.05, maxval=0.05)
+        new = CartPoleState(s=jnp.where(done, s_reset, s),
+                            t=jnp.where(done, 0, t), key=key)
+        return new, new.s, jnp.where(done, 0.0, 1.0), done

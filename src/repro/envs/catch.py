@@ -1,0 +1,53 @@
+"""Catch: the classic tabula-rasa RL testbed (rows x cols grid, falling
+ball, 3-action paddle). Pure JAX — vmappable, used by quickstart/e2e tests
+to show learning on CPU in seconds."""
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class CatchState(NamedTuple):
+    ball_r: jax.Array
+    ball_c: jax.Array
+    paddle: jax.Array
+    key: jax.Array
+
+
+class CatchEnv:
+    num_actions = 3
+
+    def __init__(self, rows=10, cols=5):
+        self.rows, self.cols = rows, cols
+        self.obs_shape = (rows * cols,)
+
+    def reset(self, key):
+        key, k1, k2 = jax.random.split(key, 3)
+        st = CatchState(
+            ball_r=jnp.zeros((), jnp.int32),
+            ball_c=jax.random.randint(k1, (), 0, self.cols),
+            paddle=jax.random.randint(k2, (), 0, self.cols),
+            key=key)
+        return st, self._obs(st)
+
+    def _obs(self, st):
+        grid = jnp.zeros((self.rows, self.cols))
+        grid = grid.at[st.ball_r, st.ball_c].set(1.0)
+        grid = grid.at[self.rows - 1, st.paddle].set(1.0)
+        return grid.reshape(-1)
+
+    def step(self, st, action):
+        paddle = jnp.clip(st.paddle + action - 1, 0, self.cols - 1)
+        ball_r = st.ball_r + 1
+        done = ball_r >= self.rows - 1
+        reward = jnp.where(done,
+                           jnp.where(st.ball_c == paddle, 1.0, -1.0), 0.0)
+        key, k1, k2 = jax.random.split(st.key, 3)
+        # auto-reset on done
+        new = CatchState(
+            ball_r=jnp.where(done, 0, ball_r),
+            ball_c=jnp.where(done, jax.random.randint(k1, (), 0, self.cols), st.ball_c),
+            paddle=jnp.where(done, jax.random.randint(k2, (), 0, self.cols), paddle),
+            key=key)
+        return new, self._obs(new), reward, done

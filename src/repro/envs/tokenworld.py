@@ -1,0 +1,66 @@
+"""TokenWorld: a token-level environment for LM policies.
+
+The agent emits tokens; reward +1 when the emitted token continues a hidden
+periodic pattern, 0 otherwise. Dense rewards + tiny state make it a fast
+testbed for the V-trace LM-policy path (an RLHF-shaped workload in
+miniature). Pure JAX and vmappable; also provides a synthetic trajectory
+batch generator matching the learner's train_step input spec.
+"""
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class TokenWorldState(NamedTuple):
+    pos: jax.Array
+    pattern: jax.Array    # (period,)
+    key: jax.Array
+
+
+class TokenWorld:
+    def __init__(self, vocab_size=64, period=4, episode_len=32):
+        self.vocab_size = vocab_size
+        self.period = period
+        self.episode_len = episode_len
+        self.num_actions = vocab_size
+
+    def reset(self, key):
+        key, k = jax.random.split(key)
+        st = TokenWorldState(
+            pos=jnp.zeros((), jnp.int32),
+            pattern=jax.random.randint(k, (self.period,), 0, self.vocab_size),
+            key=key)
+        return st, st.pattern[0]  # first observation: the pattern start token
+
+    def step(self, st, action):
+        target = st.pattern[st.pos % self.period]
+        reward = (action == target).astype(jnp.float32)
+        pos = st.pos + 1
+        done = pos >= self.episode_len
+        key, k = jax.random.split(st.key)
+        new_pattern = jax.random.randint(k, (self.period,), 0, self.vocab_size)
+        new = TokenWorldState(
+            pos=jnp.where(done, 0, pos),
+            pattern=jnp.where(done, new_pattern, st.pattern),
+            key=key)
+        obs = new.pattern[new.pos % self.period]  # next target is observable
+        return new, obs, reward, done
+
+
+def synthetic_vtrace_batch(key, batch, seq, vocab, frontend=None):
+    """A trajectory batch with the exact field layout the learner consumes."""
+    ks = jax.random.split(key, 4)
+    out = {
+        "tokens": jax.random.randint(ks[0], (batch, seq), 0, vocab),
+        "rewards": jax.random.normal(ks[1], (batch, seq)) * 0.1,
+        "discounts": jnp.full((batch, seq), 0.99),
+        "behavior_logprobs": -jnp.abs(jax.random.normal(ks[2], (batch, seq))),
+        "mask": jnp.ones((batch, seq)),
+    }
+    if frontend is not None:
+        f_tokens, f_dim = frontend
+        out["frontend"] = jax.random.normal(ks[3], (batch, f_tokens, f_dim),
+                                            jnp.bfloat16)
+    return out

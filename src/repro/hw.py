@@ -1,0 +1,72 @@
+"""Hardware model constants for the roofline / provisioning analysis.
+
+TPU v5e is the deployment target (this container is CPU-only; all at-scale
+numbers are derived from compiled HLO + these constants). The paper's V100 /
+DGX-1 constants are kept alongside so the paper-calibration benchmarks
+(fig2/fig3/fig4) can be expressed in the paper's own units.
+"""
+
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class ChipSpec:
+    name: str
+    peak_bf16_flops: float   # FLOP/s per chip
+    hbm_bandwidth: float     # bytes/s per chip
+    ici_bandwidth: float     # bytes/s per link
+    ici_links: int           # links per chip participating in a collective
+    hbm_bytes: float         # HBM capacity per chip
+    idle_power_w: float      # power at ~0 utilization
+    peak_power_w: float      # power at full utilization
+
+
+# Deployment target (per the assignment): TPU v5e.
+TPU_V5E = ChipSpec(
+    name="tpu-v5e",
+    peak_bf16_flops=197e12,
+    hbm_bandwidth=819e9,
+    ici_bandwidth=50e9,
+    ici_links=4,
+    hbm_bytes=16e9,
+    idle_power_w=60.0,
+    peak_power_w=220.0,
+)
+
+# The paper's accelerator (for fig2/fig3/fig4 calibration in paper units).
+V100 = ChipSpec(
+    name="v100-sxm2",
+    peak_bf16_flops=125e12,      # tensor-core fp16
+    hbm_bandwidth=900e9,
+    ici_bandwidth=25e9,          # NVLink per-direction per-link
+    ici_links=6,
+    hbm_bytes=16e9,
+    idle_power_w=70.0,           # the paper reports ~70 W at low utilization
+    peak_power_w=300.0,
+)
+
+
+@dataclass(frozen=True)
+class HostSpec:
+    """The CPU side of the system — the paper's primary bottleneck."""
+    name: str
+    hw_threads: int
+    env_steps_per_thread_s: float  # sustainable env interactions /s /thread
+
+
+# The paper's host: 20-core Xeon E5-2698 v4, 40 hardware threads.
+DGX1_HOST = HostSpec(name="xeon-e5-2698v4", hw_threads=40,
+                     env_steps_per_thread_s=1500.0)
+
+# A v5e host slice: 112 vCPU per 8-chip host is typical for v5e-litepod.
+V5E_HOST = HostSpec(name="v5e-host", hw_threads=112,
+                    env_steps_per_thread_s=1500.0)
+
+
+def sm_equivalents(chip: ChipSpec, reference_sm_flops: float = 125e12 / 80) -> float:
+    """Express a chip's compute as 'V100-SM equivalents'.
+
+    The paper's CPU/GPU ratio counts V100 SMs; to compare provisioning across
+    accelerator generations we normalize by per-SM V100 tensor throughput.
+    """
+    return chip.peak_bf16_flops / reference_sm_flops

@@ -1,0 +1,93 @@
+"""Pallas TPU flash attention (prefill path).
+
+Online-softmax attention tiled for VMEM: grid (batch*heads, n_q_blocks,
+n_kv_blocks); the kv axis is the innermost (sequential on TPU), with the
+running max / sum / accumulator carried in VMEM scratch across kv steps.
+Supports causal masking, local (sliding-window) masking and gemma2-style
+score softcap. Block sizes default to MXU-aligned (128, 128).
+
+The pure-jnp oracle is `repro.kernels.ref.attention_ref`.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                  scale, causal, window, softcap, block_q, block_k, n_k):
+    ki = pl.program_id(2)
+    qi = pl.program_id(1)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0].astype(jnp.float32)            # (bq, d)
+    k = k_ref[0].astype(jnp.float32)            # (bk, d)
+    v = v_ref[0].astype(jnp.float32)            # (bk, d)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ()))) * scale
+    if softcap:
+        s = softcap * jnp.tanh(s / softcap)
+
+    rows = qi * block_q + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+    cols = ki * block_k + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+    ok = jnp.ones((block_q, block_k), jnp.bool_)
+    if causal:
+        ok &= cols <= rows
+    if window:
+        ok &= (rows - cols) < window
+    s = jnp.where(ok, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=-1))
+    p = jnp.exp(s - m_new[:, None])
+    corr = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * corr + p.sum(axis=-1)
+    acc_ref[...] = acc_ref[...] * corr[:, None] + jax.lax.dot(p, v)
+    m_ref[...] = m_new
+
+    @pl.when(ki == n_k - 1)
+    def _done():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, ...] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention(q, k, v, *, scale=None, causal=True, window=0,
+                    softcap=None, block_q=128, block_k=128, interpret=False):
+    """q,k,v: (BH, S, D) with heads already folded into the batch dim and
+    KV already expanded to the query head count. Returns (BH, S, D)."""
+    bh, s, d = q.shape
+    scale = scale if scale is not None else d ** -0.5
+    block_q = min(block_q, s)
+    block_k = min(block_k, s)
+    assert s % block_q == 0 and s % block_k == 0
+    n_q, n_k = s // block_q, s // block_k
+
+    kernel = functools.partial(
+        _flash_kernel, scale=scale, causal=causal, window=window,
+        softcap=softcap, block_q=block_q, block_k=block_k, n_k=n_k)
+    return pl.pallas_call(
+        kernel,
+        grid=(bh, n_q, n_k),
+        in_specs=[
+            pl.BlockSpec((1, block_q, d), lambda b, qi, ki: (b, qi, 0)),
+            pl.BlockSpec((1, block_k, d), lambda b, qi, ki: (b, ki, 0)),
+            pl.BlockSpec((1, block_k, d), lambda b, qi, ki: (b, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, d), lambda b, qi, ki: (b, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, s, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,70 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth)."""
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, *, scale=None, causal=True, window=0, softcap=None):
+    """q,k,v (BH, S, D). Mirrors kernels.flash_attention.flash_attention."""
+    bh, s, d = q.shape
+    scale = scale if scale is not None else d ** -0.5
+    logits = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    if softcap:
+        logits = softcap * jnp.tanh(logits / softcap)
+    rows = jnp.arange(s)[:, None]
+    cols = jnp.arange(s)[None, :]
+    ok = jnp.ones((s, s), bool)
+    if causal:
+        ok &= cols <= rows
+    if window:
+        ok &= (rows - cols) < window
+    logits = jnp.where(ok, logits, -1e30)
+    w = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", w, v.astype(jnp.float32)).astype(q.dtype)
+
+
+def decode_attention_ref(q, k, v, lengths, *, scale=None):
+    """q (B,H,D); k,v (B,S,H,D); lengths (B,) valid prefix lengths."""
+    b, s, h, d = k.shape
+    scale = scale if scale is not None else d ** -0.5
+    logits = jnp.einsum("bhd,bshd->bhs", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    ok = jnp.arange(s)[None, None, :] < lengths[:, None, None]
+    logits = jnp.where(ok, logits, -1e30)
+    w = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhs,bshd->bhd", w, v.astype(jnp.float32)).astype(q.dtype)
+
+
+def ssd_ref(x, dt, a, b, c, h0=None):
+    """Sequential SSD recurrence (the definitional oracle).
+
+    x (B,S,H,P); dt (B,S,H) post-softplus; a (H,) negative;
+    b,c (B,S,H,N) (groups already expanded). Returns (y, final_state)."""
+    bs, s, h, p = x.shape
+    n = b.shape[-1]
+    state0 = h0 if h0 is not None else jnp.zeros((bs, h, p, n), jnp.float32)
+
+    def step(state, t):
+        da = jnp.exp(dt[:, t] * a)                                   # (B,H)
+        upd = jnp.einsum("bhp,bhn,bh->bhpn", x[:, t].astype(jnp.float32),
+                         b[:, t].astype(jnp.float32), dt[:, t])
+        state = da[..., None, None] * state + upd
+        y_t = jnp.einsum("bhn,bhpn->bhp", c[:, t].astype(jnp.float32), state)
+        return state, y_t
+
+    state, ys = jax.lax.scan(step, state0, jnp.arange(s))
+    return jnp.moveaxis(ys, 0, 1).astype(x.dtype), state
+
+
+def rglru_ref(a, b, h0=None):
+    """Sequential linear recurrence h_t = a_t h_{t-1} + b_t. a,b (B,S,W)."""
+    bs, s, w = a.shape
+    h = h0 if h0 is not None else jnp.zeros((bs, w), jnp.float32)
+
+    def step(h, t):
+        h = a[:, t] * h + b[:, t]
+        return h, h
+
+    h, hs = jax.lax.scan(step, h.astype(jnp.float32), jnp.arange(s))
+    return jnp.moveaxis(hs, 0, 1), h

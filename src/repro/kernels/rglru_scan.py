@@ -1,0 +1,58 @@
+"""Pallas TPU kernel for the RG-LRU linear recurrence h_t = a_t h_{t-1} + b_t.
+
+Grid (B, n_width_blocks, n_seq_blocks), seq innermost/sequential; the
+hidden state (one row of width-block lanes) is carried in VMEM scratch.
+Inside a block the time loop is a lax.fori_loop over rows — sequential in
+time (the recurrence is inherently serial) but fully vectorized across the
+width lanes, which is how the TPU VPU wants it.
+
+Oracle: repro.kernels.ref.rglru_ref.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _rglru_kernel(a_ref, b_ref, y_ref, h_ref, *, block_s):
+    si = pl.program_id(2)
+
+    @pl.when(si == 0)
+    def _init():
+        h_ref[...] = jnp.zeros_like(h_ref)
+
+    a = a_ref[0].astype(jnp.float32)     # (block_s, W)
+    b = b_ref[0].astype(jnp.float32)
+
+    def body(t, h):
+        h = a[t] * h + b[t]
+        y_ref[0, t, :] = h.astype(y_ref.dtype)
+        return h
+
+    h = jax.lax.fori_loop(0, block_s, body, h_ref[...])
+    h_ref[...] = h
+
+
+def rglru_scan(a, b, *, block_s=256, block_w=None, interpret=False):
+    """a, b (B, S, W) -> h sequence (B, S, W)."""
+    bsz, s, w = a.shape
+    block_s = min(block_s, s)
+    block_w = block_w or w
+    assert s % block_s == 0 and w % block_w == 0
+    kernel = functools.partial(_rglru_kernel, block_s=block_s)
+    return pl.pallas_call(
+        kernel,
+        grid=(bsz, w // block_w, s // block_s),
+        in_specs=[
+            pl.BlockSpec((1, block_s, block_w), lambda b_, wi, si: (b_, si, wi)),
+            pl.BlockSpec((1, block_s, block_w), lambda b_, wi, si: (b_, si, wi)),
+        ],
+        out_specs=pl.BlockSpec((1, block_s, block_w),
+                               lambda b_, wi, si: (b_, si, wi)),
+        out_shape=jax.ShapeDtypeStruct((bsz, s, w), a.dtype),
+        scratch_shapes=[pltpu.VMEM((block_w,), jnp.float32)],
+        interpret=interpret,
+    )(a, b)

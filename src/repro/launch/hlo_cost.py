@@ -1,0 +1,271 @@
+"""Trip-count-aware HLO cost analysis.
+
+XLA's `compiled.cost_analysis()` counts each `while` body ONCE, so any
+lax.scan'd model (all of ours: layers are scanned) is undercounted by the
+trip count. This module re-derives FLOPs / HBM bytes / collective bytes
+from `compiled.as_text()` with proper loop multipliers:
+
+  * computations are parsed into instruction lists with a global
+    name -> shape table;
+  * `while` callsites multiply their body/condition costs by the
+    `known_trip_count` in backend_config (XLA annotates scans it has
+    analyzed; fallback 1 with a warning flag);
+  * FLOPs: dot (2 * prod(out) * contraction) and convolution;
+  * HBM bytes: operand + output bytes of every non-trivial instruction at
+    fusion granularity (fusion internals are skipped — a fusion reads its
+    inputs and writes its output once);
+  * collective bytes: output-shape bytes per collective (all-reduce x2 for
+    the ring), multiplied through loops like everything else.
+
+This is the dry-run 'profiler' standing in for the paper's NVArchSim.
+"""
+
+import json
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "bf16": 2, "f16": 2, "s16": 2, "u16": 2,
+    "f32": 4, "s32": 4, "u32": 4,
+    "f64": 8, "s64": 8, "u64": 8, "c64": 8, "c128": 16,
+    "token": 0, "opaque": 0, "s2": 1, "u2": 1,
+}
+
+_SHAPE_RE = re.compile(r"\b([a-z]\d*[a-z]*\d*(?:e\dm\d(?:fn)?)?)\[([0-9,]*)\]")
+_COMP_HDR = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*\(.*\)\s*->")
+_INSTR = re.compile(r"^\s*(?:ROOT\s+)?%([\w\.\-]+)\s*=\s*(.*)$")
+_OPCODE = re.compile(r"^((?:\([^)]*\)|[a-z0-9_\[\]\{\},\s]*?)?)\s*([a-z][\w\-]*)\(")
+_TRIP = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_CALLED_ONE = re.compile(r"(?:body|condition|to_apply|calls)=%?([\w\.\-]+)")
+_CALLED_MANY = re.compile(r"branch_computations=\{([^}]*)\}")
+_OPERAND = re.compile(r"%([\w\.\-]+)")
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute", "ragged-all-to-all")
+SKIP_BYTES_OPS = {"parameter", "constant", "tuple", "get-tuple-element",
+                  "bitcast", "bitcast-convert", "copy", "after-all",
+                  "partition-id", "replica-id", "iota", "while", "call",
+                  "conditional", "custom-call"}
+
+
+def _shape_elems_bytes(type_str: str) -> Tuple[int, int]:
+    """Total (elements, bytes) across all shapes in a type string."""
+    elems = byts = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        elems += n
+        byts += n * DTYPE_BYTES[dt]
+    return elems, byts
+
+
+@dataclass
+class Instr:
+    name: str
+    type_str: str
+    opcode: str
+    line: str
+    operands: List[str] = field(default_factory=list)
+    called: List[str] = field(default_factory=list)
+    trip_count: int = 1
+
+
+@dataclass
+class Computation:
+    name: str
+    instrs: List[Instr] = field(default_factory=list)
+    is_fusion_body: bool = False
+
+
+def parse_hlo(text: str) -> Tuple[Dict[str, Computation], str, Dict[str, str]]:
+    comps: Dict[str, Computation] = {}
+    shapes: Dict[str, str] = {}
+    entry = None
+    cur: Optional[Computation] = None
+    for raw in text.splitlines():
+        line = raw.rstrip()
+        if not line or line.lstrip().startswith("//"):
+            continue
+        stripped = line.strip()
+        if (line.startswith("%") or line.startswith("ENTRY")) and "{" in line:
+            m = _COMP_HDR.match(line)
+            if m:
+                cur = Computation(m.group(1))
+                comps[cur.name] = cur
+                if line.startswith("ENTRY"):
+                    entry = cur.name
+                # parameter shapes from the header
+                hdr = line[line.index("(") + 1:line.rindex("->")]
+                for pm in re.finditer(r"([\w\.\-]+):\s*([^,()]+(?:\([^)]*\))?)", hdr):
+                    shapes[pm.group(1)] = pm.group(2)
+                continue
+        if stripped == "}":
+            cur = None
+            continue
+        if cur is None:
+            continue
+        m = _INSTR.match(line)
+        if not m:
+            continue
+        name, rest = m.group(1), m.group(2)
+        om = _OPCODE.match(rest)
+        if not om:
+            continue
+        type_str, opcode = om.group(1).strip(), om.group(2)
+        ins = Instr(name=name, type_str=type_str, opcode=opcode, line=stripped)
+        shapes[name] = type_str
+        # operands: inside the first (...) after opcode
+        start = rest.index(opcode + "(") + len(opcode) + 1
+        depth, i = 1, start
+        while i < len(rest) and depth:
+            depth += rest[i] == "("
+            depth -= rest[i] == ")"
+            i += 1
+        ins.operands = _OPERAND.findall(rest[start:i - 1])
+        attrs = rest[i:]
+        for cm in _CALLED_ONE.finditer(attrs):
+            ins.called.append(cm.group(1))
+        for cm in _CALLED_MANY.finditer(attrs):
+            for nm in cm.group(1).split(","):
+                ins.called.append(nm.strip().lstrip("%"))
+        tm = _TRIP.search(rest)
+        if tm:
+            ins.trip_count = int(tm.group(1))
+        cur.instrs.append(ins)
+        if opcode == "fusion":
+            for c in ins.called:
+                if c in comps:
+                    comps[c].is_fusion_body = True
+    # second pass: mark fusion bodies declared before their callsites
+    for comp in comps.values():
+        for ins in comp.instrs:
+            if ins.opcode == "fusion":
+                for c in ins.called:
+                    if c in comps:
+                        comps[c].is_fusion_body = True
+    return comps, entry, shapes
+
+
+def _dot_flops(ins: Instr, shapes: Dict[str, str]) -> float:
+    out_elems, _ = _shape_elems_bytes(ins.type_str)
+    m = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", ins.line)
+    if not m or not ins.operands:
+        return 2.0 * out_elems  # degenerate
+    lhs_type = shapes.get(ins.operands[0], "")
+    sm = _SHAPE_RE.search(lhs_type)
+    if not sm:
+        return 2.0 * out_elems
+    dims = [int(d) for d in sm.group(2).split(",") if d]
+    contraction = 1
+    for idx in (int(i) for i in m.group(1).split(",") if i):
+        if idx < len(dims):
+            contraction *= dims[idx]
+    return 2.0 * out_elems * contraction
+
+
+def _conv_flops(ins: Instr, shapes: Dict[str, str]) -> float:
+    out_elems, _ = _shape_elems_bytes(ins.type_str)
+    if len(ins.operands) < 2:
+        return 2.0 * out_elems
+    _, k_bytes = _shape_elems_bytes(shapes.get(ins.operands[1], ""))
+    k_elems, _ = _shape_elems_bytes(shapes.get(ins.operands[1], ""))
+    # flops ~= 2 * out * (kernel elems / out_channels); approximate via
+    # kernel elems / last dim of kernel shape
+    sm = _SHAPE_RE.search(shapes.get(ins.operands[1], ""))
+    if sm:
+        dims = [int(d) for d in sm.group(2).split(",") if d]
+        ock = dims[-1] if dims else 1
+        return 2.0 * out_elems * (k_elems / max(ock, 1))
+    return 2.0 * out_elems
+
+
+@dataclass
+class Costs:
+    flops: float = 0.0
+    bytes: float = 0.0
+    collective_bytes: float = 0.0
+    collective_count: float = 0.0
+    transcendental: float = 0.0
+
+    def __iadd__(self, o):
+        self.flops += o.flops
+        self.bytes += o.bytes
+        self.collective_bytes += o.collective_bytes
+        self.collective_count += o.collective_count
+        self.transcendental += o.transcendental
+        return self
+
+    def scaled(self, k):
+        return Costs(self.flops * k, self.bytes * k, self.collective_bytes * k,
+                     self.collective_count * k, self.transcendental * k)
+
+
+def _local_costs(comp: Computation, shapes: Dict[str, str],
+                 count_bytes: bool) -> Costs:
+    c = Costs()
+    for ins in comp.instrs:
+        if ins.opcode == "dot":
+            c.flops += _dot_flops(ins, shapes)
+        elif ins.opcode == "convolution":
+            c.flops += _conv_flops(ins, shapes)
+        elif ins.opcode in ("exponential", "tanh", "log", "rsqrt", "sqrt",
+                            "power", "logistic"):
+            e, _ = _shape_elems_bytes(ins.type_str)
+            c.transcendental += e
+        for coll in COLLECTIVES:
+            if ins.opcode == coll or ins.opcode == coll + "-start":
+                _, b = _shape_elems_bytes(ins.type_str)
+                # -start ops carry (operand, result) tuples; take result half
+                if ins.opcode.endswith("-start"):
+                    b = b / 2
+                if coll == "all-reduce":
+                    b *= 2
+                c.collective_bytes += b
+                c.collective_count += 1
+        if count_bytes and ins.opcode not in SKIP_BYTES_OPS \
+                and not ins.opcode.endswith("-done"):
+            _, ob = _shape_elems_bytes(ins.type_str)
+            ib = 0
+            for op in ins.operands:
+                _, b = _shape_elems_bytes(shapes.get(op, ""))
+                ib += b
+            c.bytes += ob + ib
+    return c
+
+
+def module_costs(text: str) -> Costs:
+    comps, entry, shapes = parse_hlo(text)
+    memo: Dict[str, Costs] = {}
+
+    def total(name: str, depth=0) -> Costs:
+        if name in memo:
+            return memo[name]
+        comp = comps.get(name)
+        if comp is None or depth > 64:
+            return Costs()
+        c = Costs()
+        c += _local_costs(comp, shapes, count_bytes=not comp.is_fusion_body)
+        for ins in comp.instrs:
+            mult = ins.trip_count if ins.opcode == "while" else 1
+            for callee in ins.called:
+                if callee == name or callee not in comps:
+                    continue
+                sub = total(callee, depth + 1)
+                if ins.opcode == "fusion":
+                    # fusion internals: flops yes, bytes no (already at callsite)
+                    c += Costs(flops=sub.flops, bytes=0.0,
+                               collective_bytes=sub.collective_bytes,
+                               collective_count=sub.collective_count,
+                               transcendental=sub.transcendental)
+                else:
+                    c += sub.scaled(mult)
+        memo[name] = c
+        return c
+
+    return total(entry)

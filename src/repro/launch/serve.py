@@ -1,0 +1,36 @@
+"""Serving entry points: jitted prefill and decode (serve_step) builders.
+
+serve_step is the SEED central-inference step at LM scale: one new token
+for every sequence in the batch against the sharded KV/state cache.
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def make_serve_step(bundle):
+    def serve_step(params, tokens_t, cache):
+        out, cache = bundle.decode_step(params, tokens_t, cache)
+        next_tok = jnp.argmax(out.logits[:, -1], axis=-1).astype(jnp.int32)
+        return next_tok[:, None], cache
+    return serve_step
+
+
+def make_prefill(bundle, max_len, dtype=jnp.bfloat16):
+    def prefill(params, batch):
+        out, cache = bundle.prefill(params, batch, max_len=max_len, dtype=dtype)
+        next_tok = jnp.argmax(out.logits[:, -1], axis=-1).astype(jnp.int32)
+        return next_tok[:, None], cache
+    return prefill
+
+
+def greedy_generate(bundle, params, batch, steps, max_len, dtype=jnp.bfloat16):
+    """Host loop driving prefill + serve_step (examples / tests)."""
+    prefill = jax.jit(make_prefill(bundle, max_len, dtype))
+    step = jax.jit(make_serve_step(bundle), donate_argnums=(2,))
+    tok, cache = prefill(params, batch)
+    toks = [tok]
+    for _ in range(steps - 1):
+        tok, cache = step(params, tok, cache)
+        toks.append(tok)
+    return jnp.concatenate(toks, axis=1)

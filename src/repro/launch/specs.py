@@ -1,0 +1,140 @@
+"""ShapeDtypeStruct input stand-ins for every lowering (no allocation).
+
+Builds sharded SDS trees for: train state (params + ZeRO-sharded optimizer
+moments), trajectory batches, prefill batches, and decode caches — for any
+(arch x input-shape x mesh) cell.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.shapes import InputShape
+from repro.sharding.param import decode_axes
+from repro.sharding.rules import (DEFAULT_RULES, FSDP_RULES, FSDP_POD_RULES,
+                                  filter_rules, safe_spec)
+
+
+def rules_for(cfg, mesh, kind="train"):
+    """Parameter rules per the config's FSDP setting, filtered to the mesh.
+    Overlays the sequence-parallel / KV-seq-shard activation rules per the
+    config's optimization flags (see EXPERIMENTS.md §Perf). pure_dp applies
+    to TRAINING only: serving batches (32/128) cannot occupy all 256 chips
+    as batch parallelism, so serve cells keep TP sharding."""
+    base = dict({"none": DEFAULT_RULES, "data": FSDP_RULES,
+                 "pod_data": FSDP_POD_RULES}[cfg.fsdp])
+    if cfg.pure_dp and kind == "train":
+        # replicate all weight axes; fold 'model' into the batch axes
+        for k in ("vocab", "heads", "mlp", "experts", "act_heads", "act_mlp",
+                  "act_experts", "act_vocab"):
+            base[k] = ()
+        base["act_batch"] = ("pod", "data", "model")
+        base["act_kv_seq"] = ()
+    if cfg.seq_parallel:
+        base["act_res_seq"] = ("model",)
+    if cfg.kv_seq_shard and not (cfg.pure_dp and kind == "train"):
+        base["act_kv_seq"] = ("model",)
+    return filter_rules(base, mesh)
+
+
+def opt_rules_for(cfg, mesh):
+    """Optimizer-state rules: ZeRO-1 — moments always FSDP-sharded over
+    'data' (and 'pod' for the pod_data setting) even when params are not."""
+    base = FSDP_POD_RULES if cfg.fsdp == "pod_data" else FSDP_RULES
+    return filter_rules(base, mesh)
+
+
+def _sds(shape, dtype, mesh, spec):
+    return jax.ShapeDtypeStruct(shape, dtype, sharding=NamedSharding(mesh, spec))
+
+
+def tree_specs(sds_tree, axes_tree, mesh, rules):
+    """Attach rule-resolved shardings to a ShapeDtypeStruct tree."""
+    def attach(s, a):
+        spec = safe_spec(s.shape, decode_axes(a), rules, mesh)
+        return _sds(s.shape, s.dtype, mesh, spec)
+    return jax.tree.map(attach, sds_tree, axes_tree)
+
+
+def params_specs(bundle, mesh, rules):
+    shapes = jax.eval_shape(lambda: bundle.init(jax.random.PRNGKey(0)))
+    axes = bundle.logical_axes()
+    return tree_specs(shapes, axes, mesh, rules)
+
+
+def state_specs(bundle, optimizer, mesh, cfg):
+    """Train-state SDS tree: params (param rules) + moments (ZeRO rules)."""
+    p_rules = rules_for(cfg, mesh)
+    o_rules = opt_rules_for(cfg, mesh)
+    p = params_specs(bundle, mesh, p_rules)
+    axes = bundle.logical_axes()
+    m_shapes = jax.eval_shape(
+        lambda: optimizer.init(jax.eval_shape(
+            lambda: bundle.init(jax.random.PRNGKey(0)))))
+    opt = {k: tree_specs(v, axes, mesh, o_rules) for k, v in m_shapes.items()}
+    return {"params": p, "opt_state": opt,
+            "step": _sds((), jnp.int32, mesh, P())}
+
+
+def batch_specs(cfg, shape: InputShape, mesh, rules, with_rl_fields=True):
+    b, s = shape.global_batch, shape.seq_len
+    f = cfg.frontend_tokens
+    s_text = s - f if (f and cfg.family != "encdec") else s
+
+    def sds2(shape_, dtype):
+        axes = ("act_batch",) + (None,) * (len(shape_) - 1)
+        return _sds(shape_, dtype, mesh, safe_spec(shape_, axes, rules, mesh))
+
+    out = {"tokens": sds2((b, s_text), jnp.int32)}
+    if with_rl_fields:
+        for k in ("rewards", "discounts", "behavior_logprobs", "mask"):
+            out[k] = sds2((b, s_text), jnp.float32)
+    if f:
+        out["frontend"] = sds2((b, f, cfg.frontend_dim), jnp.bfloat16)
+    return out
+
+
+# ------------------------------- caches ------------------------------------
+
+def _cache_leaf_axes(keystr, x):
+    """Infer logical axes of a decode-cache leaf from its path and rank."""
+    nd = x.ndim
+    stacked = "rest" not in keystr
+    if "'pos'" in keystr or x.dtype == jnp.int32:
+        return (None,) * nd
+    for nm in ("'k'", "'v'", "'xk'", "'xv'", "c_kv", "k_rope"):
+        if nm in keystr:
+            batch_dim = 1 if stacked else 0
+            axes = [None] * nd
+            axes[batch_dim] = "act_batch"
+            if nd > batch_dim + 2:  # (.., B, S, ...): shard cache seq too
+                axes[batch_dim + 1] = "act_kv_seq"
+            return tuple(axes)
+    # unnamed tuple leaves: recurrent states
+    if nd >= 2:
+        axes = [None] * nd
+        axes[1 if stacked else 0] = "act_batch"
+        if nd == (5 if stacked else 4):          # mamba ssm state (..B,H,P,N)
+            axes[2 if stacked else 1] = "act_heads"
+        else:                                    # rglru h / conv: last dim wide
+            axes[-1] = "act_mlp"
+        return tuple(axes)
+    return (None,) * nd
+
+
+def cache_specs(bundle, shape: InputShape, mesh, rules, dtype=jnp.bfloat16):
+    cfg = bundle.cfg
+    sds = jax.eval_shape(
+        lambda: bundle.init_cache(shape.global_batch, shape.seq_len, dtype))
+    flat, treedef = jax.tree.flatten_with_path(sds)
+    leaves = []
+    for path, x in flat:
+        ks = jax.tree_util.keystr(path)
+        axes = _cache_leaf_axes(ks, x)
+        spec = safe_spec(x.shape, axes, rules, mesh)
+        leaves.append(_sds(x.shape, x.dtype, mesh, spec))
+    return jax.tree.unflatten(treedef, leaves)
+
+
+def shardings_of(sds_tree):
+    return jax.tree.map(lambda s: s.sharding, sds_tree)

@@ -1,0 +1,77 @@
+"""Shared model scaffolding: stacked-layer init, remat, bundles, heads."""
+
+from dataclasses import dataclass
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn import init as inits
+from repro.sharding.param import ArrayMaker, SpecMaker
+
+
+def stacked(mk, n_layers: int):
+    """Wrap a maker so every declared param gets a leading 'layers' axis."""
+    def mk_stacked(name, shape, axes, init, dtype=None):
+        def stacked_init(key, s):
+            keys = jax.random.split(key, s[0])
+            return jax.vmap(lambda kk: init(kk, s[1:]))(keys)
+        return mk(name, (n_layers,) + tuple(shape), ("layers",) + tuple(axes),
+                  stacked_init, dtype=dtype)
+    return mk_stacked
+
+
+def maybe_remat(fn, remat: str):
+    if remat == "none":
+        return fn
+    policy = {
+        "full": jax.checkpoint_policies.nothing_saveable,
+        "dots": jax.checkpoint_policies.dots_with_no_batch_dims_saveable,
+    }[remat]
+    return jax.checkpoint(fn, policy=policy)
+
+
+def init_value_head(mk, d, name="value_head"):
+    return {"w": mk(f"{name}.w", (d, 1), ("embed", None), inits.fan_in()),
+            "b": mk(f"{name}.b", (1,), (None,), inits.zeros)}
+
+
+def value_head(p, x):
+    return (x.astype(jnp.float32) @ p["w"].astype(jnp.float32) + p["b"])[..., 0]
+
+
+def init_q_head(mk, d, n_actions, name="q_head"):
+    return {"w": mk(f"{name}.w", (d, n_actions), ("embed", None), inits.fan_in()),
+            "b": mk(f"{name}.b", (n_actions,), (None,), inits.zeros)}
+
+
+def q_head(p, x):
+    return x.astype(jnp.float32) @ p["w"].astype(jnp.float32) + p["b"]
+
+
+def init_frontend_proj(mk, cfg, name="frontend"):
+    """Modality stub: projects precomputed patch/frame embeddings to d_model."""
+    if not cfg.frontend_tokens:
+        return None
+    return {"w": mk(f"{name}.w", (cfg.frontend_dim, cfg.d_model),
+                    (None, "embed"), inits.fan_in())}
+
+
+@dataclass
+class ModelBundle:
+    """Uniform functional interface every architecture family implements."""
+    cfg: Any
+    init: Callable                  # (rng) -> params
+    logical_axes: Callable          # () -> pytree of logical-axes tuples
+    forward: Callable               # (params, batch) -> ModelOutputs
+    init_cache: Callable            # (batch, max_len, dtype) -> cache
+    prefill: Callable               # (params, batch) -> (outputs, cache)
+    decode_step: Callable           # (params, tokens_t, index, cache) -> (outputs, cache)
+
+
+@dataclass
+class ModelOutputs:
+    logits: jax.Array               # (B, S, vocab) fp32 (or (B,S,A) for q-nets)
+    value: Optional[jax.Array]      # (B, S) fp32
+    aux_loss: Any = 0.0
+    mtp_logits: Optional[jax.Array] = None

@@ -1,0 +1,201 @@
+"""Encoder-decoder backbone (Seamless-M4T v2 text/audio).
+
+The modality frontend is a stub per the assignment: the encoder consumes
+precomputed frame embeddings (B, F, frontend_dim). Encoder: bidirectional
+self-attention. Decoder: causal self-attention + cross-attention over the
+encoder output. Decode carries a self-attn KV cache plus a fixed cross-attn
+K/V computed once at prefill.
+"""
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn import init as inits
+from repro.nn.attention import (attend_ref, attention, decode_attention,
+                                init_attention, make_cache, qkv_project,
+                                _expand_kv, _head_mask)
+from repro.nn.embed import embed, init_embed, unembed
+from repro.nn.mlp import init_mlp, mlp
+from repro.nn.norms import apply_norm, init_norm
+from repro.models.common import (ModelBundle, ModelOutputs, init_frontend_proj,
+                                 init_value_head, maybe_remat, stacked,
+                                 value_head)
+from repro.sharding.ctx import constrain
+from repro.sharding.param import ArrayMaker, SpecMaker
+
+
+def _init_enc_layer(mk, cfg, name):
+    return {
+        "norm1": init_norm(mk, cfg.d_model, cfg.norm, f"{name}.norm1"),
+        "attn": init_attention(mk, cfg, f"{name}.attn"),
+        "norm2": init_norm(mk, cfg.d_model, cfg.norm, f"{name}.norm2"),
+        "mlp": init_mlp(mk, cfg.d_model, cfg.d_ff, f"{name}.mlp", gated=False,
+                        bias=True),
+    }
+
+
+def _init_dec_layer(mk, cfg, name):
+    p = _init_enc_layer(mk, cfg, name)
+    p["norm_x"] = init_norm(mk, cfg.d_model, cfg.norm, f"{name}.norm_x")
+    p["xattn"] = init_attention(mk, cfg, f"{name}.xattn")
+    return p
+
+
+def _cross_attention(cfg, p, x, enc_kv):
+    """Cross-attn: q from x, fixed K/V (B, F, Hp, hd) from the encoder."""
+    hp, kh = cfg.padded_heads, cfg.num_kv_heads
+    scale = 1.0 / math.sqrt(cfg.head_dim)
+    dt = x.dtype
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(dt))
+    if "bq" in p:
+        q = q + p["bq"].astype(dt)
+    q = constrain(q, "act_batch", "act_seq", "act_heads", None)
+    k, v = enc_kv
+    pos_q = jnp.zeros(q.shape[:2], jnp.int32)
+    pos_kv = jnp.zeros(k.shape[:2], jnp.int32)
+    out = attend_ref(q, _expand_kv(k, hp // kh), _expand_kv(v, hp // kh),
+                     pos_q, pos_kv, kind="bidir", scale=scale)
+    hm = _head_mask(cfg, out.dtype)
+    if hm is not None:
+        out = out * hm[None, None, :, None]
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(dt))
+
+
+def _cross_kv(cfg, p, enc_out):
+    dt = enc_out.dtype
+    k = jnp.einsum("bsd,dhk->bshk", enc_out, p["wk"].astype(dt))
+    v = jnp.einsum("bsd,dhk->bshk", enc_out, p["wv"].astype(dt))
+    if "bk" in p:
+        k, v = k + p["bk"].astype(dt), v + p["bv"].astype(dt)
+    return k, v
+
+
+def _dec_layer(cfg, p, x, positions, enc_kv, cache=None, decode=False, index=None):
+    x = constrain(x, "act_batch", "act_res_seq", "act_embed")
+    h = apply_norm(p["norm1"], x, cfg.norm, cfg.norm_eps)
+    if decode:
+        y, new_cache = decode_attention(cfg, p["attn"], h, index, cache)
+    else:
+        y, new_cache = attention(cfg, p["attn"], h, positions, cache=cache)
+    x = x + y
+    h = apply_norm(p["norm_x"], x, cfg.norm, cfg.norm_eps)
+    x = x + _cross_attention(cfg, p["xattn"], h, enc_kv)
+    h = apply_norm(p["norm2"], x, cfg.norm, cfg.norm_eps)
+    return x + mlp(p["mlp"], h, "relu"), new_cache
+
+
+def _build(cfg, mk):
+    p = {
+        "embed": init_embed(mk, cfg),
+        "frontend": init_frontend_proj(mk, cfg),
+        "enc": _init_enc_layer(stacked(mk, cfg.enc_layers), cfg, "enc"),
+        "dec": _init_dec_layer(stacked(mk, cfg.dec_layers), cfg, "dec"),
+        "enc_norm": init_norm(mk, cfg.d_model, cfg.norm, "enc_norm"),
+        "final_norm": init_norm(mk, cfg.d_model, cfg.norm, "final_norm"),
+        "value_head": init_value_head(mk, cfg.d_model),
+    }
+    return p
+
+
+def _encode(cfg, params, frames, remat="none"):
+    x = frames.astype(jnp.dtype(cfg.compute_dtype)) @ params["frontend"]["w"].astype(
+        jnp.dtype(cfg.compute_dtype))
+    positions = jnp.arange(x.shape[1])
+
+    def body(x, p):
+        x = constrain(x, "act_batch", "act_res_seq", "act_embed")
+        h = apply_norm(p["norm1"], x, cfg.norm, cfg.norm_eps)
+        y, _ = attention(cfg, p["attn"], h, positions, kind="bidir")
+        x = x + y
+        h = apply_norm(p["norm2"], x, cfg.norm, cfg.norm_eps)
+        return x + mlp(p["mlp"], h, "relu"), None
+
+    fn = maybe_remat(lambda x, p: body(x, p), remat)
+    x, _ = jax.lax.scan(fn, x, params["enc"])
+    return apply_norm(params["enc_norm"], x, cfg.norm, cfg.norm_eps)
+
+
+def _decode_stack(cfg, params, x, positions, enc_out, caches=None, mode="train"):
+    decode = mode == "decode"
+    index = caches["index"] if (caches is not None and decode) else None
+    remat = cfg.remat if mode == "train" else "none"
+
+    def body(x, xs):
+        p, c = xs
+        enc_kv = _cross_kv(cfg, p["xattn"], enc_out) if enc_out is not None \
+            else (c["xk"], c["xv"])
+        cache_in = None if c is None else {k: c[k] for k in ("k", "v", "pos")}
+        x, nc = _dec_layer(cfg, p, x, positions, enc_kv, cache=cache_in,
+                           decode=decode, index=index)
+        if c is None:
+            return x, None
+        out_c = dict(nc, xk=enc_kv[0], xv=enc_kv[1])
+        return x, out_c
+
+    if caches is None:
+        fn = maybe_remat(lambda x, p: body(x, (p, None)), remat)
+        x, _ = jax.lax.scan(fn, x, params["dec"])
+        return x, None
+    x, ncs = jax.lax.scan(body, x, (params["dec"], caches["dec"]))
+    return x, dict(caches, dec=ncs)
+
+
+def _outputs(cfg, params, x):
+    h = apply_norm(params["final_norm"], x, cfg.norm, cfg.norm_eps)
+    logits = unembed(cfg, params["embed"], h)
+    return ModelOutputs(logits=logits, value=value_head(params["value_head"], h))
+
+
+def encdec_forward(cfg, params, batch):
+    enc_out = _encode(cfg, params, batch["frontend"], cfg.remat)
+    x = embed(cfg, params["embed"], batch["tokens"])
+    x, _ = _decode_stack(cfg, params, x, jnp.arange(x.shape[1]), enc_out,
+                         None, mode="train")
+    return _outputs(cfg, params, x)
+
+
+def encdec_init_cache(cfg, batch, max_len, dtype=jnp.bfloat16, enc_len=None):
+    enc_len = enc_len or cfg.frontend_tokens
+    entry = make_cache(cfg, batch, max_len, "global", dtype)
+    entry["xk"] = jnp.zeros((batch, enc_len, cfg.num_kv_heads, cfg.head_dim), dtype)
+    entry["xv"] = jnp.zeros((batch, enc_len, cfg.num_kv_heads, cfg.head_dim), dtype)
+    stacked_c = jax.tree.map(
+        lambda a: jnp.broadcast_to(a, (cfg.dec_layers,) + a.shape).copy(), entry)
+    return {"dec": stacked_c, "index": jnp.zeros((), jnp.int32)}
+
+
+def encdec_prefill(cfg, params, batch, max_len, dtype=jnp.bfloat16):
+    enc_out = _encode(cfg, params, batch["frontend"])
+    x = embed(cfg, params["embed"], batch["tokens"])
+    s = x.shape[1]
+    caches = encdec_init_cache(cfg, x.shape[0], max_len, dtype,
+                               enc_len=enc_out.shape[1])
+    x, caches = _decode_stack(cfg, params, x, jnp.arange(s), enc_out, caches,
+                              mode="prefill")
+    caches = dict(caches, index=jnp.array(s, jnp.int32))
+    return _outputs(cfg, params, x), caches
+
+
+def encdec_decode_step(cfg, params, tokens_t, caches):
+    x = embed(cfg, params["embed"], tokens_t)
+    x, caches = _decode_stack(cfg, params, x, caches["index"][None], None,
+                              caches, mode="decode")
+    caches = dict(caches, index=caches["index"] + 1)
+    return _outputs(cfg, params, x), caches
+
+
+def make_encdec(cfg) -> ModelBundle:
+    return ModelBundle(
+        cfg=cfg,
+        init=lambda rng: _build(cfg, ArrayMaker(rng, jnp.dtype(cfg.param_dtype))),
+        logical_axes=lambda: _build(cfg, SpecMaker("axes")),
+        forward=lambda params, batch: encdec_forward(cfg, params, batch),
+        init_cache=lambda batch, max_len, dtype=jnp.bfloat16:
+            encdec_init_cache(cfg, batch, max_len, dtype),
+        prefill=lambda params, batch, max_len=None, dtype=jnp.bfloat16:
+            encdec_prefill(cfg, params, batch, max_len, dtype),
+        decode_step=lambda params, tokens_t, caches:
+            encdec_decode_step(cfg, params, tokens_t, caches),
+    )

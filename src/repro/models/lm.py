@@ -1,0 +1,288 @@
+"""Unified decoder-only LM covering the dense / MoE / MLA / local-global
+assigned architectures (qwen*, starcoder2, gemma2, deepseek-v3, internvl2
+backbone).
+
+Layer stacking: layers are grouped into *pattern periods* (gemma2:
+('local','global') -> period 2; everything else period 1) and the periods
+are lax.scan'ed with stacked parameters — small HLO, fast compile, and the
+standard structure XLA pipelines FSDP gathers across.
+
+DeepSeek's first-k dense layers form a separate (scanned) stack, and its
+MTP head (1 extra block predicting token t+2) is applied in training mode.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn import init as inits
+from repro.nn.attention import (attention, decode_attention, init_attention,
+                                make_cache)
+from repro.nn.embed import embed, init_embed, unembed
+from repro.nn.mla import init_mla, make_mla_cache, mla_attention, mla_decode
+from repro.nn.mlp import init_mlp, mlp
+from repro.nn.moe import init_moe, moe
+from repro.nn.norms import apply_norm, init_norm
+from repro.models.common import (ModelBundle, ModelOutputs, init_frontend_proj,
+                                 init_q_head, init_value_head, maybe_remat,
+                                 q_head, stacked, value_head)
+from repro.sharding.ctx import constrain
+from repro.sharding.param import ArrayMaker, SpecMaker
+
+HUGE_WINDOW = 1 << 30
+
+
+def _period(cfg):
+    return len(cfg.attn_pattern)
+
+
+def _windows(cfg):
+    return tuple(cfg.local_window if k == "local" else HUGE_WINDOW
+                 for k in cfg.attn_pattern)
+
+
+def _init_block(mk, cfg, moe_layer, name):
+    p = {
+        "norm1": init_norm(mk, cfg.d_model, cfg.norm, f"{name}.norm1",
+                           gemma_scale=cfg.gemma_scale),
+        "norm2": init_norm(mk, cfg.d_model, cfg.norm, f"{name}.norm2",
+                           gemma_scale=cfg.gemma_scale),
+    }
+    if cfg.mla:
+        p["attn"] = init_mla(mk, cfg, f"{name}.mla")
+    else:
+        p["attn"] = init_attention(mk, cfg, f"{name}.attn")
+    if moe_layer:
+        p["ffn"] = init_moe(mk, cfg, f"{name}.moe")
+    else:
+        p["ffn"] = init_mlp(mk, cfg.d_model, cfg.d_ff, f"{name}.mlp",
+                            bias=cfg.mlp_bias)
+    if cfg.post_block_norm:
+        p["post1"] = init_norm(mk, cfg.d_model, cfg.norm, f"{name}.post1",
+                               gemma_scale=cfg.gemma_scale)
+        p["post2"] = init_norm(mk, cfg.d_model, cfg.norm, f"{name}.post2",
+                               gemma_scale=cfg.gemma_scale)
+    return p
+
+
+def _block(cfg, p, x, positions, window, moe_layer, cache=None, decode=False,
+           index=None):
+    """One transformer block. Returns (x, new_cache, aux)."""
+    # Megatron-SP: residual stream sequence-sharded between blocks (the
+    # constraint is divisibility-aware — decode steps pass through). The
+    # post-norm activation is pinned back to seq-FULL so the sharding does
+    # NOT propagate into the attention/MLP interiors (found via §Perf
+    # iteration 2: free propagation turned the chunked-attention scan into
+    # mixed seq x head shardings with 'involuntary full rematerialization').
+    x = constrain(x, "act_batch", "act_res_seq", "act_embed")
+    h = apply_norm(p["norm1"], x, cfg.norm, cfg.norm_eps, cfg.gemma_scale)
+    h = constrain(h, "act_batch", None, "act_embed")
+    if cfg.mla:
+        if decode:
+            y, new_cache = mla_decode(cfg, p["attn"], h, index, cache)
+        else:
+            y, new_cache = mla_attention(cfg, p["attn"], h, positions, cache=cache)
+    else:
+        kind = "local" if window < HUGE_WINDOW else "global"
+        if decode:
+            y, new_cache = decode_attention(cfg, p["attn"], h, index, cache, kind=kind)
+        else:
+            cfg_w = cfg if window >= HUGE_WINDOW else cfg.with_(local_window=window)
+            y, new_cache = attention(cfg_w, p["attn"], h, positions, kind=kind,
+                                     cache=cache)
+    if "post1" in p:
+        y = apply_norm(p["post1"], y, cfg.norm, cfg.norm_eps, cfg.gemma_scale)
+    x = constrain(x + constrain(y, "act_batch", "act_res_seq", "act_embed"),
+                  "act_batch", "act_res_seq", "act_embed")
+    h = apply_norm(p["norm2"], x, cfg.norm, cfg.norm_eps, cfg.gemma_scale)
+    h = constrain(h, "act_batch", None, "act_embed")
+    aux = jnp.zeros((), jnp.float32)
+    if moe_layer:
+        y, aux = moe(cfg, p["ffn"], h, cfg.act)
+    else:
+        y = mlp(p["ffn"], h, cfg.act)
+    if "post2" in p:
+        y = apply_norm(p["post2"], y, cfg.norm, cfg.norm_eps, cfg.gemma_scale)
+    return x + y, new_cache, aux
+
+
+def _build(cfg, mk):
+    period = _period(cfg)
+    k_pre = cfg.first_dense_layers
+    n_main = (cfg.num_layers - k_pre) // period
+    assert (cfg.num_layers - k_pre) % period == 0, \
+        f"{cfg.name}: layers {cfg.num_layers} not divisible by pattern period"
+    p = {"embed": init_embed(mk, cfg)}
+    fe = init_frontend_proj(mk, cfg)
+    if fe is not None:
+        p["frontend"] = fe
+    if k_pre:
+        p["pre"] = {"p0": _init_block(stacked(mk, k_pre), cfg, False, "pre")}
+    p["main"] = {
+        f"p{i}": _init_block(stacked(mk, n_main), cfg, cfg.family == "moe",
+                             f"main{i}")
+        for i in range(period)
+    }
+    p["final_norm"] = init_norm(mk, cfg.d_model, cfg.norm, "final_norm",
+                                gemma_scale=cfg.gemma_scale)
+    p["value_head"] = init_value_head(mk, cfg.d_model)
+    if cfg.algo == "r2d2" and cfg.num_actions:
+        p["q_head"] = init_q_head(mk, cfg.d_model, cfg.num_actions)
+    if cfg.mtp_depth:
+        p["mtp"] = {
+            "proj": mk("mtp.proj", (2 * cfg.d_model, cfg.d_model),
+                       ("embed", "embed"), inits.fan_in()),
+            "norm": init_norm(mk, cfg.d_model, cfg.norm, "mtp.norm"),
+            "block": _init_block(mk, cfg, cfg.family == "moe", "mtp.block"),
+        }
+    return p
+
+
+# --------------------------- stack execution ------------------------------
+
+def _scan_stack(cfg, x, stack_params, stack_caches, windows, moe_layer,
+                positions, mode, index):
+    """Scan one layer stack. stack_params: {'p0': stacked, ...};
+    stack_caches: tuple (len == period) of stacked caches, or None.
+    Returns (x, new_stack_caches or None, aux_sum)."""
+    period = len(windows)
+    decode = mode == "decode"
+    remat = cfg.remat if mode == "train" else "none"
+
+    def body(x, xs):
+        p_per, c_per = xs
+        ncs, aux = [], jnp.zeros((), jnp.float32)
+        for i in range(period):
+            c_i = None if c_per is None else c_per[i]
+            x, nc, a = _block(cfg, p_per[f"p{i}"], x, positions, windows[i],
+                              moe_layer, cache=c_i, decode=decode, index=index)
+            ncs.append(nc)
+            aux = aux + a
+        ys = (None if c_per is None else tuple(ncs), aux)
+        return x, ys
+
+    if stack_caches is None:
+        fn = maybe_remat(lambda x, p: body(x, (p, None)), remat)
+        x, (_, auxs) = jax.lax.scan(fn, x, stack_params)
+        return x, None, auxs.sum()
+    x, (ncs, auxs) = jax.lax.scan(body, x, (stack_params, stack_caches))
+    return x, ncs, auxs.sum()
+
+
+def _run_stacks(cfg, params, x, positions, caches=None, mode="train"):
+    index = caches["index"] if (caches is not None and mode == "decode") else None
+    aux_total = jnp.zeros((), jnp.float32)
+    new_caches = dict(caches) if caches is not None else None
+
+    if "pre" in params:
+        c = None if caches is None else (caches["pre"],)
+        x, nc, aux = _scan_stack(cfg, x, params["pre"], c, (HUGE_WINDOW,),
+                                 False, positions, mode, index)
+        aux_total += aux
+        if nc is not None:
+            new_caches["pre"] = nc[0]
+
+    c = None if caches is None else caches["main"]
+    x, nc, aux = _scan_stack(cfg, x, params["main"], c, _windows(cfg),
+                             cfg.family == "moe", positions, mode, index)
+    aux_total += aux
+    if nc is not None:
+        new_caches["main"] = nc
+    return x, new_caches, aux_total
+
+
+# ----------------------------- public API ---------------------------------
+
+def _embed_inputs(cfg, params, batch):
+    tokens = batch["tokens"]
+    x = embed(cfg, params["embed"], tokens, scale_by_dim=cfg.embed_scale)
+    if "frontend" in params and batch.get("frontend") is not None:
+        f = batch["frontend"].astype(x.dtype) @ params["frontend"]["w"].astype(x.dtype)
+        x = jnp.concatenate([f, x], axis=1)
+    return x
+
+
+def _outputs(cfg, params, x, aux, mtp_logits=None):
+    h = apply_norm(params["final_norm"], x, cfg.norm, cfg.norm_eps, cfg.gemma_scale)
+    if "q_head" in params:
+        logits = q_head(params["q_head"], h)
+    else:
+        logits = unembed(cfg, params["embed"], h, softcap=cfg.final_softcap)
+    v = value_head(params["value_head"], h)
+    return ModelOutputs(logits=logits, value=v, aux_loss=aux, mtp_logits=mtp_logits)
+
+
+def lm_forward(cfg, params, batch):
+    x = _embed_inputs(cfg, params, batch)
+    positions = jnp.arange(x.shape[1])
+    x, _, aux = _run_stacks(cfg, params, x, positions, None, mode="train")
+    mtp_logits = None
+    if cfg.mtp_depth and "mtp" in params:
+        # MTP: predict token t+2 from (h_t, embed(token_{t+1})).
+        h = apply_norm(params["mtp"]["norm"], x, cfg.norm, cfg.norm_eps)
+        nxt = jnp.roll(batch["tokens"], -1, axis=1)
+        e = embed(cfg, params["embed"], nxt, scale_by_dim=cfg.embed_scale)
+        if e.shape[1] != x.shape[1]:  # frontend-padded sequence
+            pad = jnp.zeros((e.shape[0], x.shape[1] - e.shape[1], e.shape[2]), e.dtype)
+            e = jnp.concatenate([pad, e], axis=1)
+        hm = jnp.concatenate([h, e], axis=-1) @ params["mtp"]["proj"].astype(x.dtype)
+        hm, _, _ = _block(cfg, params["mtp"]["block"], hm, positions,
+                          HUGE_WINDOW, cfg.family == "moe")
+        hm = apply_norm(params["final_norm"], hm, cfg.norm, cfg.norm_eps,
+                        cfg.gemma_scale)
+        mtp_logits = unembed(cfg, params["embed"], hm, softcap=cfg.final_softcap)
+    return _outputs(cfg, params, x, aux, mtp_logits)
+
+
+def lm_init_cache(cfg, batch, max_len, dtype=jnp.bfloat16):
+    period = _period(cfg)
+    n_main = (cfg.num_layers - cfg.first_dense_layers) // period
+
+    def entry(kind):
+        if cfg.mla:
+            return make_mla_cache(cfg, batch, max_len, dtype)
+        return make_cache(cfg, batch, max_len, kind, dtype)
+
+    main = tuple(_stack_cache(entry(cfg.attn_pattern[i]), n_main)
+                 for i in range(period))
+    c = {"main": main, "index": jnp.zeros((), jnp.int32)}
+    if cfg.first_dense_layers:
+        c["pre"] = _stack_cache(entry("global"), cfg.first_dense_layers)
+    return c
+
+
+def _stack_cache(entry, n):
+    return jax.tree.map(lambda a: jnp.broadcast_to(a, (n,) + a.shape).copy(), entry)
+
+
+def lm_prefill(cfg, params, batch, max_len, dtype=jnp.bfloat16):
+    x = _embed_inputs(cfg, params, batch)
+    s = x.shape[1]
+    caches = lm_init_cache(cfg, x.shape[0], max_len, dtype)
+    positions = jnp.arange(s)
+    x, caches, aux = _run_stacks(cfg, params, x, positions, caches, mode="prefill")
+    caches = dict(caches, index=jnp.array(s, jnp.int32))
+    return _outputs(cfg, params, x, aux), caches
+
+
+def lm_decode_step(cfg, params, tokens_t, caches):
+    """tokens_t (B,1). Uses caches['index'] as the write position."""
+    x = embed(cfg, params["embed"], tokens_t, scale_by_dim=cfg.embed_scale)
+    positions = caches["index"][None]
+    x, caches, aux = _run_stacks(cfg, params, x, positions, caches, mode="decode")
+    caches = dict(caches, index=caches["index"] + 1)
+    return _outputs(cfg, params, x, aux), caches
+
+
+def make_lm(cfg) -> ModelBundle:
+    return ModelBundle(
+        cfg=cfg,
+        init=lambda rng: _build(cfg, ArrayMaker(rng, jnp.dtype(cfg.param_dtype))),
+        logical_axes=lambda: _build(cfg, SpecMaker("axes")),
+        forward=lambda params, batch: lm_forward(cfg, params, batch),
+        init_cache=lambda batch, max_len, dtype=jnp.bfloat16:
+            lm_init_cache(cfg, batch, max_len, dtype),
+        prefill=lambda params, batch, max_len=None, dtype=jnp.bfloat16:
+            lm_prefill(cfg, params, batch, max_len, dtype),
+        decode_step=lambda params, tokens_t, caches:
+            lm_decode_step(cfg, params, tokens_t, caches),
+    )

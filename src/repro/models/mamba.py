@@ -1,0 +1,103 @@
+"""Mamba2 (SSD) language model — attention-free, O(S) decode state.
+
+Uniform stack of SSD blocks (pre-norm residual), lax.scan'ed. Decode carries
+a per-layer (ssm_state, conv_state) instead of a KV cache, so `long_500k`
+runs at constant memory.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn.embed import embed, init_embed, unembed
+from repro.nn.norms import apply_norm, init_norm
+from repro.nn.ssd import init_ssd_layer, ssd_layer, ssd_state_init
+from repro.models.common import (ModelBundle, ModelOutputs, init_value_head,
+                                 maybe_remat, stacked, value_head)
+from repro.sharding.ctx import constrain
+from repro.sharding.param import ArrayMaker, SpecMaker
+
+
+def _build(cfg, mk):
+    smk = stacked(mk, cfg.num_layers)
+    return {
+        "embed": init_embed(mk, cfg),
+        "blocks": {
+            "norm": init_norm(smk, cfg.d_model, cfg.norm, "blk.norm"),
+            "ssd": init_ssd_layer(smk, cfg, "blk.ssd"),
+        },
+        "final_norm": init_norm(mk, cfg.d_model, cfg.norm, "final_norm"),
+        "value_head": init_value_head(mk, cfg.d_model),
+    }
+
+
+def _run(cfg, params, x, states=None, decode=False, mode="train"):
+    remat = cfg.remat if mode == "train" else "none"
+
+    def body(x, xs):
+        p, st = xs
+        x = constrain(x, "act_batch", "act_res_seq", "act_embed")
+        h = apply_norm(p["norm"], x, cfg.norm, cfg.norm_eps)
+        if st is None:
+            y, new_st = ssd_layer(cfg, p["ssd"], h)
+        else:
+            y, new_st = ssd_layer(cfg, p["ssd"], h, state=st[0], conv_state=st[1],
+                                  decode=decode)
+        return x + y, new_st
+
+    if states is None:
+        fn = maybe_remat(lambda x, p: body(x, (p, None)), remat)
+        x, _ = jax.lax.scan(fn, x, params["blocks"])
+        return x, None
+    x, new_states = jax.lax.scan(body, x, (params["blocks"], states))
+    return x, new_states
+
+
+def _outputs(cfg, params, x):
+    h = apply_norm(params["final_norm"], x, cfg.norm, cfg.norm_eps)
+    logits = unembed(cfg, params["embed"], h)
+    return ModelOutputs(logits=logits, value=value_head(params["value_head"], h))
+
+
+def mamba_forward(cfg, params, batch):
+    x = embed(cfg, params["embed"], batch["tokens"])
+    x, _ = _run(cfg, params, x, mode="train")
+    return _outputs(cfg, params, x)
+
+
+def mamba_init_cache(cfg, batch, max_len=None, dtype=jnp.bfloat16):
+    del max_len
+    st = ssd_state_init(cfg, batch, dtype)
+    stacked_st = jax.tree.map(
+        lambda a: jnp.broadcast_to(a, (cfg.num_layers,) + a.shape).copy(), st)
+    return {"states": stacked_st, "index": jnp.zeros((), jnp.int32)}
+
+
+def mamba_prefill(cfg, params, batch, max_len=None, dtype=jnp.bfloat16):
+    x = embed(cfg, params["embed"], batch["tokens"])
+    cache = mamba_init_cache(cfg, x.shape[0], dtype=dtype)
+    x, new_states = _run(cfg, params, x, states=cache["states"], mode="prefill")
+    cache = {"states": new_states, "index": jnp.array(x.shape[1], jnp.int32)}
+    return _outputs(cfg, params, x), cache
+
+
+def mamba_decode_step(cfg, params, tokens_t, cache):
+    x = embed(cfg, params["embed"], tokens_t)
+    x, new_states = _run(cfg, params, x, states=cache["states"], decode=True,
+                         mode="decode")
+    cache = {"states": new_states, "index": cache["index"] + 1}
+    return _outputs(cfg, params, x), cache
+
+
+def make_mamba(cfg) -> ModelBundle:
+    return ModelBundle(
+        cfg=cfg,
+        init=lambda rng: _build(cfg, ArrayMaker(rng, jnp.dtype(cfg.param_dtype))),
+        logical_axes=lambda: _build(cfg, SpecMaker("axes")),
+        forward=lambda params, batch: mamba_forward(cfg, params, batch),
+        init_cache=lambda batch, max_len=None, dtype=jnp.bfloat16:
+            mamba_init_cache(cfg, batch, max_len, dtype),
+        prefill=lambda params, batch, max_len=None, dtype=jnp.bfloat16:
+            mamba_prefill(cfg, params, batch, max_len, dtype),
+        decode_step=lambda params, tokens_t, cache:
+            mamba_decode_step(cfg, params, tokens_t, cache),
+    )

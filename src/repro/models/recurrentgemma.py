@@ -1,0 +1,172 @@
+"""RecurrentGemma (Griffin): RG-LRU recurrent blocks + local attention, 1:2.
+
+Pattern period 3: (rglru, rglru, local-attn). 26 layers = 8 scanned periods
++ 2 trailing recurrent layers (unrolled). Decode state: per recurrent layer
+a (h, conv) pair; per attention layer a ring KV cache of the local window —
+so `long_500k` runs at constant memory.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn.attention import (attention, decode_attention, init_attention,
+                                make_cache)
+from repro.nn.embed import embed, init_embed, unembed
+from repro.nn.mlp import init_mlp, mlp
+from repro.nn.norms import apply_norm, init_norm
+from repro.nn.rglru import init_rglru_block, rglru_block, rglru_state_init
+from repro.models.common import (ModelBundle, ModelOutputs, init_value_head,
+                                 maybe_remat, stacked, value_head)
+from repro.sharding.ctx import constrain
+from repro.sharding.param import ArrayMaker, SpecMaker
+
+
+def _layout(cfg):
+    period = len(cfg.block_pattern)
+    n_scan = cfg.num_layers // period
+    n_rest = cfg.num_layers - n_scan * period
+    return period, n_scan, cfg.block_pattern[:n_rest]
+
+
+def _init_layer(mk, cfg, kind, name):
+    p = {
+        "norm1": init_norm(mk, cfg.d_model, cfg.norm, f"{name}.norm1",
+                           gemma_scale=cfg.gemma_scale),
+        "norm2": init_norm(mk, cfg.d_model, cfg.norm, f"{name}.norm2",
+                           gemma_scale=cfg.gemma_scale),
+        "mlp": init_mlp(mk, cfg.d_model, cfg.d_ff, f"{name}.mlp"),
+    }
+    if kind == "rglru":
+        p["mix"] = init_rglru_block(mk, cfg, f"{name}.rec")
+    else:
+        p["mix"] = init_attention(mk, cfg, f"{name}.attn")
+    return p
+
+
+def _layer(cfg, p, kind, x, positions, state, decode, index):
+    x = constrain(x, "act_batch", "act_res_seq", "act_embed")
+    h = apply_norm(p["norm1"], x, cfg.norm, cfg.norm_eps, cfg.gemma_scale)
+    if kind == "rglru":
+        h0, conv = (None, None) if state is None else state
+        y, new_state = rglru_block(cfg, p["mix"], h, h0=h0, conv_state=conv,
+                                   decode=decode)
+    else:
+        if decode:
+            y, new_state = decode_attention(cfg, p["mix"], h, index, state,
+                                            kind="local")
+        else:
+            y, new_state = attention(cfg, p["mix"], h, positions, kind="local",
+                                     cache=state)
+    x = x + y
+    h = apply_norm(p["norm2"], x, cfg.norm, cfg.norm_eps, cfg.gemma_scale)
+    return x + mlp(p["mlp"], h, cfg.act), new_state
+
+
+def _build(cfg, mk):
+    period, n_scan, rest = _layout(cfg)
+    smk = stacked(mk, n_scan)
+    p = {
+        "embed": init_embed(mk, cfg),
+        "main": {f"p{i}": _init_layer(smk, cfg, cfg.block_pattern[i], f"main{i}")
+                 for i in range(period)},
+        "final_norm": init_norm(mk, cfg.d_model, cfg.norm, "final_norm",
+                                gemma_scale=cfg.gemma_scale),
+        "value_head": init_value_head(mk, cfg.d_model),
+    }
+    for j, kind in enumerate(rest):
+        p[f"rest{j}"] = _init_layer(mk, cfg, kind, f"rest{j}")
+    return p
+
+
+def _state_entry(cfg, kind, batch, max_len, dtype):
+    if kind == "rglru":
+        return rglru_state_init(cfg, batch, dtype)
+    return make_cache(cfg, batch, max_len, "local", dtype)
+
+
+def rg_init_cache(cfg, batch, max_len, dtype=jnp.bfloat16):
+    period, n_scan, rest = _layout(cfg)
+    main = tuple(
+        jax.tree.map(lambda a: jnp.broadcast_to(a, (n_scan,) + a.shape).copy(),
+                     _state_entry(cfg, cfg.block_pattern[i], batch, max_len, dtype))
+        for i in range(period))
+    c = {"main": main, "index": jnp.zeros((), jnp.int32)}
+    for j, kind in enumerate(rest):
+        c[f"rest{j}"] = _state_entry(cfg, kind, batch, max_len, dtype)
+    return c
+
+
+def _run(cfg, params, x, positions, caches=None, mode="train"):
+    period, n_scan, rest = _layout(cfg)
+    decode = mode == "decode"
+    index = caches["index"] if (caches is not None and decode) else None
+    remat = cfg.remat if mode == "train" else "none"
+
+    def body(x, xs):
+        p_per, c_per = xs
+        new_states = []
+        for i in range(period):
+            st = None if c_per is None else c_per[i]
+            x, ns = _layer(cfg, p_per[f"p{i}"], cfg.block_pattern[i], x,
+                           positions, st, decode, index)
+            new_states.append(ns)
+        return x, (None if c_per is None else tuple(new_states))
+
+    new_caches = dict(caches) if caches is not None else None
+    if caches is None:
+        fn = maybe_remat(lambda x, p: body(x, (p, None)), remat)
+        x, _ = jax.lax.scan(fn, x, params["main"])
+    else:
+        x, ncs = jax.lax.scan(body, x, (params["main"], caches["main"]))
+        new_caches["main"] = ncs
+    for j, kind in enumerate(rest):
+        st = None if caches is None else caches[f"rest{j}"]
+        x, ns = _layer(cfg, params[f"rest{j}"], kind, x, positions, st,
+                       decode, index)
+        if caches is not None:
+            new_caches[f"rest{j}"] = ns
+    return x, new_caches
+
+
+def _outputs(cfg, params, x):
+    h = apply_norm(params["final_norm"], x, cfg.norm, cfg.norm_eps,
+                   cfg.gemma_scale)
+    logits = unembed(cfg, params["embed"], h, softcap=cfg.final_softcap)
+    return ModelOutputs(logits=logits, value=value_head(params["value_head"], h))
+
+
+def rg_forward(cfg, params, batch):
+    x = embed(cfg, params["embed"], batch["tokens"], scale_by_dim=cfg.embed_scale)
+    x, _ = _run(cfg, params, x, jnp.arange(x.shape[1]), None, mode="train")
+    return _outputs(cfg, params, x)
+
+
+def rg_prefill(cfg, params, batch, max_len, dtype=jnp.bfloat16):
+    x = embed(cfg, params["embed"], batch["tokens"], scale_by_dim=cfg.embed_scale)
+    s = x.shape[1]
+    caches = rg_init_cache(cfg, x.shape[0], max_len, dtype)
+    x, caches = _run(cfg, params, x, jnp.arange(s), caches, mode="prefill")
+    caches = dict(caches, index=jnp.array(s, jnp.int32))
+    return _outputs(cfg, params, x), caches
+
+
+def rg_decode_step(cfg, params, tokens_t, caches):
+    x = embed(cfg, params["embed"], tokens_t, scale_by_dim=cfg.embed_scale)
+    x, caches = _run(cfg, params, x, caches["index"][None], caches, mode="decode")
+    caches = dict(caches, index=caches["index"] + 1)
+    return _outputs(cfg, params, x), caches
+
+
+def make_recurrentgemma(cfg) -> ModelBundle:
+    return ModelBundle(
+        cfg=cfg,
+        init=lambda rng: _build(cfg, ArrayMaker(rng, jnp.dtype(cfg.param_dtype))),
+        logical_axes=lambda: _build(cfg, SpecMaker("axes")),
+        forward=lambda params, batch: rg_forward(cfg, params, batch),
+        init_cache=lambda batch, max_len, dtype=jnp.bfloat16:
+            rg_init_cache(cfg, batch, max_len, dtype),
+        prefill=lambda params, batch, max_len=None, dtype=jnp.bfloat16:
+            rg_prefill(cfg, params, batch, max_len, dtype),
+        decode_step=lambda params, tokens_t, caches:
+            rg_decode_step(cfg, params, tokens_t, caches),
+    )

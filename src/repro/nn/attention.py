@@ -1,0 +1,259 @@
+"""Multi-head attention with GQA, local windows, softcaps, qk-norm and caches.
+
+Sharding strategy (see DESIGN.md §5):
+  * train/prefill: Q heads are padded to a multiple of the TP degree
+    (``cfg.padded_heads``) and sharded on 'model'; KV heads are replicated
+    (every assigned config has kv_heads < 16) and expanded to Q heads by a
+    local repeat. Padded heads are masked after the attention sum, so the
+    logical math is exact and padded rows of wo receive zero gradient.
+  * decode: attention is *data-parallel* (DeepSeek-style DP attention): q is
+    resharded to batch-only, each shard attends over its own KV-cache slice,
+    and the output is resharded back for the TP out-projection. Decode
+    attention is memory-bound, so the tiny q reshard is cheaper than
+    replicating or padding the KV cache across the model axis.
+
+Implementations:
+  * ``ref``     — full-scores reference (oracle; small shapes).
+  * ``chunked`` — lax.scan over KV chunks with online softmax (flash-style
+    memory behaviour expressed in XLA; the dry-run default).
+  * the Pallas TPU kernel lives in ``repro.kernels.flash_attention`` and is
+    selected by ``ops.attention`` on TPU backends.
+"""
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn import init as inits
+from repro.nn.norms import init_norm, apply_norm
+from repro.nn.rope import apply_rope
+from repro.sharding.ctx import constrain
+
+NEG_INF = -2.0e38
+
+
+def init_attention(mk, cfg, name="attn", d_model=None):
+    d = d_model or cfg.d_model
+    hp, k, hd = cfg.padded_heads, cfg.num_kv_heads, cfg.head_dim
+    p = {
+        "wq": mk(f"{name}.wq", (d, hp, hd), ("embed", "heads", "head_dim"), inits.fan_in()),
+        "wk": mk(f"{name}.wk", (d, k, hd), ("embed", "kv_heads", "head_dim"), inits.fan_in()),
+        "wv": mk(f"{name}.wv", (d, k, hd), ("embed", "kv_heads", "head_dim"), inits.fan_in()),
+        "wo": mk(f"{name}.wo", (hp, hd, d), ("heads", "head_dim", "embed"),
+                 inits.fan_in(in_axes=(0, 1))),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = mk(f"{name}.bq", (hp, hd), ("heads", "head_dim"), inits.zeros)
+        p["bk"] = mk(f"{name}.bk", (k, hd), ("kv_heads", "head_dim"), inits.zeros)
+        p["bv"] = mk(f"{name}.bv", (k, hd), ("kv_heads", "head_dim"), inits.zeros)
+    if cfg.qk_norm:
+        p["q_norm"] = init_norm(mk, hd, cfg.norm, f"{name}.q_norm", axis="head_dim")
+        p["k_norm"] = init_norm(mk, hd, cfg.norm, f"{name}.k_norm", axis="head_dim")
+    return p
+
+
+def _head_mask(cfg, dtype):
+    hp = cfg.padded_heads
+    if hp == cfg.num_heads:
+        return None
+    return (jnp.arange(hp) < cfg.num_heads).astype(dtype)
+
+
+def _pos_mask(pos_q, pos_kv, kind, window):
+    """Additive mask (..., Q, KV) from absolute positions. pos_kv < 0 = empty."""
+    dq = pos_q[..., :, None]
+    dk = pos_kv[..., None, :]
+    ok = dk >= 0
+    if kind != "bidir":
+        ok &= dk <= dq
+    if kind == "local":
+        ok &= (dq - dk) < window
+    return jnp.where(ok, 0.0, NEG_INF)
+
+
+def _softcap(x, cap):
+    return cap * jnp.tanh(x / cap) if cap else x
+
+
+def qkv_project(cfg, p, x):
+    """x (B,S,d) -> q (B,S,Hp,hd), k,v (B,S,K,hd), with rope NOT yet applied."""
+    dt = x.dtype
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(dt))
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"].astype(dt))
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"].astype(dt))
+    if "bq" in p:
+        q, k, v = q + p["bq"].astype(dt), k + p["bk"].astype(dt), v + p["bv"].astype(dt)
+    if "q_norm" in p:
+        q = apply_norm(p["q_norm"], q, cfg.norm, cfg.norm_eps)
+        k = apply_norm(p["k_norm"], k, cfg.norm, cfg.norm_eps)
+    return q, k, v
+
+
+def _expand_kv(k, n_rep):
+    return jnp.repeat(k, n_rep, axis=2) if n_rep > 1 else k
+
+
+def attend_ref(q, k, v, pos_q, pos_kv, *, kind="global", window=0, scale=1.0,
+               softcap=None):
+    """Full-scores attention. q (B,Q,H,D); k,v (B,S,H,D) already head-expanded."""
+    s = jnp.einsum("bqhd,bshd->bhqs", q, k).astype(jnp.float32) * scale
+    s = _softcap(s, softcap)
+    s = s + _pos_mask(pos_q, pos_kv, kind, window)[:, None]
+    w = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqs,bshd->bqhd", w.astype(v.dtype), v)
+
+
+def attend_chunked(q, k, v, pos_q, pos_kv, *, kind="global", window=0, scale=1.0,
+                   softcap=None, chunk=1024):
+    """Online-softmax attention, scanning KV chunks; O(S*chunk) memory.
+
+    q (B,Q,H,D); k,v (B,S,K,D) *unexpanded* — the per-chunk expansion keeps
+    the repeated tensor O(chunk).
+    """
+    b, ql, h, d = q.shape
+    s_len, kh = k.shape[1], k.shape[2]
+    n_rep = h // kh
+    if s_len % chunk:
+        pad = chunk - s_len % chunk
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        pos_kv = jnp.pad(pos_kv, ((0, 0), (0, pad)), constant_values=-1)
+        s_len += pad
+    n = s_len // chunk
+    ks = jnp.moveaxis(k.reshape(b, n, chunk, kh, k.shape[-1]), 1, 0)
+    vs = jnp.moveaxis(v.reshape(b, n, chunk, kh, v.shape[-1]), 1, 0)
+    ps = jnp.moveaxis(pos_kv.reshape(b, n, chunk), 1, 0)
+
+    acc0 = jnp.zeros((b, ql, h, v.shape[-1]), jnp.float32)
+    m0 = jnp.full((b, h, ql), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, h, ql), jnp.float32)
+
+    def body(carry, xs):
+        acc, m, l = carry
+        kc, vc, pc = xs
+        kce = _expand_kv(kc, n_rep)
+        vce = _expand_kv(vc, n_rep)
+        s = jnp.einsum("bqhd,bchd->bhqc", q, kce).astype(jnp.float32) * scale
+        s = _softcap(s, softcap)
+        s = s + _pos_mask(pos_q, pc, kind, window)[:, None]
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l = l * corr + p.sum(axis=-1)
+        pv = jnp.einsum("bhqc,bchd->bqhd", p.astype(vce.dtype), vce).astype(jnp.float32)
+        acc = acc * jnp.moveaxis(corr, 1, 2)[..., None] + pv
+        return (acc, m_new, l), ()
+
+    (acc, m, l), _ = jax.lax.scan(body, (acc0, m0, l0), (ks, vs, ps))
+    out = acc / jnp.maximum(jnp.moveaxis(l, 1, 2)[..., None], 1e-30)
+    return out.astype(q.dtype)
+
+
+def attention(cfg, p, x, positions, *, kind="global", impl="auto",
+              cache: Optional[dict] = None, name_cache: Optional[str] = None):
+    """Training/prefill attention over a full sequence.
+
+    Returns (out (B,S,d), new_cache_entry or None). If `cache` is a dict to
+    fill (prefill), the rope-rotated k and raw v are written into it.
+    """
+    del name_cache
+    b, s, _ = x.shape
+    hp, k_heads, hd = cfg.padded_heads, cfg.num_kv_heads, cfg.head_dim
+    scale = cfg.attn_scale or 1.0 / math.sqrt(hd)
+    q, k, v = qkv_project(cfg, p, x)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    q = constrain(q, "act_batch", "act_seq", "act_heads", None)
+    window = cfg.local_window
+
+    if impl == "auto":
+        impl = "chunked" if s > 2048 else "ref"
+    if impl == "ref":
+        ke, ve = _expand_kv(k, hp // k_heads), _expand_kv(v, hp // k_heads)
+        pos_b = jnp.broadcast_to(positions, (b, s))
+        out = attend_ref(q, ke, ve, pos_b, pos_b, kind=kind, window=window,
+                         scale=scale, softcap=cfg.attn_softcap)
+    else:
+        pos_b = jnp.broadcast_to(positions, (b, s))
+        out = attend_chunked(q, k, v, pos_b, pos_b, kind=kind, window=window,
+                             scale=scale, softcap=cfg.attn_softcap)
+
+    hm = _head_mask(cfg, out.dtype)
+    if hm is not None:
+        out = out * hm[None, None, :, None]
+    out = constrain(out, "act_batch", "act_seq", "act_heads", None)
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(out.dtype))
+    new_cache = None
+    if cache is not None:
+        new_cache = _prefill_cache(cfg, cache, k, v, positions, kind)
+    return y, new_cache
+
+
+# ------------------------------ KV cache ---------------------------------
+
+def make_cache(cfg, batch, max_len, kind="global", dtype=jnp.bfloat16):
+    """Cache entry for one attention layer. Local layers use a ring buffer."""
+    size = min(max_len, cfg.local_window) if kind == "local" else max_len
+    return {
+        "k": jnp.zeros((batch, size, cfg.num_kv_heads, cfg.head_dim), dtype),
+        "v": jnp.zeros((batch, size, cfg.num_kv_heads, cfg.head_dim), dtype),
+        "pos": jnp.full((size,), -1, jnp.int32),
+    }
+
+
+def cache_specs(cfg, batch, max_len, kind="global", dtype=jnp.bfloat16):
+    c = jax.eval_shape(lambda: make_cache(cfg, batch, max_len, kind, dtype))
+    return c
+
+
+def _prefill_cache(cfg, cache, k, v, positions, kind):
+    size = cache["k"].shape[1]
+    s = k.shape[1]
+    if kind == "local" and s > size:
+        # keep the last `size` positions (ring layout: slot = pos % size)
+        k, v, positions = k[:, -size:], v[:, -size:], positions[-size:]
+        s = size
+    slot = positions % size if kind == "local" else positions
+    ck = cache["k"].at[:, slot].set(k.astype(cache["k"].dtype))
+    cv = cache["v"].at[:, slot].set(v.astype(cache["v"].dtype))
+    cpos = cache["pos"].at[slot].set(positions)
+    return {"k": ck, "v": cv, "pos": cpos}
+
+
+def decode_attention(cfg, p, x, index, cache, *, kind="global"):
+    """One-token decode step with DP attention.
+
+    x: (B, 1, d); index: scalar int32 (current position, uniform across
+    batch); cache: dict from make_cache. Returns (y (B,1,d), new_cache).
+    """
+    b = x.shape[0]
+    hp, k_heads, hd = cfg.padded_heads, cfg.num_kv_heads, cfg.head_dim
+    scale = cfg.attn_scale or 1.0 / math.sqrt(hd)
+    pos = index[None] if index.ndim == 0 else index
+    q, k, v = qkv_project(cfg, p, x)
+    q = apply_rope(q, pos, cfg.rope_theta)
+    k = apply_rope(k, pos, cfg.rope_theta)
+
+    size = cache["k"].shape[1]
+    slot = pos % size if kind == "local" else pos
+    ck = jax.lax.dynamic_update_slice_in_dim(cache["k"], k.astype(cache["k"].dtype), slot[0], axis=1)
+    cv = jax.lax.dynamic_update_slice_in_dim(cache["v"], v.astype(cache["v"].dtype), slot[0], axis=1)
+    cpos = jax.lax.dynamic_update_slice_in_dim(cache["pos"], pos, slot[0], axis=0)
+
+    # DP attention: batch-only sharding for the cache-wide contraction.
+    q = constrain(q, "act_batch", None, None, None)
+    ke = _expand_kv(ck, hp // k_heads)
+    ve = _expand_kv(cv, hp // k_heads)
+    pos_q = jnp.broadcast_to(pos[None, :], (b, 1))
+    pos_kv = jnp.broadcast_to(cpos[None, :], (b, size))
+    out = attend_ref(q, ke, ve, pos_q, pos_kv, kind=kind,
+                     window=cfg.local_window, scale=scale,
+                     softcap=cfg.attn_softcap)
+    hm = _head_mask(cfg, out.dtype)
+    if hm is not None:
+        out = out * hm[None, None, :, None]
+    out = constrain(out, "act_batch", None, "act_heads", None)
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(out.dtype))
+    return y, {"k": ck, "v": cv, "pos": cpos}

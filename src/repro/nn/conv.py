@@ -1,0 +1,37 @@
+"""Causal depthwise temporal conv1d (Mamba / short-conv blocks), with a
+decode-time rolling buffer."""
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn import init as inits
+
+
+def init_causal_conv(mk, channels, width, name="conv"):
+    return {
+        "w": mk(f"{name}.w", (width, channels), ("conv", "mlp"), inits.fan_in()),
+        "b": mk(f"{name}.b", (channels,), ("mlp",), inits.zeros),
+    }
+
+
+def causal_conv(p, x):
+    """x (B,S,C) -> (B,S,C); depthwise causal conv of width W."""
+    w = p["w"].astype(x.dtype)                       # (W, C)
+    width = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (width - 1, 0), (0, 0)))
+    # sum of shifted slices: cheap, fusion-friendly, and scan-free
+    s = x.shape[1]
+    out = sum(xp[:, i:i + s] * w[i] for i in range(width))
+    return out + p["b"].astype(x.dtype)
+
+
+def conv_state_init(batch, channels, width, dtype):
+    return jnp.zeros((batch, width - 1, channels), dtype)
+
+
+def causal_conv_step(p, x_t, state):
+    """x_t (B,1,C), state (B,W-1,C) -> (y_t, new_state)."""
+    w = p["w"].astype(x_t.dtype)
+    buf = jnp.concatenate([state, x_t], axis=1)      # (B, W, C)
+    y = jnp.einsum("bwc,wc->bc", buf, w)[:, None] + p["b"].astype(x_t.dtype)
+    return y, buf[:, 1:]

@@ -1,0 +1,37 @@
+"""Token embedding table (vocab padded to the TP degree) + logits head."""
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.nn import init as inits
+from repro.sharding.ctx import constrain
+
+
+def init_embed(mk, cfg, name="embed"):
+    p = {"table": mk(f"{name}.table", (cfg.padded_vocab, cfg.d_model),
+                     ("vocab", "embed"), inits.normal(1.0))}
+    if not cfg.tie_embeddings:
+        p["unembed"] = mk(f"{name}.unembed", (cfg.d_model, cfg.padded_vocab),
+                          ("embed", "vocab"), inits.fan_in())
+    return p
+
+
+def embed(cfg, p, tokens, scale_by_dim=False):
+    x = p["table"][tokens]
+    if scale_by_dim:  # gemma convention
+        x = x * np.sqrt(cfg.d_model)
+    return constrain(x.astype(jnp.dtype(cfg.compute_dtype)),
+                     "act_batch", "act_seq", "act_embed")
+
+
+def unembed(cfg, p, x, softcap=None):
+    """x (B,S,d) -> logits (B,S,padded_vocab); padded ids are masked to -inf."""
+    dt = x.dtype
+    w = p["table"].T if "unembed" not in p else p["unembed"]
+    logits = (x @ w.astype(dt)).astype(jnp.float32)
+    if softcap:
+        logits = softcap * jnp.tanh(logits / softcap)
+    if cfg.padded_vocab != cfg.vocab_size:
+        mask = jnp.arange(cfg.padded_vocab) < cfg.vocab_size
+        logits = jnp.where(mask, logits, -1e30)
+    return constrain(logits, "act_batch", "act_seq", "act_vocab")

@@ -1,0 +1,60 @@
+"""Weight initializers (pure functions of (key, shape))."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+
+def normal(stddev=0.02):
+    def init(key, shape):
+        return jax.random.normal(key, shape) * stddev
+    return init
+
+
+def fan_in(scale=1.0, in_axes=None):
+    """Truncated-normal scaled by 1/sqrt(fan_in).
+
+    in_axes: which axes of `shape` constitute fan-in (default: all but last).
+    """
+    def init(key, shape):
+        axes = in_axes if in_axes is not None else tuple(range(len(shape) - 1))
+        fan = int(np.prod([shape[a] for a in axes])) or 1
+        std = scale / np.sqrt(fan)
+        return jax.random.truncated_normal(key, -2.0, 2.0, shape) * std
+    return init
+
+
+def zeros(key, shape):
+    return jnp.zeros(shape)
+
+
+def ones(key, shape):
+    return jnp.ones(shape)
+
+
+def constant(v):
+    def init(key, shape):
+        return jnp.full(shape, v)
+    return init
+
+
+def lru_a_init(min_rad=0.9, max_rad=0.999):
+    """RG-LRU: initialize Λ so that a = sigmoid(Λ)^(c) has radius in range."""
+    def init(key, shape):
+        u = jax.random.uniform(key, shape)
+        a2 = min_rad ** 2 + u * (max_rad ** 2 - min_rad ** 2)
+        # a = exp(-c * softplus(Λ)) in our parameterization; invert for Λ
+        a = jnp.sqrt(a2)
+        c = 8.0
+        softplus_lam = -jnp.log(a) / c
+        return jnp.log(jnp.expm1(jnp.maximum(softplus_lam, 1e-8)))
+    return init
+
+
+def dt_bias_init(dt_min=1e-3, dt_max=1e-1):
+    """Mamba: dt bias so softplus(bias) is log-uniform in [dt_min, dt_max]."""
+    def init(key, shape):
+        u = jax.random.uniform(key, shape)
+        dt = jnp.exp(u * (np.log(dt_max) - np.log(dt_min)) + np.log(dt_min))
+        return dt + jnp.log(-jnp.expm1(-dt))
+    return init

@@ -1,0 +1,135 @@
+"""Multi-head Latent Attention (DeepSeek-V2/V3).
+
+Train/prefill use the 'naive' form (materialize per-head K/V from the
+compressed latent). Decode uses the *absorbed* form: the KV up-projections
+are folded into the query / output sides, so the per-token cache is just
+(kv_lora_rank + qk_rope_head_dim) floats — MLA's reason to exist.
+
+Heads (128) divide the model axis (16), so no head padding is needed here.
+"""
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn import init as inits
+from repro.nn.norms import init_norm, apply_norm
+from repro.nn.rope import apply_rope
+from repro.sharding.ctx import constrain
+
+NEG_INF = -2.0e38
+
+
+def init_mla(mk, cfg, name="mla"):
+    d, h = cfg.d_model, cfg.num_heads
+    qr, kvr = cfg.q_lora_rank, cfg.kv_lora_rank
+    dn, dr, dv = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    p = {
+        "wdq": mk(f"{name}.wdq", (d, qr), ("embed", "qk_rank"), inits.fan_in()),
+        "q_norm": init_norm(mk, qr, cfg.norm, f"{name}.q_norm", axis="qk_rank"),
+        "wuq": mk(f"{name}.wuq", (qr, h, dn + dr), ("qk_rank", "heads", "head_dim"),
+                  inits.fan_in()),
+        "wdkv": mk(f"{name}.wdkv", (d, kvr + dr), ("embed", "qk_rank"), inits.fan_in()),
+        "kv_norm": init_norm(mk, kvr, cfg.norm, f"{name}.kv_norm", axis="qk_rank"),
+        "wuk": mk(f"{name}.wuk", (kvr, h, dn), ("qk_rank", "heads", "head_dim"),
+                  inits.fan_in()),
+        "wuv": mk(f"{name}.wuv", (kvr, h, dv), ("qk_rank", "heads", "head_dim"),
+                  inits.fan_in()),
+        "wo": mk(f"{name}.wo", (h, dv, d), ("heads", "head_dim", "embed"),
+                 inits.fan_in(in_axes=(0, 1))),
+    }
+    return p
+
+
+def _project_q(cfg, p, x, positions):
+    dt = x.dtype
+    dn, dr = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim
+    cq = apply_norm(p["q_norm"], x @ p["wdq"].astype(dt), cfg.norm, cfg.norm_eps)
+    q = jnp.einsum("bsr,rhk->bshk", cq, p["wuq"].astype(dt))
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def _project_kv_latent(cfg, p, x, positions):
+    dt = x.dtype
+    kvr, dr = cfg.kv_lora_rank, cfg.qk_rope_head_dim
+    ckv = x @ p["wdkv"].astype(dt)                    # (B,S,kvr+dr)
+    c_kv = apply_norm(p["kv_norm"], ckv[..., :kvr], cfg.norm, cfg.norm_eps)
+    k_rope = apply_rope(ckv[..., kvr:], positions, cfg.rope_theta)  # shared head
+    return c_kv, k_rope
+
+
+def mla_attention(cfg, p, x, positions, *, cache=None):
+    """Full-sequence MLA (naive form). Returns (y, cache_entry or None)."""
+    b, s, _ = x.shape
+    h = cfg.num_heads
+    dn, dr, dv = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    scale = 1.0 / math.sqrt(dn + dr)
+    q_nope, q_rope = _project_q(cfg, p, x, positions)
+    c_kv, k_rope = _project_kv_latent(cfg, p, x, positions)
+    dt = x.dtype
+    k_nope = jnp.einsum("bsr,rhk->bshk", c_kv, p["wuk"].astype(dt))
+    v = jnp.einsum("bsr,rhk->bshk", c_kv, p["wuv"].astype(dt))
+
+    # naive form: per-head K = [k_nope ; shared k_rope], Q = [q_nope ; q_rope]
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate([k_nope, jnp.broadcast_to(k_rope[:, :, None, :],
+                                                  (b, s, h, dr))], axis=-1)
+    q = constrain(q, "act_batch", "act_seq", "act_heads", None)
+    pos = jnp.broadcast_to(positions, (b, s))
+    from repro.nn.attention import attend_chunked, attend_ref  # local import
+    if s > 2048:
+        out = attend_chunked(q, k, v, pos, pos, scale=scale)
+    else:
+        out = attend_ref(q, k, v, pos, pos, scale=scale)
+    out = constrain(out, "act_batch", "act_seq", "act_heads", None)
+    y = jnp.einsum("bqhd,hdk->bqk", out, p["wo"].astype(dt))
+    new_cache = None
+    if cache is not None:
+        ck = cache["c_kv"].at[:, positions].set(c_kv.astype(cache["c_kv"].dtype))
+        cr = cache["k_rope"].at[:, positions].set(k_rope.astype(cache["k_rope"].dtype))
+        cpos = cache["pos"].at[positions].set(positions)
+        new_cache = {"c_kv": ck, "k_rope": cr, "pos": cpos}
+    return y, new_cache
+
+
+def make_mla_cache(cfg, batch, max_len, dtype=jnp.bfloat16):
+    return {
+        "c_kv": jnp.zeros((batch, max_len, cfg.kv_lora_rank), dtype),
+        "k_rope": jnp.zeros((batch, max_len, cfg.qk_rope_head_dim), dtype),
+        "pos": jnp.full((max_len,), -1, jnp.int32),
+    }
+
+
+def mla_decode(cfg, p, x, index, cache):
+    """One-token decode with the absorbed form over the compressed cache."""
+    b = x.shape[0]
+    dn, dr, dv = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    kvr = cfg.kv_lora_rank
+    scale = 1.0 / math.sqrt(dn + dr)
+    pos = index[None] if index.ndim == 0 else index
+    dt = x.dtype
+
+    q_nope, q_rope = _project_q(cfg, p, x, pos)       # (B,1,H,dn), (B,1,H,dr)
+    c_kv_t, k_rope_t = _project_kv_latent(cfg, p, x, pos)
+    ck = jax.lax.dynamic_update_slice_in_dim(cache["c_kv"], c_kv_t.astype(cache["c_kv"].dtype), pos[0], axis=1)
+    cr = jax.lax.dynamic_update_slice_in_dim(cache["k_rope"], k_rope_t.astype(cache["k_rope"].dtype), pos[0], axis=1)
+    cpos = jax.lax.dynamic_update_slice_in_dim(cache["pos"], pos, pos[0], axis=0)
+
+    # absorb wuk into q: q_eff (B,H,kvr) = q_nope @ wuk^T
+    q_eff = jnp.einsum("bqhd,rhd->bqhr", q_nope, p["wuk"].astype(dt))[:, 0]
+    q_eff = constrain(q_eff, "act_batch", "act_heads", None)
+    s_lat = jnp.einsum("bhr,bsr->bhs", q_eff, ck.astype(dt))
+    s_rope = jnp.einsum("bhd,bsd->bhs", q_rope[:, 0], cr.astype(dt))
+    scores = (s_lat + s_rope).astype(jnp.float32) * scale
+    valid = (cpos >= 0) & (cpos <= pos[0])
+    scores = jnp.where(valid[None, None, :], scores, NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1).astype(dt)
+    ctx = jnp.einsum("bhs,bsr->bhr", w, ck.astype(dt))          # (B,H,kvr)
+    # absorb wuv on the output side
+    out = jnp.einsum("bhr,rhd->bhd", ctx, p["wuv"].astype(dt))  # (B,H,dv)
+    out = constrain(out, "act_batch", "act_heads", None)
+    y = jnp.einsum("bhd,hdk->bk", out, p["wo"].astype(dt))[:, None]
+    return y, {"c_kv": ck, "k_rope": cr, "pos": cpos}

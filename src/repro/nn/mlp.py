@@ -1,0 +1,42 @@
+"""Gated MLP (SwiGLU / GeGLU) and plain MLP blocks."""
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn import init as inits
+from repro.sharding.ctx import constrain
+
+ACTS = {
+    "silu": jax.nn.silu,
+    "gelu": jax.nn.gelu,
+    "gelu_tanh": lambda x: jax.nn.gelu(x, approximate=True),
+    "relu": jax.nn.relu,
+}
+
+
+def init_mlp(mk, d, d_ff, name="mlp", gated=True, bias=False):
+    p = {
+        "wi": mk(f"{name}.wi", (d, d_ff), ("embed", "mlp"), inits.fan_in()),
+        "wo": mk(f"{name}.wo", (d_ff, d), ("mlp", "embed"), inits.fan_in()),
+    }
+    if gated:
+        p["wg"] = mk(f"{name}.wg", (d, d_ff), ("embed", "mlp"), inits.fan_in())
+    if bias:
+        p["bi"] = mk(f"{name}.bi", (d_ff,), ("mlp",), inits.zeros)
+        p["bo"] = mk(f"{name}.bo", (d,), ("embed",), inits.zeros)
+    return p
+
+
+def mlp(p, x, act="silu"):
+    dt = x.dtype
+    h = x @ p["wi"].astype(dt)
+    if "bi" in p:
+        h = h + p["bi"].astype(dt)
+    h = ACTS[act](h)
+    if "wg" in p:
+        h = h * (x @ p["wg"].astype(dt))
+    h = constrain(h, "act_batch", "act_seq", "act_mlp")
+    y = h @ p["wo"].astype(dt)
+    if "bo" in p:
+        y = y + p["bo"].astype(dt)
+    return y

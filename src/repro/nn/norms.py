@@ -1,0 +1,29 @@
+"""RMSNorm / LayerNorm, with the gemma-style (1+scale) option."""
+
+import jax.numpy as jnp
+
+from repro.nn import init as inits
+
+
+def init_norm(mk, d, kind="rmsnorm", name="norm", gemma_scale=False, axis="embed"):
+    p = {"scale": mk(f"{name}.scale", (d,), (axis,),
+                    inits.zeros if gemma_scale else inits.ones)}
+    if kind == "layernorm":
+        p["bias"] = mk(f"{name}.bias", (d,), (axis,), inits.zeros)
+    return p
+
+
+def apply_norm(p, x, kind="rmsnorm", eps=1e-6, gemma_scale=False):
+    """Normalization in fp32, cast back to the input dtype."""
+    xf = x.astype(jnp.float32)
+    if kind == "rmsnorm":
+        y = xf * (jnp.mean(jnp.square(xf), axis=-1, keepdims=True) + eps) ** -0.5
+    else:
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.mean(jnp.square(xf - mu), axis=-1, keepdims=True)
+        y = (xf - mu) / jnp.sqrt(var + eps)
+    scale = p["scale"].astype(jnp.float32)
+    y = y * (1.0 + scale) if gemma_scale else y * scale
+    if "bias" in p:
+        y = y + p["bias"].astype(jnp.float32)
+    return y.astype(x.dtype)

@@ -1,0 +1,38 @@
+"""LSTM cell (for the paper's R2D2 conv-LSTM agent)."""
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn import init as inits
+
+
+def init_lstm(mk, d_in, d_hidden, name="lstm"):
+    return {
+        "wi": mk(f"{name}.wi", (d_in, 4 * d_hidden), (None, None), inits.fan_in()),
+        "wh": mk(f"{name}.wh", (d_hidden, 4 * d_hidden), (None, None),
+                 inits.fan_in()),
+        "b": mk(f"{name}.b", (4 * d_hidden,), (None,), inits.zeros),
+    }
+
+
+def lstm_step(p, x, state):
+    """x (B, d_in); state (h, c) each (B, d_hidden)."""
+    h, c = state
+    gates = x @ p["wi"] + h @ p["wh"] + p["b"]
+    i, f, g, o = jnp.split(gates, 4, axis=-1)
+    c = jax.nn.sigmoid(f + 1.0) * c + jax.nn.sigmoid(i) * jnp.tanh(g)
+    h = jax.nn.sigmoid(o) * jnp.tanh(c)
+    return h, (h, c)
+
+
+def lstm_scan(p, xs, state):
+    """xs (B, T, d_in) -> (hs (B, T, d_hidden), final_state)."""
+    def body(st, x):
+        h, st = lstm_step(p, x, st)
+        return st, h
+    state, hs = jax.lax.scan(body, state, jnp.moveaxis(xs, 1, 0))
+    return jnp.moveaxis(hs, 0, 1), state
+
+
+def lstm_state_init(batch, d_hidden, dtype=jnp.float32):
+    return (jnp.zeros((batch, d_hidden), dtype), jnp.zeros((batch, d_hidden), dtype))

@@ -1,0 +1,92 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin).
+
+Recurrence, per channel:
+    r_t = sigmoid(W_a x_t + b_a)            (recurrence gate)
+    i_t = sigmoid(W_x x_t + b_x)            (input gate)
+    log a_t = -c * softplus(Lambda) * r_t   (c = 8)
+    h_t = a_t h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+Training uses an associative scan over time (log-depth); decode carries h.
+The full block is: x,y = proj(u); y = gelu(y); x = conv1d(x); h = RGLRU(x);
+out = proj_out(h * y).
+"""
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn import init as inits
+from repro.nn.conv import init_causal_conv, causal_conv, causal_conv_step, conv_state_init
+from repro.sharding.ctx import constrain
+
+C_FACTOR = 8.0
+
+
+def init_rglru_block(mk, cfg, name="rec"):
+    d, w = cfg.d_model, cfg.lru_width
+    return {
+        "wx": mk(f"{name}.wx", (d, w), ("embed", "mlp"), inits.fan_in()),
+        "wy": mk(f"{name}.wy", (d, w), ("embed", "mlp"), inits.fan_in()),
+        "conv": init_causal_conv(mk, w, 4, f"{name}.conv"),
+        "gate_a": mk(f"{name}.gate_a", (w, w), ("mlp", None), inits.fan_in()),
+        "ba": mk(f"{name}.ba", (w,), ("mlp",), inits.zeros),
+        "gate_x": mk(f"{name}.gate_x", (w, w), ("mlp", None), inits.fan_in()),
+        "bx": mk(f"{name}.bx", (w,), ("mlp",), inits.zeros),
+        "lam": mk(f"{name}.lam", (w,), ("mlp",), inits.lru_a_init()),
+        "wo": mk(f"{name}.wo", (w, d), ("mlp", "embed"), inits.fan_in()),
+    }
+
+
+def _gates(p, x):
+    xf = x.astype(jnp.float32)
+    r = jax.nn.sigmoid(xf @ p["gate_a"].astype(jnp.float32) + p["ba"])
+    i = jax.nn.sigmoid(xf @ p["gate_x"].astype(jnp.float32) + p["bx"])
+    log_a = -C_FACTOR * jax.nn.softplus(p["lam"]) * r          # (B,S,W) <= 0
+    a = jnp.exp(log_a)
+    gated_x = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) * (i * xf)
+    return a, gated_x
+
+
+def rglru(p, x, h0=None):
+    """x (B,S,W) -> (y (B,S,W), h_last (B,W)); associative scan over S."""
+    a, b = _gates(p, x)
+    if h0 is not None:
+        # fold the carried state in as a virtual step 0
+        a = jnp.concatenate([jnp.ones_like(a[:, :1]), a], axis=1)
+        b = jnp.concatenate([h0[:, None].astype(b.dtype), b], axis=1)
+
+    def combine(left, right):
+        (a1, b1), (a2, b2) = left, right
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    if h0 is not None:
+        h = h[:, 1:]
+    return h.astype(x.dtype), h[:, -1]
+
+
+def rglru_block(cfg, p, u, h0=None, conv_state=None, decode=False):
+    """Full recurrent block. Returns (out, (h_last, conv_state))."""
+    dt = u.dtype
+    x = u @ p["wx"].astype(dt)
+    y = jax.nn.gelu(u @ p["wy"].astype(dt))
+    x = constrain(x, "act_batch", "act_seq", "act_mlp")
+    if decode:
+        x, conv_state = causal_conv_step(p["conv"], x, conv_state)
+        a, b = _gates(p, x)
+        h = a * h0[:, None, :].astype(jnp.float32) + b
+        out_h, h_last = h.astype(dt), h[:, 0]
+    else:
+        if conv_state is not None:
+            # keep last W-1 *pre-conv* inputs for a later decode handoff
+            tail = x[:, -conv_state.shape[1]:].astype(conv_state.dtype)
+            conv_state = jnp.concatenate(
+                [conv_state[:, tail.shape[1]:], tail], axis=1)
+        x = causal_conv(p["conv"], x)
+        out_h, h_last = rglru(p, x, h0)
+    out = (out_h * y) @ p["wo"].astype(dt)
+    return out, (h_last, conv_state)
+
+
+def rglru_state_init(cfg, batch, dtype=jnp.float32):
+    return (jnp.zeros((batch, cfg.lru_width), jnp.float32),
+            conv_state_init(batch, cfg.lru_width, 4, dtype))

@@ -1,0 +1,166 @@
+"""Mamba2 SSD (state-space duality) layer.
+
+Chunked algorithm (the paper's Algorithm 1, TPU-adapted): the sequence is
+split into chunks of length L. Within a chunk the output is a masked,
+decay-weighted attention-like matmul (MXU-friendly); across chunks a small
+scan carries the (heads, headdim, state) SSM state. The pure recurrence
+(``ssd_ref`` in kernels/ref.py) is the oracle; the Pallas kernel
+(kernels/ssd_scan.py) implements the intra-chunk part with VMEM tiling.
+
+Shapes: x (B,S,H,P), dt (B,S,H), A (H,), B/C (B,S,G,N) with G groups.
+State: (B,H,P,N).
+"""
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn import init as inits
+from repro.nn.conv import (init_causal_conv, causal_conv, causal_conv_step,
+                           conv_state_init)
+from repro.nn.norms import init_norm, apply_norm
+from repro.sharding.ctx import constrain
+
+
+def init_ssd_layer(mk, cfg, name="ssd"):
+    d, din = cfg.d_model, cfg.ssm_dinner
+    g, ns, nh = cfg.ssm_ngroups, cfg.ssm_state, cfg.ssm_nheads
+    conv_ch = din + 2 * g * ns
+    return {
+        "in_proj": mk(f"{name}.in_proj", (d, 2 * din + 2 * g * ns + nh),
+                      ("embed", "mlp"), inits.fan_in()),
+        "conv": init_causal_conv(mk, conv_ch, cfg.ssm_conv, f"{name}.conv"),
+        "A_log": mk(f"{name}.A_log", (nh,), ("heads",),
+                    lambda k, s: jnp.log(jax.random.uniform(k, s, minval=1.0, maxval=16.0))),
+        "D": mk(f"{name}.D", (nh,), ("heads",), inits.ones),
+        "dt_bias": mk(f"{name}.dt_bias", (nh,), ("heads",), inits.dt_bias_init()),
+        "norm": init_norm(mk, din, "rmsnorm", f"{name}.norm", axis="mlp"),
+        "out_proj": mk(f"{name}.out_proj", (din, d), ("mlp", "embed"), inits.fan_in()),
+    }
+
+
+def _split_in_proj(cfg, zxbcdt):
+    din, g, ns, nh = cfg.ssm_dinner, cfg.ssm_ngroups, cfg.ssm_state, cfg.ssm_nheads
+    z = zxbcdt[..., :din]
+    xbc = zxbcdt[..., din:din + din + 2 * g * ns]
+    dt = zxbcdt[..., -nh:]
+    return z, xbc, dt
+
+
+def _split_xbc(cfg, xbc):
+    din, g, ns = cfg.ssm_dinner, cfg.ssm_ngroups, cfg.ssm_state
+    x = xbc[..., :din]
+    bmat = xbc[..., din:din + g * ns]
+    cmat = xbc[..., din + g * ns:]
+    return x, bmat, cmat
+
+
+def ssd_chunked(x, dt, a, bmat, cmat, chunk, h0=None):
+    """Chunked SSD scan.
+
+    x (B,S,H,P), dt (B,S,H) [post-softplus], a (H,) negative, b/c (B,S,G,N).
+    Returns (y (B,S,H,P), final_state (B,H,P,N)).
+    """
+    bsz, s, h, p = x.shape
+    g, n = bmat.shape[2], bmat.shape[3]
+    rep = h // g
+    if s % chunk:
+        pad = chunk - s % chunk
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        bmat = jnp.pad(bmat, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        cmat = jnp.pad(cmat, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    nc = x.shape[1] // chunk
+    xc = x.reshape(bsz, nc, chunk, h, p)
+    dtc = dt.reshape(bsz, nc, chunk, h)
+    bc = jnp.repeat(bmat.reshape(bsz, nc, chunk, g, n), rep, axis=3)
+    cc = jnp.repeat(cmat.reshape(bsz, nc, chunk, g, n), rep, axis=3)
+
+    da = dtc * a                                   # (B,nc,L,H) decay increments
+    cs = jnp.cumsum(da, axis=2)                    # within-chunk cumulative
+    seg_total = cs[:, :, -1]                       # (B,nc,H)
+
+    # --- intra-chunk (quadratic in L, MXU-friendly) ---
+    # M[t,s] = (C_t . B_s) * exp(cs_t - cs_s) * dt_s   for s <= t
+    scores = jnp.einsum("bclhn,bcmhn->bchlm", cc, bc)     # (B,nc,H,L,L)
+    decay = cs[..., :, None, :] - cs[..., None, :, :]     # t minus s: (B,nc,L,L,H)
+    decay = jnp.moveaxis(decay, -1, 2)                    # (B,nc,H,L,L)
+    causal = jnp.tril(jnp.ones((chunk, chunk), bool))
+    m = scores * jnp.exp(jnp.where(causal, decay, -jnp.inf)) \
+        * jnp.moveaxis(dtc, -1, 2)[..., None, :]          # weight by dt_s
+    y_intra = jnp.einsum("bchlm,bcmhp->bclhp", m, xc)
+
+    # --- chunk summary states: S_c = sum_s exp(cs_last - cs_s) dt_s x_s B_s ---
+    w = jnp.exp(seg_total[..., None, :] - cs) * dtc       # (B,nc,L,H)
+    s_chunk = jnp.einsum("bclh,bclhp,bclhn->bchpn", w, xc, bc)
+
+    # --- inter-chunk recurrence (scan over chunks) ---
+    seg = jnp.exp(seg_total)                              # (B,nc,H)
+    init = h0 if h0 is not None else jnp.zeros((bsz, h, p, n), jnp.float32)
+
+    def body(state, inp):
+        seg_c, s_c = inp
+        prev = state
+        state = seg_c[..., None, None] * state + s_c
+        return state, prev
+
+    seg_t = jnp.moveaxis(seg, 1, 0)
+    s_chunk_t = jnp.moveaxis(s_chunk.astype(jnp.float32), 1, 0)
+    final, prev_states = jax.lax.scan(body, init, (seg_t, s_chunk_t))
+    prev_states = jnp.moveaxis(prev_states, 0, 1)         # (B,nc,H,P,N)
+
+    # --- inter-chunk contribution: y_t += exp(cs_t) C_t . S_{c-1} ---
+    y_inter = jnp.einsum("bclhn,bchpn->bclhp", cc, prev_states.astype(cc.dtype)) \
+        * jnp.exp(cs)[..., None]
+    y = (y_intra + y_inter).reshape(bsz, nc * chunk, h, p)[:, :s]
+    return y.astype(x.dtype), final
+
+
+def ssd_layer(cfg, p, u, state=None, conv_state=None, decode=False):
+    """Full Mamba2 layer. u (B,S,d). Returns (out, (ssm_state, conv_state))."""
+    dt_ = u.dtype
+    zxbcdt = u @ p["in_proj"].astype(dt_)
+    z, xbc, dtraw = _split_in_proj(cfg, zxbcdt)
+    if decode:
+        xbc, conv_state = causal_conv_step(p["conv"], xbc, conv_state)
+    else:
+        if conv_state is not None:
+            # keep the last W-1 *pre-conv* inputs for a later decode handoff
+            tail = xbc[:, -conv_state.shape[1]:].astype(conv_state.dtype)
+            conv_state = jnp.concatenate(
+                [conv_state[:, tail.shape[1]:], tail], axis=1)
+        xbc = causal_conv(p["conv"], xbc)
+    xbc = jax.nn.silu(xbc)
+    x, bmat, cmat = _split_xbc(cfg, xbc)
+    bsz, s = u.shape[0], u.shape[1]
+    h, pd, g, n = cfg.ssm_nheads, cfg.ssm_headdim, cfg.ssm_ngroups, cfg.ssm_state
+    x = x.reshape(bsz, s, h, pd)
+    x = constrain(x, "act_batch", "act_seq", "act_heads", None)
+    bmat = bmat.reshape(bsz, s, g, n)
+    cmat = cmat.reshape(bsz, s, g, n)
+    dt = jax.nn.softplus(dtraw.astype(jnp.float32) + p["dt_bias"])
+    a = -jnp.exp(p["A_log"].astype(jnp.float32))
+
+    if decode:
+        # one-step recurrence: state (B,H,P,N)
+        da = jnp.exp(dt[:, 0] * a)                        # (B,H)
+        bx = jnp.einsum("bhp,bhn,bh->bhpn", x[:, 0],
+                        jnp.repeat(bmat[:, 0], h // g, axis=1), dt[:, 0])
+        state = da[..., None, None] * state + bx
+        y = jnp.einsum("bhn,bhpn->bhp",
+                       jnp.repeat(cmat[:, 0], h // g, axis=1), state)[:, None]
+        y = y.astype(dt_)
+    else:
+        y, state = ssd_chunked(x, dt, a, bmat, cmat, cfg.ssm_chunk, h0=state)
+    y = y + x * p["D"].astype(dt_)[None, None, :, None]
+    y = y.reshape(bsz, s, cfg.ssm_dinner)
+    y = apply_norm(p["norm"], y * jax.nn.silu(z), "rmsnorm", cfg.norm_eps)
+    out = y @ p["out_proj"].astype(dt_)
+    return out, (state, conv_state)
+
+
+def ssd_state_init(cfg, batch, dtype=jnp.float32):
+    h, pd, n = cfg.ssm_nheads, cfg.ssm_headdim, cfg.ssm_state
+    g = cfg.ssm_ngroups
+    return (jnp.zeros((batch, h, pd, n), jnp.float32),
+            conv_state_init(batch, cfg.ssm_dinner + 2 * g * cfg.ssm_state,
+                            cfg.ssm_conv, dtype))

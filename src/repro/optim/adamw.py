@@ -1,0 +1,89 @@
+"""AdamW / SGD in pure JAX, with low-precision moment support (the
+distributed-optimization trick the 671B config uses to fit ZeRO-1 states
+in HBM) and global-norm gradient clipping.
+"""
+
+from dataclasses import dataclass
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.utils.tree import global_norm
+
+
+@dataclass(frozen=True)
+class Optimizer:
+    init: Callable      # params -> opt_state
+    update: Callable    # (grads, opt_state, params, step) -> (updates, opt_state)
+
+
+def _clip_by_global_norm(grads, max_norm):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-12))
+    return jax.tree.map(lambda g: g * scale, grads), norm
+
+
+def adamw(lr, *, b1=0.9, b2=0.95, eps=1e-8, weight_decay=0.0,
+          max_grad_norm: Optional[float] = 1.0, moment_dtype=jnp.float32):
+    """lr: float or callable(step) -> float."""
+    lr_fn = lr if callable(lr) else (lambda _: lr)
+
+    def init(params):
+        zeros = lambda p: jnp.zeros(p.shape, moment_dtype)
+        return {"m": jax.tree.map(zeros, params),
+                "v": jax.tree.map(zeros, params)}
+
+    def update(grads, state, params, step):
+        gnorm = jnp.zeros(())
+        if max_grad_norm is not None:
+            grads, gnorm = _clip_by_global_norm(grads, max_grad_norm)
+        stepf = step.astype(jnp.float32) + 1.0
+        bc1 = 1.0 - b1 ** stepf
+        bc2 = 1.0 - b2 ** stepf
+
+        def upd(g, m, v, p):
+            gf = g.astype(jnp.float32)
+            m32, v32 = m.astype(jnp.float32), v.astype(jnp.float32)
+            m32 = b1 * m32 + (1.0 - b1) * gf
+            v32 = b2 * v32 + (1.0 - b2) * jnp.square(gf)
+            mh, vh = m32 / bc1, v32 / bc2
+            u = mh / (jnp.sqrt(vh) + eps)
+            if weight_decay:
+                u = u + weight_decay * p.astype(jnp.float32)
+            u = -lr_fn(step) * u
+            return u.astype(p.dtype), m32.astype(moment_dtype), v32.astype(moment_dtype)
+
+        out = jax.tree.map(upd, grads, state["m"], state["v"], params)
+        updates = jax.tree.map(lambda t: t[0], out, is_leaf=lambda t: isinstance(t, tuple))
+        m = jax.tree.map(lambda t: t[1], out, is_leaf=lambda t: isinstance(t, tuple))
+        v = jax.tree.map(lambda t: t[2], out, is_leaf=lambda t: isinstance(t, tuple))
+        return updates, {"m": m, "v": v}, {"grad_norm": gnorm}
+
+    return Optimizer(init=init, update=update)
+
+
+def sgd(lr, momentum=0.0, max_grad_norm=None):
+    lr_fn = lr if callable(lr) else (lambda _: lr)
+
+    def init(params):
+        if not momentum:
+            return {}
+        return {"mu": jax.tree.map(lambda p: jnp.zeros_like(p), params)}
+
+    def update(grads, state, params, step):
+        gnorm = jnp.zeros(())
+        if max_grad_norm is not None:
+            grads, gnorm = _clip_by_global_norm(grads, max_grad_norm)
+        if momentum:
+            mu = jax.tree.map(lambda m, g: momentum * m + g, state["mu"], grads)
+            updates = jax.tree.map(lambda m: -lr_fn(step) * m, mu)
+            return updates, {"mu": mu}, {"grad_norm": gnorm}
+        updates = jax.tree.map(lambda g: -lr_fn(step) * g, grads)
+        return updates, state, {"grad_norm": gnorm}
+
+    return Optimizer(init=init, update=update)
+
+
+def apply_updates(params, updates):
+    return jax.tree.map(lambda p, u: p + u.astype(p.dtype), params, updates)

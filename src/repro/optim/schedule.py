@@ -1,0 +1,18 @@
+"""LR schedules as step -> lr callables."""
+
+import jax.numpy as jnp
+
+
+def linear_warmup(peak, warmup_steps):
+    def fn(step):
+        return peak * jnp.minimum(1.0, (step + 1.0) / warmup_steps)
+    return fn
+
+
+def cosine_schedule(peak, warmup_steps, total_steps, floor=0.1):
+    def fn(step):
+        warm = jnp.minimum(1.0, (step + 1.0) / warmup_steps)
+        t = jnp.clip((step - warmup_steps) / jnp.maximum(total_steps - warmup_steps, 1), 0.0, 1.0)
+        cos = floor + (1.0 - floor) * 0.5 * (1.0 + jnp.cos(jnp.pi * t))
+        return peak * warm * cos
+    return fn

@@ -1,0 +1,4 @@
+from repro.sharding.rules import (  # noqa: F401
+    AxisRules, DEFAULT_RULES, FSDP_RULES, logical_to_spec, spec_tree,
+)
+from repro.sharding.param import ArrayMaker, SpecMaker, Param  # noqa: F401

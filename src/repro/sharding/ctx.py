@@ -1,0 +1,43 @@
+"""Sharding context: lets model code state *logical* activation shardings.
+
+``with sharding_ctx(mesh, rules): ...`` makes :func:`constrain` insert
+``with_sharding_constraint`` with the rule-resolved PartitionSpec; outside a
+context (smoke tests, single device) it is the identity. This is how one
+model definition runs unmodified on 1 chip and on the 512-chip mesh.
+"""
+
+import contextlib
+import threading
+
+import jax
+from jax.sharding import NamedSharding
+
+from repro.sharding.rules import logical_to_spec
+
+_state = threading.local()
+
+
+def current():
+    return getattr(_state, "ctx", None)
+
+
+@contextlib.contextmanager
+def sharding_ctx(mesh, rules):
+    prev = getattr(_state, "ctx", None)
+    _state.ctx = (mesh, rules)
+    try:
+        yield
+    finally:
+        _state.ctx = prev
+
+
+def constrain(x, *logical_axes):
+    """Constrain activation x to the logical axes (one name per dim).
+    Divisibility-aware: axes the mesh can't divide are silently dropped."""
+    ctx = current()
+    if ctx is None:
+        return x
+    mesh, rules = ctx
+    from repro.sharding.rules import safe_spec
+    spec = safe_spec(x.shape, logical_axes, rules, mesh)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))

@@ -1,0 +1,63 @@
+"""Parameter makers: one init code path, two interpretations.
+
+Model ``init`` functions receive a maker ``mk`` and declare every parameter as
+
+    mk("wq", (d_model, n_heads, head_dim), ("embed", "heads", "head_dim"), init_fn)
+
+With an :class:`ArrayMaker` this materializes an initialized ``jnp`` array;
+with a :class:`SpecMaker` it records the logical-axes tuple (later converted
+to PartitionSpecs via rules) or a ``ShapeDtypeStruct``. This guarantees the
+param tree and its sharding tree can never drift apart.
+"""
+
+from typing import Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Param = jax.Array
+
+
+class ArrayMaker:
+    """Materializes parameters with a per-param folded rng."""
+
+    def __init__(self, rng: jax.Array, dtype=jnp.float32):
+        self._rng = rng
+        self._dtype = dtype
+        self._count = 0
+
+    def __call__(self, name: str, shape: Tuple[int, ...], axes: Tuple[Optional[str], ...],
+                 init: Callable, dtype=None) -> Param:
+        assert len(shape) == len(axes), f"{name}: shape {shape} vs axes {axes}"
+        key = jax.random.fold_in(self._rng, self._count)
+        self._count += 1
+        return init(key, shape).astype(dtype or self._dtype)
+
+
+def encode_axes(axes) -> str:
+    """Logical axes tuple -> string leaf (tuples are pytree *nodes*, so the
+    axes tree must use string leaves to stay tree_map-compatible with the
+    param tree)."""
+    return ",".join("_" if a is None else a for a in axes)
+
+
+def decode_axes(s: str):
+    if s == "":
+        return ()
+    return tuple(None if a == "_" else a for a in s.split(","))
+
+
+class SpecMaker:
+    """Records logical axes (mode='axes', string leaves) or
+    ShapeDtypeStructs (mode='shape')."""
+
+    def __init__(self, mode: str = "axes", dtype=jnp.float32):
+        assert mode in ("axes", "shape")
+        self._mode = mode
+        self._dtype = dtype
+
+    def __call__(self, name, shape, axes, init, dtype=None):
+        assert len(shape) == len(axes), f"{name}: shape {shape} vs axes {axes}"
+        if self._mode == "axes":
+            return encode_axes(axes)
+        return jax.ShapeDtypeStruct(shape, dtype or self._dtype)

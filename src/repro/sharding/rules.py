@@ -1,0 +1,129 @@
+"""Logical-axis sharding rules (MaxText-style).
+
+Every parameter/activation dimension carries a *logical* axis name
+('embed', 'heads', 'mlp', 'experts', 'vocab', ...). A rule table maps each
+logical name to zero or more *mesh* axes. This keeps the model code free of
+mesh knowledge and lets one model definition serve 1-device smoke tests,
+the 256-chip pod, and the 512-chip multi-pod mesh.
+
+Divisibility is the caller's contract: configs pad head counts / vocab to
+multiples of the TP degree (see ``repro.configs.base.pad_to``); d_model /
+d_ff of every assigned architecture already divide the production axes.
+"""
+
+from typing import Mapping, Sequence, Tuple
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+AxisRules = Mapping[str, Tuple[str, ...]]
+
+# Baseline rules: tensor-parallel over 'model', batch over pod×data.
+DEFAULT_RULES: AxisRules = {
+    # parameter axes
+    "vocab": ("model",),
+    "embed": (),              # d_model: replicated (non-FSDP)
+    "heads": ("model",),
+    "kv_heads": (),           # kv heads are replicated when < tp degree
+    "head_dim": (),
+    "qk_rank": (),            # MLA latent ranks: small, replicated
+    "mlp": ("model",),
+    "experts": ("model",),    # expert parallelism
+    "expert_mlp": (),         # per-expert ffn dim (EP already on 'model')
+    "layers": (),             # stacked-scan leading axis
+    "conv": (),
+    "state": (),              # SSM state dim
+    # activation axes
+    "act_batch": ("pod", "data"),
+    "act_seq": (),
+    # Megatron-SP: the residual stream between blocks is sequence-sharded
+    # over 'model' (enabled per-config via rules_for); attention/MLP
+    # interiors stay tensor-sharded, so XLA lowers the transitions as bf16
+    # all-gather / reduce-scatter pairs instead of fp32 all-reduces.
+    "act_res_seq": (),
+    # decode KV caches: shard the sequence dim over 'model'
+    # (flash-decoding-style distributed attention; enabled via rules_for).
+    "act_kv_seq": (),
+    "act_heads": ("model",),
+    "act_mlp": ("model",),
+    "act_embed": (),
+    "act_experts": ("model",),
+    "act_vocab": ("model",),
+}
+
+# FSDP variant: additionally shard the d_model dim of every weight over
+# 'data' (ZeRO-3). Used by the >=30B configs.
+FSDP_RULES: AxisRules = dict(DEFAULT_RULES, embed=("data",))
+
+# FSDP over pod×data: for the 671B config (params must spread over
+# every chip in the system).
+FSDP_POD_RULES: AxisRules = dict(DEFAULT_RULES, embed=("pod", "data"))
+
+# Single-device rules (smoke tests): everything replicated.
+REPLICATED_RULES: AxisRules = {k: () for k in DEFAULT_RULES}
+REPLICATED_RULES = dict(REPLICATED_RULES, act_batch=())
+
+
+def logical_to_spec(axes: Sequence[str], rules: AxisRules) -> P:
+    """Map a tuple of logical axis names to a PartitionSpec."""
+    spec, used = [], set()
+    for name in axes:
+        if name is None:
+            spec.append(None)
+            continue
+        mesh_axes = tuple(a for a in rules.get(name, ()) if a not in used)
+        used |= set(mesh_axes)
+        if len(mesh_axes) == 0:
+            spec.append(None)
+        elif len(mesh_axes) == 1:
+            spec.append(mesh_axes[0])
+        else:
+            spec.append(mesh_axes)
+    while spec and spec[-1] is None:
+        spec.pop()
+    return P(*spec)
+
+
+def filter_rules(rules: AxisRules, mesh) -> AxisRules:
+    """Drop mesh axes that don't exist in `mesh` (e.g. 'pod' on single-pod)."""
+    names = set(mesh.axis_names)
+    return {k: tuple(a for a in v if a in names) for k, v in rules.items()}
+
+
+def safe_spec(shape, axes, rules: AxisRules, mesh) -> P:
+    """logical_to_spec, but drops sharding on dims the mesh doesn't divide
+    (e.g. batch=1 long-context decode can't shard its batch axis)."""
+    sizes = dict(zip(mesh.axis_names, mesh.shape.values())) if hasattr(mesh.shape, "values") \
+        else dict(zip(mesh.axis_names, mesh.devices.shape))
+    spec, used = [], set()
+    for dim, name in zip(shape, axes):
+        if name is None:
+            spec.append(None)
+            continue
+        mesh_axes = tuple(a for a in rules.get(name, ())
+                          if a in sizes and a not in used)
+        total = 1
+        kept = []
+        for a in mesh_axes:
+            if dim % (total * sizes[a]) == 0:
+                kept.append(a)
+                total *= sizes[a]
+        used |= set(kept)
+        if not kept:
+            spec.append(None)
+        elif len(kept) == 1:
+            spec.append(kept[0])
+        else:
+            spec.append(tuple(kept))
+    while spec and spec[-1] is None:
+        spec.pop()
+    return P(*spec)
+
+
+def spec_tree(logical_tree, rules: AxisRules):
+    """Map a pytree of logical-axis tuples to a pytree of PartitionSpecs."""
+    return jax.tree.map(
+        lambda axes: logical_to_spec(axes, rules),
+        logical_tree,
+        is_leaf=lambda x: isinstance(x, tuple),
+    )

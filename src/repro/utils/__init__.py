@@ -1,0 +1,3 @@
+from repro.utils.tree import (  # noqa: F401
+    tree_size, tree_bytes, tree_zeros_like, tree_cast, global_norm, tree_add, tree_scale,
+)

@@ -1,0 +1,6 @@
+import os
+import sys
+
+# Smoke tests and benches run on the single real CPU device; only the
+# dry-run sets xla_force_host_platform_device_count (per its own module).
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

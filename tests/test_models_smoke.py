@@ -1,0 +1,65 @@
+"""Per-architecture smoke tests: reduced config, one forward + one train
+step on CPU; asserts output shapes and no NaNs. The full configs are only
+exercised via the dry-run (ShapeDtypeStruct, no allocation)."""
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs.registry import ARCHS, make_model, smoke_config
+from repro.core.losses import init_train_state, make_train_step
+from repro.envs.tokenworld import synthetic_vtrace_batch
+from repro.optim import adamw
+
+RNG = jax.random.PRNGKey(0)
+
+
+def _batch(cfg, b=2, s=16):
+    fe = (cfg.frontend_tokens, cfg.frontend_dim) if cfg.frontend_tokens else None
+    batch = synthetic_vtrace_batch(RNG, b, s, cfg.vocab_size, frontend=fe)
+    if fe and cfg.family != "encdec":
+        pass  # decoder-only vlm: frontend prepended inside the model
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_forward_shapes_no_nan(arch):
+    cfg = smoke_config(arch)
+    bundle = make_model(cfg)
+    params = bundle.init(RNG)
+    batch = _batch(cfg)
+    out = bundle.forward(params, batch)
+    s_total = batch["tokens"].shape[1] + (
+        cfg.frontend_tokens if (cfg.frontend_tokens and cfg.family != "encdec") else 0)
+    assert out.logits.shape[:2] == (2, s_total)
+    assert out.logits.shape[-1] >= cfg.vocab_size
+    assert out.value.shape == (2, s_total)
+    assert not bool(jnp.isnan(out.logits).any()), arch
+    assert not bool(jnp.isnan(out.value).any()), arch
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_one_train_step(arch):
+    cfg = smoke_config(arch)
+    bundle = make_model(cfg)
+    opt = adamw(1e-3)
+    step = make_train_step(bundle, opt)
+    state = init_train_state(bundle, opt, RNG)
+    state, metrics = step(state, _batch(cfg))
+    assert int(state["step"]) == 1
+    assert jnp.isfinite(metrics["loss"]), (arch, metrics)
+    assert jnp.isfinite(metrics["grad_norm"]), arch
+
+
+def test_atari_forward_and_step():
+    from repro.configs.r2d2_atari import CONFIG as acfg
+    from repro.models.atari import make_atari
+    from repro.nn.recurrent import lstm_state_init
+    bundle = make_atari(acfg)
+    params = bundle.init(RNG)
+    obs = jax.random.randint(RNG, (2, 4, 84, 84, 4), 0, 255).astype(jnp.uint8)
+    out = bundle.forward(params, {"obs": obs})
+    assert out.logits.shape == (2, 4, acfg.num_actions)
+    q, st = bundle.decode_step(params, obs[:, 0], lstm_state_init(2, acfg.core_dim))
+    assert q.shape == (2, acfg.num_actions)
+    assert not bool(jnp.isnan(q).any())

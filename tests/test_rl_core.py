@@ -1,0 +1,137 @@
+"""V-trace / R2D2 / replay correctness, incl. hypothesis property tests."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.r2d2 import inv_rescale, n_step_targets, rescale
+from repro.core.replay import PrioritizedReplay
+from repro.core.vtrace import vtrace
+
+K = jax.random.PRNGKey(3)
+
+
+# ------------------------------- V-trace -----------------------------------
+
+def _naive_vtrace(tlp, blp, r, d, v, boot, rho_bar=1.0, c_bar=1.0):
+    """Direct recursive definition (Espeholt et al. eq. 1)."""
+    b, t = r.shape
+    rho = np.minimum(rho_bar, np.exp(tlp - blp))
+    c = np.minimum(c_bar, np.exp(tlp - blp))
+    v_tp1 = np.concatenate([v[:, 1:], boot[:, None]], 1)
+    vs = np.zeros((b, t + 1))
+    vs[:, t] = boot
+    for i in reversed(range(t)):
+        delta = rho[:, i] * (r[:, i] + d[:, i] * v_tp1[:, i] - v[:, i])
+        vs[:, i] = v[:, i] + delta + d[:, i] * c[:, i] * (
+            vs[:, i + 1] - v_tp1[:, i])
+    return vs[:, :t]
+
+
+@settings(deadline=None, max_examples=25)
+@given(st.integers(1, 6), st.integers(2, 12), st.integers(0, 2 ** 31 - 1))
+def test_vtrace_matches_naive_recursion(b, t, seed):
+    rng = np.random.default_rng(seed)
+    tlp = rng.normal(size=(b, t)) * 0.3
+    blp = rng.normal(size=(b, t)) * 0.3
+    r = rng.normal(size=(b, t))
+    d = rng.uniform(0.8, 1.0, size=(b, t)) * (rng.random((b, t)) > 0.1)
+    v = rng.normal(size=(b, t))
+    boot = rng.normal(size=(b,))
+    out = vtrace(*map(jnp.asarray, (tlp, blp, r, d, v, boot)))
+    expected = _naive_vtrace(tlp, blp, r, d, v, boot)
+    np.testing.assert_allclose(np.asarray(out.vs), expected, atol=1e-4)
+
+
+def test_vtrace_on_policy_reduces_to_nstep_return():
+    """On-policy (target == behavior), rho = c = 1: vs_t is the discounted
+    Monte-Carlo return bootstrapped at the end."""
+    b, t = 2, 8
+    lp = jnp.zeros((b, t)) - 0.5
+    r = jax.random.normal(K, (b, t))
+    gamma = 0.9
+    d = jnp.full((b, t), gamma)
+    v = jnp.zeros((b, t))
+    boot = jnp.zeros((b,))
+    out = vtrace(lp, lp, r, d, v, boot)
+    expected = np.zeros((b, t))
+    acc = np.zeros(b)
+    rn = np.asarray(r)
+    for i in reversed(range(t)):
+        acc = rn[:, i] + gamma * acc
+        expected[:, i] = acc
+    np.testing.assert_allclose(np.asarray(out.vs), expected, atol=1e-4)
+
+
+# -------------------------------- R2D2 --------------------------------------
+
+@settings(deadline=None, max_examples=50)
+@given(st.floats(-1e4, 1e4))
+def test_rescale_invertible(x):
+    xr = float(inv_rescale(rescale(jnp.float32(x))))
+    assert abs(xr - x) < 1e-2 + 1e-3 * abs(x)
+
+
+def test_n_step_targets_match_naive():
+    b, t, a, n, gamma = 2, 9, 4, 3, 0.9
+    q_t = jax.random.normal(K, (b, t, a))
+    q_o = jax.random.normal(jax.random.fold_in(K, 1), (b, t, a))
+    actions = jax.random.randint(jax.random.fold_in(K, 2), (b, t), 0, a)
+    rewards = jax.random.normal(jax.random.fold_in(K, 3), (b, t))
+    dones = (jax.random.uniform(jax.random.fold_in(K, 4), (b, t)) < 0.15
+             ).astype(jnp.float32)
+    tgt = n_step_targets(q_t, q_o, actions, rewards, dones, n_step=n,
+                         gamma=gamma)
+    qo, qt, rn, dn = map(np.asarray, (q_o, q_t, rewards, dones))
+    best = qo.argmax(-1)
+    qnext = inv_rescale(np.take_along_axis(qt, best[..., None], -1)[..., 0])
+    expected = np.zeros((b, t - n))
+    for bi in range(b):
+        for ti in range(t - n):
+            ret, disc, alive = 0.0, 1.0, 1.0
+            for i in range(n):
+                ret += disc * alive * rn[bi, ti + i]
+                alive *= 1.0 - dn[bi, ti + i]
+                disc *= gamma
+            ret += disc * alive * qnext[bi, ti + n]
+            expected[bi, ti] = rescale(ret)
+    np.testing.assert_allclose(np.asarray(tgt), expected, atol=1e-4)
+
+
+# ------------------------------- replay -------------------------------------
+
+def test_replay_ring_overwrite_and_sampling():
+    buf = PrioritizedReplay(capacity=8, alpha=1.0, seed=0)
+    for i in range(12):
+        buf.add({"x": np.full((3,), i, np.float32)}, priority=1.0)
+    assert len(buf) == 8
+    batch, idx, w = buf.sample(16, beta=0.5)
+    assert batch["x"].shape == (16, 3)
+    assert batch["x"].min() >= 4  # first 4 were overwritten
+    assert w.shape == (16,) and w.max() <= 1.0 + 1e-6
+
+
+@settings(deadline=None, max_examples=10)
+@given(st.lists(st.floats(0.01, 100.0), min_size=2, max_size=16))
+def test_replay_priority_proportionality(priorities):
+    buf = PrioritizedReplay(capacity=32, alpha=1.0, seed=1)
+    for i, p in enumerate(priorities):
+        buf.add({"x": np.float32([i])}, priority=p)
+    _, idx, _ = buf.sample(4000, beta=0.0)
+    counts = np.bincount(idx, minlength=len(priorities)).astype(float)
+    emp = counts / counts.sum()
+    expect = np.array(priorities) / np.sum(priorities)
+    # loose statistical check on the high-priority items
+    top = int(np.argmax(expect))
+    assert abs(emp[top] - expect[top]) < 0.12
+
+
+def test_replay_update_priorities():
+    buf = PrioritizedReplay(capacity=4, alpha=1.0, seed=2)
+    for i in range(4):
+        buf.add({"x": np.float32([i])}, priority=0.001)
+    buf.update_priorities(np.array([2]), np.array([1000.0]))
+    _, idx, _ = buf.sample(100)
+    assert (idx == 2).mean() > 0.9

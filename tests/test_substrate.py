@@ -1,0 +1,133 @@
+"""Optimizer / checkpoint / sharding / data-pipeline / hlo-cost tests."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import CheckpointManager, restore_pytree, save_pytree
+from repro.optim import adamw, sgd
+from repro.optim.adamw import apply_updates
+from repro.sharding.rules import (DEFAULT_RULES, FSDP_RULES, logical_to_spec,
+                                  safe_spec)
+
+K = jax.random.PRNGKey(11)
+
+
+def test_adamw_matches_reference():
+    params = {"w": jnp.array([1.0, -2.0]), "b": jnp.array([0.5])}
+    grads = {"w": jnp.array([0.1, 0.2]), "b": jnp.array([-0.3])}
+    opt = adamw(1e-2, b1=0.9, b2=0.999, eps=1e-8, max_grad_norm=None)
+    st = opt.init(params)
+    upd, st, _ = opt.update(grads, st, params, jnp.zeros((), jnp.int32))
+    # step 1: m = 0.1*g, v = 0.001*g^2, bias-corrected => update = -lr*g/|g|
+    for k in params:
+        g = np.asarray(grads[k])
+        expect = -1e-2 * g / (np.abs(g) + 1e-8)
+        np.testing.assert_allclose(np.asarray(upd[k]), expect, rtol=1e-4)
+
+
+def test_grad_clipping():
+    params = {"w": jnp.ones((4,))}
+    grads = {"w": jnp.full((4,), 100.0)}
+    opt = sgd(1.0, max_grad_norm=1.0)
+    upd, _, m = opt.update(grads, opt.init(params), params, jnp.zeros(()))
+    assert float(m["grad_norm"]) == pytest.approx(200.0)
+    assert np.linalg.norm(np.asarray(upd["w"])) == pytest.approx(1.0, rel=1e-4)
+
+
+def test_low_precision_moments():
+    params = {"w": jnp.ones((4,))}
+    opt = adamw(1e-3, moment_dtype=jnp.bfloat16)
+    st = opt.init(params)
+    assert st["m"]["w"].dtype == jnp.bfloat16
+    upd, st, _ = opt.update({"w": jnp.ones((4,))}, st, params, jnp.zeros(()))
+    assert st["v"]["w"].dtype == jnp.bfloat16
+    assert jnp.isfinite(upd["w"]).all()
+
+
+# ------------------------------ checkpoint ----------------------------------
+
+def test_checkpoint_roundtrip(tmp_path):
+    state = {"params": {"w": jnp.arange(6.0).reshape(2, 3)},
+             "step": jnp.array(7, jnp.int32)}
+    path = str(tmp_path / "ck")
+    save_pytree(state, path)
+    out = restore_pytree(jax.tree.map(jnp.zeros_like, state), path)
+    np.testing.assert_array_equal(np.asarray(out["params"]["w"]),
+                                  np.asarray(state["params"]["w"]))
+    assert int(out["step"]) == 7
+    assert not os.path.exists(path + ".tmp")
+
+
+def test_checkpoint_manager_keep_and_restore(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=2, async_save=False)
+    state = {"w": jnp.zeros((2,))}
+    for s in (1, 2, 3):
+        mgr.save({"w": jnp.full((2,), float(s))}, s)
+    assert mgr.all_steps() == [2, 3]
+    out, step = mgr.restore(state)
+    assert step == 3 and float(out["w"][0]) == 3.0
+    out, step = mgr.restore(state, step=2)
+    assert float(out["w"][0]) == 2.0
+
+
+def test_checkpoint_async_then_restart(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=3, async_save=True)
+    mgr.save({"w": jnp.ones((4,))}, 10)
+    mgr.wait()
+    # simulate restart: fresh manager over the same directory
+    mgr2 = CheckpointManager(str(tmp_path))
+    out, step = mgr2.restore({"w": jnp.zeros((4,))})
+    assert step == 10 and float(out["w"].sum()) == 4.0
+
+
+# ------------------------------- sharding -----------------------------------
+
+def test_logical_to_spec_dedups_axes():
+    spec = logical_to_spec(("embed", "mlp"), FSDP_RULES)
+    assert spec == jax.sharding.PartitionSpec("data", "model")
+    # same mesh axis twice: second use dropped
+    spec = logical_to_spec(("heads", "mlp"), DEFAULT_RULES)
+    assert spec == jax.sharding.PartitionSpec("model")  # trailing None popped
+
+
+def test_safe_spec_divisibility():
+    from types import SimpleNamespace
+    mesh = SimpleNamespace(axis_names=("data", "model"),
+                           shape={"data": 16, "model": 16})
+    # batch=1 can't shard over data=16 -> dropped
+    spec = safe_spec((1, 8), ("act_batch", None),
+                     {"act_batch": ("data",)}, mesh)
+    assert spec == jax.sharding.PartitionSpec()
+    # 32 divides 16 but not 16*16: keep only the first axis
+    spec = safe_spec((32,), ("act_batch",),
+                     {"act_batch": ("data", "model")}, mesh)
+    assert spec == jax.sharding.PartitionSpec("data")
+    # 256 divides both
+    spec = safe_spec((256,), ("act_batch",),
+                     {"act_batch": ("data", "model")}, mesh)
+    assert spec == jax.sharding.PartitionSpec(("data", "model"))
+
+
+def test_hlo_cost_counts_scan_trips():
+    from repro.launch.hlo_cost import module_costs
+
+    def scanned(x, w):
+        def body(c, _):
+            return jnp.tanh(c @ w), ()
+        c, _ = jax.lax.scan(body, x, None, length=5)
+        return c
+
+    a = jax.ShapeDtypeStruct((64, 64), jnp.float32)
+    comp = jax.jit(scanned).lower(a, a).compile()
+    costs = module_costs(comp.as_text())
+    assert costs.flops == pytest.approx(5 * 2 * 64 ** 3, rel=0.05)
+
+
+def test_prefetch_pipeline():
+    from repro.data import prefetch
+    it = prefetch(iter(range(10)), size=3)
+    assert list(it) == list(range(10))

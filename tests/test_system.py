@@ -1,0 +1,149 @@
+"""End-to-end behaviour tests for the paper's system.
+
+1. The SEED system (actors + central inference + learner) runs and reports
+   throughput — the measured quantity behind Fig 3.
+2. R2D2-style Q-learning on Catch *learns* on CPU in a few seconds
+   (faithful-reproduction anchor: the paper's algorithm stack, miniature).
+3. The provisioning / bottleneck analytics reproduce the paper's numbers.
+"""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core.bottleneck import (RooflineTerms, paper_fig2_reference,
+                                   sequential_idealization)
+from repro.core.provisioning import (cpu_gpu_ratio, fit_paper_actor_model,
+                                     fit_paper_derating, provision)
+from repro.core.system import SeedSystem
+from repro.envs.alesim import ALESimEnv
+from repro.hw import DGX1_HOST, TPU_V5E, V100, V5E_HOST
+
+
+def test_seed_system_runs_and_counts_frames():
+    def policy_step(obs, ids):
+        return np.zeros((obs.shape[0],), np.int32)
+
+    sys_ = SeedSystem(
+        env_factory=lambda: ALESimEnv(frame=16, step_cost=64, episode_len=50),
+        policy_step=policy_step, num_actors=3, unroll=10, deadline_ms=2.0)
+    stats = sys_.run(seconds=1.0, with_learner=False)
+    assert stats["env_frames"] > 50, stats
+    assert stats["inference_batches"] > 0
+    assert 0 < stats["mean_batch_occupancy"] <= 1.0
+
+
+def test_actor_model_reproduces_paper_fig3():
+    model, err = fit_paper_actor_model()
+    assert err < 0.05, "could not calibrate to the paper's 5.8x / 2.0x"
+    assert model.speedup(40, 4) == pytest.approx(5.8, rel=0.1)
+    assert (model.throughput(256) / model.throughput(40)) == pytest.approx(
+        2.0, rel=0.1)
+    # saturation: beyond the hw threads, throughput approaches H / t_env
+    assert model.throughput(512) < 1.05 * model.hw_threads / model.t_env
+
+
+def test_derating_reproduces_paper_fig4():
+    m = fit_paper_derating()
+    assert m.slowdown(0.5) == pytest.approx(1.06, abs=1e-6)
+    assert m.slowdown(1.0) == 1.0
+    assert m.slowdown(2 / 80) > 2.0      # 2 SMs: accelerator becomes bottleneck
+
+
+def test_cpu_gpu_ratio_matches_paper_examples():
+    # DGX-1: 40 threads / (8 x 80 SMs) = 1/16
+    assert cpu_gpu_ratio(DGX1_HOST, V100, n_chips=8) == pytest.approx(1 / 16)
+
+
+def test_provisioning_rule():
+    small = provision(TPU_V5E, V5E_HOST, 8, train_flops_per_frame=2e6 * 6,
+                      infer_flops_per_frame=2e6 * 2)
+    big = provision(TPU_V5E, V5E_HOST, 8, train_flops_per_frame=3e9 * 6,
+                    infer_flops_per_frame=3e9 * 2)
+    assert small.frames_demand_per_s > big.frames_demand_per_s
+    assert not small.balanced
+    assert big.threads_required < small.threads_required
+
+
+def test_sequential_idealization_sums_to_one():
+    terms = RooflineTerms(compute_s=0.5, memory_s=0.2, collective_s=0.3,
+                          occupancy=0.8)
+    out = sequential_idealization(terms)
+    total = out["collective"] + out["memory"] + out["occupancy"] + out["math"]
+    assert total == pytest.approx(1.0)
+    assert out["math"] == pytest.approx(0.5 / terms.total())
+    assert paper_fig2_reference()["math"] == 0.57
+
+
+def test_e2e_qlearning_catch_learns():
+    """Train a tiny Q-network on Catch for a few hundred steps on CPU;
+    average episode return must clearly improve."""
+    from repro.envs.catch import CatchEnv
+    from repro.optim import adamw
+    from repro.optim.adamw import apply_updates
+
+    env = CatchEnv(rows=6, cols=4)
+    rng = jax.random.PRNGKey(0)
+
+    def init(key):
+        k1, k2 = jax.random.split(key)
+        return {"w1": jax.random.normal(k1, (24, 64)) * 0.2,
+                "b1": jnp.zeros((64,)),
+                "w2": jax.random.normal(k2, (64, 3)) * 0.2,
+                "b2": jnp.zeros((3,))}
+
+    def qnet(p, obs):
+        h = jax.nn.relu(obs @ p["w1"] + p["b1"])
+        return h @ p["w2"] + p["b2"]
+
+    @jax.jit
+    def unroll_env(key, params, eps):
+        st, obs = env.reset(key)
+
+        def step(carry, _):
+            st, obs, k = carry
+            k, ka, ke = jax.random.split(k, 3)
+            q = qnet(params, obs)
+            a = jnp.where(jax.random.uniform(ke) < eps,
+                          jax.random.randint(ka, (), 0, 3), jnp.argmax(q))
+            st2, obs2, r, d = env.step(st, a)
+            return (st2, obs2, k), (obs, a, r, d)
+
+        _, out = jax.lax.scan(step, (st, obs, key), None, length=120)
+        return out
+
+    opt = adamw(3e-3)
+    params = init(rng)
+    opt_state = opt.init(params)
+    gamma = 0.95
+
+    @jax.jit
+    def train(params, opt_state, step_i, batch):
+        obss, acts, rews, dones = batch
+
+        def loss_fn(p):
+            q = qnet(p, obss)
+            q_a = jnp.take_along_axis(q, acts[:, None], -1)[:, 0]
+            q_next = jnp.max(qnet(p, obss), axis=-1)
+            tgt = rews[:-1] + gamma * (1 - dones[:-1]) * \
+                jax.lax.stop_gradient(q_next[1:])
+            return jnp.mean((q_a[:-1] - tgt) ** 2)
+
+        g = jax.grad(loss_fn)(params)
+        upd, opt_state2, _ = opt.update(g, opt_state, params, step_i)
+        return apply_updates(params, upd), opt_state2
+
+    def avg_return(params, key):
+        _, _, rews, dones = unroll_env(key, params, 0.0)
+        return float(rews.sum() / jnp.maximum(dones.sum(), 1))
+
+    before = avg_return(params, jax.random.PRNGKey(100))
+    step_i = jnp.zeros((), jnp.int32)
+    for i in range(300):
+        batch = unroll_env(jax.random.fold_in(rng, i), params, 0.3)
+        params, opt_state = train(params, opt_state, step_i, batch)
+        step_i = step_i + 1
+    after = avg_return(params, jax.random.PRNGKey(101))
+    assert after > before + 0.5, (before, after)
+    assert after > 0.3, (before, after)

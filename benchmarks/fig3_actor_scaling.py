@@ -1,12 +1,15 @@
-"""Fig 3 reproduction: actor-count sweep.
+"""Fig 3 reproduction: actor-count sweep, plus the envs-per-actor axis.
 
-Two parts:
+Three parts:
   (a) MEASURED (scaled-down): the real SEED system (threads + central
       inference + ALESim envs) swept over actor counts on this host. With 1
       hardware core the saturation knee appears immediately — the same
       phenomenon the paper measured at 40 threads.
   (b) MODEL (paper scale): the calibrated actor/learner throughput model,
       validated against the paper's 5.8x (4->40) and 2.0x (40->256).
+  (c) ENV VECTORIZATION (measured + model): env-frames/s per actor thread
+      as each actor steps E lanes per inference round-trip (CuLE-style
+      batching) — the highest-leverage knob on the CPU/GPU ratio.
 """
 
 import time
@@ -18,7 +21,8 @@ from repro.core.system import SeedSystem
 from repro.envs.alesim import ALESimEnv
 
 
-def measured_sweep(actor_counts=(1, 2, 4, 8), seconds=1.2, step_cost=2048):
+def measured_sweep(actor_counts=(1, 2, 4, 8), seconds=1.2, step_cost=2048,
+                   envs_per_actor=1):
     rows = []
     for n in actor_counts:
         def policy_step(obs, ids):
@@ -26,7 +30,8 @@ def measured_sweep(actor_counts=(1, 2, 4, 8), seconds=1.2, step_cost=2048):
 
         sys_ = SeedSystem(
             env_factory=lambda: ALESimEnv(frame=32, step_cost=step_cost),
-            policy_step=policy_step, num_actors=n, unroll=16, deadline_ms=2.0)
+            policy_step=policy_step, num_actors=n, unroll=16, deadline_ms=2.0,
+            envs_per_actor=envs_per_actor)
         stats = sys_.run(seconds=seconds, with_learner=False)
         rows.append((n, stats["env_frames_per_s"],
                      stats["mean_batch_occupancy"],
@@ -34,10 +39,30 @@ def measured_sweep(actor_counts=(1, 2, 4, 8), seconds=1.2, step_cost=2048):
     return rows
 
 
+def measured_env_sweep(env_counts=(1, 2, 4, 8), actors=2, seconds=1.2,
+                       step_cost=512):
+    """Fixed actor-thread count, sweep lanes per actor: frames/s per thread."""
+    rows = []
+    for E in env_counts:
+        (_, fps, occ, wait), = measured_sweep(
+            actor_counts=(actors,), seconds=seconds, step_cost=step_cost,
+            envs_per_actor=E)
+        rows.append((E, fps, fps / actors, occ, wait))
+    return rows
+
+
 def model_sweep():
     model, err = fit_paper_actor_model()
     counts = (4, 8, 16, 32, 40, 64, 128, 256)
     return model, err, [(n, float(model.speedup(n, 4))) for n in counts]
+
+
+def model_env_sweep(env_counts=(1, 2, 4, 8, 16), n_actors=40):
+    """Calibrated model at paper scale along the second (E) axis."""
+    model, _ = fit_paper_actor_model()
+    base = float(model.throughput(n_actors))
+    return [(E, float(model.with_envs(E).throughput(n_actors)) / base)
+            for E in env_counts]
 
 
 def main():
@@ -57,6 +82,16 @@ def main():
     print(f"fig3b_check_4to40,{s40:.2f},paper=5.8 err={abs(s40-5.8)/5.8:.1%}")
     print(f"fig3b_check_40to256,{s256_40:.2f},paper=2.0 err={abs(s256_40-2.0)/2.0:.1%}")
     print(f"fig3b_fit_residual,{err:.4f},rms")
+    print("# fig3c: envs-per-actor sweep (measured, fixed actor threads)")
+    env_rows = measured_env_sweep()
+    per_thread_base = env_rows[0][2]
+    for E, fps, per_thread, occ, wait in env_rows:
+        print(f"fig3c_envs_{E},{fps:.1f},frames_per_s per_thread={per_thread:.1f} "
+              f"per_thread_speedup={per_thread/per_thread_base:.2f} "
+              f"occupancy={occ:.2f} queue_wait_ms={wait:.2f}")
+    print("# fig3c: model at paper scale (40 actors, E lanes each)")
+    for E, s in model_env_sweep():
+        print(f"fig3c_model_envs_{E},{s:.2f},throughput_vs_E1_at_40_actors")
     # GPU power / perf-per-watt (paper's right axis): utilization-linear model
     from repro.hw import V100
     for n, s in sw:

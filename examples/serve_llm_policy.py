@@ -38,7 +38,11 @@ def main():
     prefill = jax.jit(make_prefill(bundle, max_len=max_len, dtype=jnp.float32))
     sstep = jax.jit(make_serve_step(bundle))
 
-    # one shared cache batch: slot per client (continuous-batching-lite)
+    # one shared cache batch: one row per client (continuous-batching-lite).
+    # The server assigns dense (actor, lane) slots in first-sight order, NOT
+    # by client id — rows are interchangeable here only because every client
+    # shares the same zero prompt; per-client prompts would need prefill
+    # keyed through server.slot_ids().
     prompt = jnp.zeros((args.clients, 8), jnp.int32)
     tok, cache = prefill(params, {"tokens": prompt})
     state = {"tok": tok, "cache": cache}

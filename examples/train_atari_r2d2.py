@@ -31,6 +31,8 @@ from repro.optim import adamw
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--actors", type=int, default=2)
+    ap.add_argument("--envs-per-actor", type=int, default=1,
+                    help="env lanes vectorized per actor thread")
     ap.add_argument("--seconds", type=float, default=8.0)
     ap.add_argument("--frame", type=int, default=42)
     args = ap.parse_args()
@@ -47,11 +49,14 @@ def main():
     # double-buffers published params; this example keeps it simple).
     train_step = jax.jit(make_train_step(bundle, opt, algo="r2d2", acfg=acfg))
 
-    # central inference: owns per-actor LSTM state (SEED's key design)
+    # central inference: owns per-LANE LSTM state (SEED's key design); the
+    # server hands policy_step dense (actor, env) slot ids, so state is
+    # sized for all actors x lanes.
     params_lock = threading.Lock()
     live = {"params": state["params"]}
-    core = {"h": np.zeros((64, acfg.core_dim), np.float32),
-            "c": np.zeros((64, acfg.core_dim), np.float32)}
+    n_slots = max(64, args.actors * args.envs_per_actor)
+    core = {"h": np.zeros((n_slots, acfg.core_dim), np.float32),
+            "c": np.zeros((n_slots, acfg.core_dim), np.float32)}
     eps = 0.2
 
     @jax.jit
@@ -88,8 +93,9 @@ def main():
         return st, metrics
 
     # precompile both jitted paths so the measured window is steady-state
-    dummy_obs = np.zeros((args.actors, args.frame, args.frame, 2), np.uint8)
-    policy_step(dummy_obs, np.arange(args.actors))
+    lanes = args.actors * args.envs_per_actor
+    dummy_obs = np.zeros((lanes, args.frame, args.frame, 2), np.uint8)
+    policy_step(dummy_obs, np.arange(lanes))
     dummy = {
         "obs": np.zeros((2, seq_len, args.frame, args.frame, 2), np.uint8),
         "actions": np.zeros((2, seq_len), np.int32),
@@ -102,13 +108,17 @@ def main():
         env_factory=lambda: ALESimEnv(frame=args.frame, channels=2,
                                       step_cost=512, episode_len=200),
         policy_step=policy_step, num_actors=args.actors, unroll=seq_len,
+        envs_per_actor=args.envs_per_actor,
         train_step=wrapped_train_step, state=state, learner_batch=2,
         replay_capacity=256, min_replay=2, deadline_ms=4.0)
 
-    print(f"== SEED R2D2: {args.actors} actors, {args.seconds}s wall-clock")
+    print(f"== SEED R2D2: {args.actors} actors x {args.envs_per_actor} env "
+          f"lanes, {args.seconds}s wall-clock")
     stats = sys_.run(seconds=args.seconds)
     for k, v in stats.items():
         print(f"  {k:24s} {v:.3f}" if isinstance(v, float) else f"  {k:24s} {v}")
+    if stats["learner_error"]:
+        raise SystemExit(f"learner died:\n{stats['learner_error']}")
     assert stats["env_frames"] > 0 and stats["learner_steps"] > 0
     print("ok — actors, central inference, replay and learner all ran")
 

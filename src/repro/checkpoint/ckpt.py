@@ -23,7 +23,7 @@ import jax
 
 
 def _flatten(tree):
-    flat, treedef = jax.tree.flatten_with_path(tree)
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
     keyed = {jax.tree_util.keystr(k): np.asarray(v) for k, v in flat}
     return keyed, treedef
 
@@ -48,12 +48,12 @@ def restore_pytree(template, path: str, shardings=None):
     the elastic re-mesh path."""
     with np.load(os.path.join(path, "arrays.npz")) as z:
         arrays = [z[str(i)] for i in range(len(z.files))]
-    flat_t, treedef = jax.tree.flatten(template)
+    flat_t, treedef = jax.tree_util.tree_flatten(template)
     assert len(flat_t) == len(arrays), \
         f"checkpoint has {len(arrays)} leaves, template has {len(flat_t)}"
     leaves = [a.astype(t.dtype) if hasattr(t, "dtype") else a
               for a, t in zip(arrays, flat_t)]
-    tree = jax.tree.unflatten(treedef, leaves)
+    tree = jax.tree_util.tree_unflatten(treedef, leaves)
     if shardings is not None:
         tree = jax.tree.map(lambda x, s: jax.device_put(x, s), tree, shardings)
     return tree

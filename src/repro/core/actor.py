@@ -1,33 +1,46 @@
 """Actor: environment-interaction loop (the paper's bottleneck resource).
 
-Each actor owns one (or several, SEED-style multi-env) host environment
-instances, queries the central inference server for actions, and emits
-fixed-length unrolls to the trajectory sink (replay buffer or on-policy
-queue). Actors are plain threads: in the paper's terms, each consumes one
-CPU hardware thread while stepping.
+Each actor owns a *vector* of E environment lanes (`repro.envs.vector`),
+queries the central inference server for a whole lane-batch of actions in
+ONE round-trip, and emits fixed-length per-lane unrolls to the trajectory
+sink (replay buffer or on-policy queue). Actors are plain threads: in the
+paper's terms, each consumes one CPU hardware thread while stepping — so
+E > 1 multiplies the env-frames supplied per thread by amortizing both the
+inference round-trip and (for `JaxVectorEnv`) the Python dispatch over E
+lanes, the CuLE-style design point the paper's CPU/GPU-ratio metric favors.
 """
 
+import queue
 import threading
-import time
 from typing import Callable, Optional
 
 import numpy as np
 
+from repro.envs.vector import make_vector_env
+
 
 class Actor:
     def __init__(self, actor_id: int, env, server, sink: Callable,
-                 unroll: int, num_envs: int = 1):
+                 unroll: int, num_envs: int = 1, seed: Optional[int] = None):
         self.actor_id = actor_id
-        self.envs = [env() for _ in range(num_envs)] if callable(env) else [env]
+        self.vec = make_vector_env(
+            env, num_envs, seed=actor_id if seed is None else seed)
+        self.num_envs = self.vec.num_envs
         self.server = server
         self.sink = sink                     # sink(traj_dict)
         self.unroll = unroll
         self._stop = threading.Event()
         self._thread: Optional[threading.Thread] = None
-        self.steps = 0
+        self.iterations = 0                  # vector steps (1 per round-trip)
+        self.frames = 0                      # env frames = iterations * E
         self.episodes = 0
-        self.episode_return = 0.0
+        self.episode_returns = np.zeros(self.num_envs, np.float64)
         self.returns = []
+
+    @property
+    def steps(self):
+        """Total env frames across lanes (back-compat alias)."""
+        return self.frames
 
     def start(self):
         self._thread = threading.Thread(target=self._loop, daemon=True)
@@ -41,32 +54,45 @@ class Actor:
             self._thread.join(timeout=timeout)
 
     def _loop(self):
-        env = self.envs[0]
-        obs = env.reset()
-        traj = {"obs": [], "actions": [], "rewards": [], "dones": []}
+        E = self.num_envs
+        obs = self.vec.reset()                       # (E, ...)
+        # lanes step in lockstep, so one batched accumulator suffices: O(1)
+        # appends per iteration, split into per-lane unrolls only at flush
+        buf = {"obs": [], "actions": [], "rewards": [], "dones": []}
         while not self._stop.is_set():
-            reply = self.server.submit(self.actor_id, obs)
-            try:
-                action = reply.get(timeout=5.0)
-            except Exception:
-                continue
-            nobs, reward, done = env.step(int(action))
-            traj["obs"].append(obs)
-            traj["actions"].append(int(action))
-            traj["rewards"].append(reward)
-            traj["dones"].append(bool(done))
-            self.steps += 1
-            self.episode_return += reward
-            if done:
+            # ONE request per iteration; on timeout keep waiting on the SAME
+            # reply — resubmitting would advance the server's per-lane
+            # recurrent state twice for one observation
+            reply = self.server.submit_batch(self.actor_id, obs)
+            actions = None
+            while not self._stop.is_set():
+                try:
+                    actions = np.asarray(reply.get(timeout=1.0))  # (E,)
+                    break
+                except queue.Empty:
+                    continue
+            if actions is None:
+                break
+            nobs, rewards, dones = self.vec.step(actions)
+            self.iterations += 1
+            self.frames += E
+            buf["obs"].append(obs)
+            buf["actions"].append(actions)
+            buf["rewards"].append(rewards)
+            buf["dones"].append(dones)
+            self.episode_returns += rewards
+            for lane in np.flatnonzero(dones):
                 self.episodes += 1
-                self.returns.append(self.episode_return)
-                self.episode_return = 0.0
+                self.returns.append(float(self.episode_returns[lane]))
+                self.episode_returns[lane] = 0.0
+            if len(buf["actions"]) >= self.unroll:
+                stacked = {k: np.stack(v) for k, v in buf.items()}  # (T, E, ..)
+                for lane in range(E):
+                    self.sink({
+                        "obs": stacked["obs"][:, lane],
+                        "actions": stacked["actions"][:, lane].astype(np.int32),
+                        "rewards": stacked["rewards"][:, lane].astype(np.float32),
+                        "dones": stacked["dones"][:, lane].astype(np.float32),
+                    })
+                buf = {"obs": [], "actions": [], "rewards": [], "dones": []}
             obs = nobs
-            if len(traj["actions"]) >= self.unroll:
-                self.sink({
-                    "obs": np.asarray(traj["obs"]),
-                    "actions": np.asarray(traj["actions"], np.int32),
-                    "rewards": np.asarray(traj["rewards"], np.float32),
-                    "dones": np.asarray(traj["dones"], np.float32),
-                })
-                traj = {"obs": [], "actions": [], "rewards": [], "dones": []}

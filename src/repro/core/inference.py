@@ -2,15 +2,20 @@
 
 Actors do NOT run the policy network locally (IMPALA-style); they send
 observations to this server, which batches them and runs one jitted
-forward step on the accelerator, returning actions. Two SEED details are
+forward step on the accelerator, returning actions. Three SEED details are
 first-class here:
 
   * **batching deadline** (straggler mitigation): the server closes a batch
     when it is full OR when `deadline_ms` elapses, so one slow actor cannot
     stall the pipeline — the learner's analogue of the paper's observation
     that slow environment interaction starves the accelerator;
-  * **recurrent state residency**: per-actor core state (LSTM / KV / SSM)
-    stays on the server, so actors exchange only (obs -> action).
+  * **lane flattening** (vectorized actors): each request carries a whole
+    lane-batch `obs[E, ...]` from one actor; the server concatenates lanes
+    across requests into a single policy forward, so the accelerator batch
+    is `sum(E_i)` lanes, not "number of requests";
+  * **recurrent state residency**: per-*lane* core state (LSTM / KV / SSM)
+    stays on the server, keyed by `(actor_id, env_id)` slots, so actors
+    exchange only (obs -> action) and lanes keep distinct recurrent state.
 
 In-process queues stand in for the gRPC transport of a real deployment;
 the interface below is the only seam a networked transport would replace.
@@ -19,8 +24,9 @@ the interface below is the only seam a networked transport would replace.
 import queue
 import threading
 import time
+import traceback
 from dataclasses import dataclass, field
-from typing import Any, Callable, Dict, Optional
+from typing import Callable, Dict, Optional, Tuple
 
 import numpy as np
 
@@ -28,27 +34,42 @@ import numpy as np
 @dataclass
 class InferenceRequest:
     actor_id: int
-    obs: np.ndarray
+    obs: np.ndarray              # (E, ...) lane-batched observations
     reply: "queue.Queue"
+    scalar: bool = False         # legacy single-obs submit: unwrap the reply
     t_enqueue: float = field(default_factory=time.perf_counter)
+
+    @property
+    def lanes(self) -> int:
+        return self.obs.shape[0]
 
 
 class InferenceServer:
-    """policy_step: (stacked_obs (N, ...), actor_ids (N,)) -> actions (N,).
+    """policy_step: (stacked_obs (N, ...), slot_ids (N,)) -> actions (N,).
 
-    The callable owns all device state (params, per-actor recurrent state).
+    N is the total number of *lanes* flattened across the batched requests.
+    `slot_ids` are dense ints assigned per (actor_id, env_id) on first
+    sight; the callable owns all device state (params, per-slot recurrent
+    state) and indexes it with them.
     """
 
     def __init__(self, policy_step: Callable, max_batch: int,
                  deadline_ms: float = 10.0):
         self.policy_step = policy_step
-        self.max_batch = max_batch
+        self.max_batch = max_batch           # lane budget per forward
         self.deadline_ms = deadline_ms
         self.requests: "queue.Queue[InferenceRequest]" = queue.Queue()
         self._stop = threading.Event()
         self._thread: Optional[threading.Thread] = None
-        self.stats = {"batches": 0, "requests": 0, "batch_occupancy": 0.0,
-                      "queue_wait_s": 0.0, "compute_s": 0.0}
+        self._slots: Dict[Tuple[int, int], int] = {}   # (actor, lane) -> slot
+        self._slot_cache: Dict[Tuple[int, int], np.ndarray] = {}
+        self._slot_lock = threading.Lock()
+        # "requests" counts LANES (the supply quantity the paper sweeps);
+        # "rpcs" counts request messages (the transport quantity).
+        self.stats = {"batches": 0, "requests": 0, "rpcs": 0,
+                      "batch_occupancy": 0.0, "queue_wait_s": 0.0,
+                      "compute_s": 0.0}
+        self.error: Optional[str] = None     # traceback of a fatal loop error
 
     def start(self):
         self._thread = threading.Thread(target=self._loop, daemon=True)
@@ -60,42 +81,90 @@ class InferenceServer:
             self._thread.join(timeout=5.0)
 
     def submit(self, actor_id: int, obs: np.ndarray) -> "queue.Queue":
-        r = InferenceRequest(actor_id, obs, queue.Queue(maxsize=1))
+        """Single-observation submit; the reply holds one action."""
+        r = InferenceRequest(actor_id, np.asarray(obs)[None],
+                             queue.Queue(maxsize=1), scalar=True)
         self.requests.put(r)
         return r.reply
 
+    def submit_batch(self, actor_id: int, obs: np.ndarray) -> "queue.Queue":
+        """Lane-batched submit: obs is (E, ...); the reply holds (E,) actions."""
+        r = InferenceRequest(actor_id, np.asarray(obs),
+                             queue.Queue(maxsize=1))
+        self.requests.put(r)
+        return r.reply
+
+    def slot_ids(self, actor_id: int, lanes: int) -> np.ndarray:
+        """Dense per-(actor, lane) slots — recurrent-state indices. The
+        mapping is immutable once assigned, so steady state is one dict hit."""
+        cached = self._slot_cache.get((actor_id, lanes))
+        if cached is not None:
+            return cached
+        with self._slot_lock:
+            out = np.empty((lanes,), np.int32)
+            for lane in range(lanes):
+                key = (actor_id, lane)
+                if key not in self._slots:
+                    self._slots[key] = len(self._slots)
+                out[lane] = self._slots[key]
+            self._slot_cache[(actor_id, lanes)] = out
+        return out
+
+    @property
+    def num_slots(self) -> int:
+        return len(self._slots)
+
     def _loop(self):
+        # record a fatal policy_step/shape error instead of dying silently:
+        # actors wait on replies indefinitely, so a silent death here would
+        # stall the whole system with no trace (same class as Learner.error)
+        try:
+            self._serve()
+        except Exception:
+            self.error = traceback.format_exc()
+            self._stop.set()
+
+    def _serve(self):
         while not self._stop.is_set():
             batch = self._collect()
             if not batch:
                 continue
             t0 = time.perf_counter()
-            obs = np.stack([r.obs for r in batch])
-            ids = np.array([r.actor_id for r in batch], np.int32)
+            obs = np.concatenate([r.obs for r in batch])      # (N_lanes, ...)
+            ids = np.concatenate(
+                [self.slot_ids(r.actor_id, r.lanes) for r in batch])
             actions = np.asarray(self.policy_step(obs, ids))
             dt = time.perf_counter() - t0
-            for r, a in zip(batch, actions):
-                r.reply.put(a)
-                self.stats["queue_wait_s"] += t0 - r.t_enqueue
+            lanes = 0
+            for r in batch:
+                a = actions[lanes:lanes + r.lanes]
+                lanes += r.lanes
+                r.reply.put(a[0] if r.scalar else a)
+                self.stats["queue_wait_s"] += (t0 - r.t_enqueue) * r.lanes
             self.stats["compute_s"] += dt
             self.stats["batches"] += 1
-            self.stats["requests"] += len(batch)
-            self.stats["batch_occupancy"] += len(batch) / self.max_batch
+            self.stats["requests"] += lanes
+            self.stats["rpcs"] += len(batch)
+            self.stats["batch_occupancy"] += min(lanes / self.max_batch, 1.0)
 
     def _collect(self):
-        """Fill a batch until max_batch or the deadline — straggler cut."""
+        """Fill a batch until `max_batch` LANES or the deadline — straggler
+        cut. One request's lanes are never split across forwards."""
         batch = []
         try:
             batch.append(self.requests.get(timeout=0.05))
         except queue.Empty:
             return batch
+        lanes = batch[0].lanes
         deadline = time.perf_counter() + self.deadline_ms / 1e3
-        while len(batch) < self.max_batch:
+        while lanes < self.max_batch:
             remaining = deadline - time.perf_counter()
             if remaining <= 0:
                 break
             try:
-                batch.append(self.requests.get(timeout=remaining))
+                r = self.requests.get(timeout=remaining)
             except queue.Empty:
                 break
+            batch.append(r)
+            lanes += r.lanes
         return batch

@@ -9,6 +9,7 @@ and restart-on-failure live here (see repro.checkpoint)."""
 import queue
 import threading
 import time
+import traceback
 from typing import Any, Callable, Dict, Optional
 
 import jax
@@ -34,6 +35,7 @@ class Learner:
         self.metrics: Dict[str, float] = {}
         self.train_time_s = 0.0
         self.wait_time_s = 0.0
+        self.error: Optional[str] = None     # traceback of a fatal loop error
 
     def start(self):
         self._thread = threading.Thread(target=self._loop, daemon=True)
@@ -71,8 +73,14 @@ class Learner:
             self.ckpt.save(self.state, self.steps)
 
     def _loop(self):
+        # A bare `except queue.Empty` would let any other exception kill the
+        # thread silently; record it so the system can surface the death.
         while not self._stop.is_set():
             try:
                 self._one_step()
             except queue.Empty:
                 continue
+            except Exception:
+                self.error = traceback.format_exc()
+                self._stop.set()
+                break

@@ -22,7 +22,7 @@ express the required host threads per 'SM equivalent' of accelerator
 compute (paper: ratio >= 1 for current-generation SMs).
 """
 
-from dataclasses import dataclass
+from dataclasses import dataclass, replace
 
 import numpy as np
 
@@ -39,21 +39,36 @@ class SystemModel:
         env-steps/s regardless of actor count (actors beyond that only
         hide inference latency, which is already hidden).
     """
-    t_env: float          # CPU seconds per env step (per actor)
+    t_env: float          # CPU seconds per env step (per lane)
     t_inf0: float         # inference round-trip base latency (s)
-    t_inf1: float         # inference latency growth per batched request (s)
+    t_inf1: float         # inference latency growth per batched lane (s)
     hw_threads: int
-    batch_cap: int = 64   # SEED inference server max batch
+    batch_cap: int = 64   # SEED inference server max lane batch
+    envs_per_actor: int = 1   # E lanes vectorized per actor thread
 
     def throughput(self, n_actors):
+        """Env frames/s at n actor threads, each stepping E lanes.
+
+        One actor cycle supplies E frames and costs E*t_env of CPU plus ONE
+        inference round-trip over the flattened lane batch (n*E lanes, up
+        to the server cap) — the vectorization amortizes t_inf over E. The
+        CPU capacity ceiling H / t_env is unchanged: lanes still cost t_env
+        of thread time each, so E>1 raises the latency-limited regime, not
+        the saturation ceiling.
+        """
         n = np.asarray(n_actors, np.float64)
-        t_inf = self.t_inf0 + self.t_inf1 * np.minimum(n, self.batch_cap)
-        latency_limited = n / (self.t_env + t_inf)
+        E = float(self.envs_per_actor)
+        t_inf = self.t_inf0 + self.t_inf1 * np.minimum(n * E, self.batch_cap)
+        latency_limited = n * E / (self.t_env * E + t_inf)
         capacity = self.hw_threads / self.t_env
         return np.minimum(latency_limited, capacity)
 
     def speedup(self, n_actors, base_actors=4):
         return self.throughput(n_actors) / self.throughput(base_actors)
+
+    def with_envs(self, envs_per_actor: int) -> "SystemModel":
+        """Same calibration, different lane count — the second sweep axis."""
+        return replace(self, envs_per_actor=envs_per_actor)
 
 
 def fit_paper_actor_model(hw_threads=40, target_5p8=5.8, target_2p0=2.0):

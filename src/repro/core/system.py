@@ -1,12 +1,13 @@
-"""End-to-end SEED system wiring: N actors + central inference + learner.
+"""End-to-end SEED system wiring: N actors x E env lanes + central
+inference + learner.
 
 This is the measured system behind the Fig-3 reproduction: construct with
-`num_actors` and run; `throughput()` reports env-frames/s, inference batch
-occupancy, and learner steps/s — the quantities the paper sweeps.
+`num_actors` (CPU threads) and `envs_per_actor` (lanes per thread — the
+CuLE-style batching axis) and run; `throughput()` reports env-frames/s
+(= actor iterations x E), inference batch occupancy, and learner steps/s —
+the quantities the paper sweeps.
 """
 
-import queue
-import threading
 import time
 from typing import Callable, Optional
 
@@ -20,20 +21,23 @@ from repro.core.replay import PrioritizedReplay
 
 class SeedSystem:
     def __init__(self, *, env_factory: Callable, policy_step: Callable,
-                 num_actors: int, unroll: int,
+                 num_actors: int, unroll: int, envs_per_actor: int = 1,
                  train_step: Optional[Callable] = None, state=None,
                  learner_batch: int = 8, replay_capacity: int = 512,
                  min_replay: int = 16, deadline_ms: float = 5.0,
                  inference_batch: Optional[int] = None,
                  checkpoint_manager=None, checkpoint_every: int = 0):
+        self.envs_per_actor = envs_per_actor
         self.replay = PrioritizedReplay(replay_capacity)
         self.min_replay = min_replay
         self.learner_batch = learner_batch
         self.server = InferenceServer(
-            policy_step, max_batch=inference_batch or max(num_actors, 1),
+            policy_step,
+            max_batch=inference_batch or max(num_actors * envs_per_actor, 1),
             deadline_ms=deadline_ms)
-        self.actors = [Actor(i, env_factory, self.server,
-                             self._sink, unroll) for i in range(num_actors)]
+        self.actors = [Actor(i, env_factory, self.server, self._sink, unroll,
+                             num_envs=envs_per_actor)
+                       for i in range(num_actors)]
         self.learner = None
         if train_step is not None:
             self.learner = Learner(
@@ -51,6 +55,13 @@ class SeedSystem:
         batch, idx, w = self.replay.sample(self.learner_batch)
         batch["is_weights"] = w
         return batch, idx
+
+    def warmup(self):
+        """Pre-compile the env step paths (vmapped JAX envs pay ~1s of jit on
+        first reset/step) so a short measured `run()` window is steady-state."""
+        for a in self.actors:
+            a.vec.reset()
+            a.vec.step(np.zeros(a.num_envs, np.int32))
 
     def run(self, seconds: float, with_learner: bool = True):
         self.server.start()
@@ -72,18 +83,24 @@ class SeedSystem:
         return self.throughput(elapsed)
 
     def throughput(self, elapsed: float):
-        frames = sum(a.steps for a in self.actors)
+        iterations = sum(a.iterations for a in self.actors)
+        frames = sum(a.frames for a in self.actors)   # = iterations * E
         s = self.server.stats
         return {
             "elapsed_s": elapsed,
+            "envs_per_actor": self.envs_per_actor,
+            "actor_iterations": iterations,
             "env_frames": frames,
             "env_frames_per_s": frames / elapsed,
             "inference_batches": s["batches"],
+            "inference_lanes": s["requests"],
             "mean_batch_occupancy": s["batch_occupancy"] / max(s["batches"], 1),
             "mean_queue_wait_ms": 1e3 * s["queue_wait_s"] / max(s["requests"], 1),
             "inference_compute_s": s["compute_s"],
             "learner_steps": self.learner.steps if self.learner else 0,
             "learner_steps_per_s": (self.learner.steps / elapsed) if self.learner else 0.0,
+            "learner_error": self.learner.error if self.learner else None,
+            "inference_error": self.server.error,
             "episode_return_mean": float(np.mean(
                 [r for a in self.actors for r in a.returns[-20:]] or [0.0])),
         }

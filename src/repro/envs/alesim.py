@@ -13,6 +13,7 @@ import numpy as np
 
 class ALESimEnv:
     num_actions = 18  # full ALE action set
+    auto_resets = True  # step() returns the next episode's obs on done
 
     def __init__(self, frame=84, channels=4, step_cost=4096, episode_len=1000,
                  seed=0):
@@ -20,10 +21,15 @@ class ALESimEnv:
         self.frame, self.channels = frame, channels
         self.step_cost = step_cost
         self.episode_len = episode_len
+        self.reseed(seed)
+
+    def reseed(self, seed: int):
+        """Re-derive all stochastic state; lets a vector wrapper decorrelate
+        lanes built from one factory (see `repro.envs.vector`)."""
         self.rng = np.random.default_rng(seed)
-        self._work = self.rng.random((step_cost,)).astype(np.float32)
+        self._work = self.rng.random((self.step_cost,)).astype(np.float32)
         self.t = 0
-        self._state = self.rng.random((frame, frame)).astype(np.float32)
+        self._state = self.rng.random((self.frame, self.frame)).astype(np.float32)
 
     @property
     def obs_shape(self):

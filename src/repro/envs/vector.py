@@ -1,0 +1,157 @@
+"""Vectorized environments: E env lanes behind one `step()` call.
+
+The paper's central quantity — env-interaction throughput per CPU thread —
+is dominated by per-step overhead: one inference round-trip and one Python
+dispatch per frame. CuLE (Dalton et al., 2019) and GPU-resident robotic
+simulation (Liang et al., 2018) show the fix: amortize both over a *batch*
+of environments. This module is that batching seam for the whole stack:
+
+  * `SyncVectorEnv` — loops E host (numpy) envs such as `ALESimEnv` in one
+    Python call, with per-lane auto-reset. Amortizes the inference
+    round-trip (one request carries E observations) but still pays E
+    Python step calls.
+  * `JaxVectorEnv` — `jax.vmap` + `jit` over a pure-JAX env (cartpole,
+    catch, tokenworld), so the whole lane batch advances in ONE device
+    call, CuLE-style. Amortizes both the round-trip and the dispatch.
+
+Both expose the same host-facing contract, the only one actors see:
+
+    reset()        -> obs[E, ...]
+    step(actions)  -> (obs[E, ...], rewards[E], dones[E])
+
+Lanes never block each other: a `done` lane is reset in place (by the env
+itself when it auto-resets, by the wrapper otherwise) and the returned obs
+for that lane is the first observation of the next episode.
+"""
+
+import inspect
+from typing import Callable, Optional, Sequence, Union
+
+import numpy as np
+
+
+class VectorEnv:
+    """Interface: E independent env lanes stepped as one batch."""
+
+    num_envs: int
+    num_actions: int
+    obs_shape: tuple
+
+    def reset(self) -> np.ndarray:
+        raise NotImplementedError
+
+    def step(self, actions) -> tuple:
+        raise NotImplementedError
+
+
+class SyncVectorEnv(VectorEnv):
+    """Loop E host envs (`reset() -> obs`, `step(a) -> (obs, r, done)`).
+
+    Per-lane auto-reset: when lane i reports done, it is reset before the
+    next step so no lane ever idles. Envs that already auto-reset (declare
+    `auto_resets = True`, e.g. `ALESimEnv`) are not reset a second time.
+    """
+
+    def __init__(self, env_factory: Union[Callable, Sequence], num_envs: int = 1,
+                 envs: Optional[Sequence] = None, seed: Optional[int] = None):
+        if envs is not None:
+            self.envs = list(envs)
+        elif callable(env_factory):
+            self.envs = [env_factory() for _ in range(num_envs)]
+        else:  # a single pre-built env only supports one lane
+            assert num_envs == 1, "pass a factory (or envs=...) for num_envs > 1"
+            self.envs = [env_factory]
+        self.num_envs = len(self.envs)
+        self.num_actions = self.envs[0].num_actions
+        self.obs_shape = tuple(self.envs[0].obs_shape)
+        self._auto = [bool(getattr(e, "auto_resets", False)) for e in self.envs]
+        if seed is not None:
+            # decorrelate lanes built from one factory: a factory closes over
+            # fixed ctor args, so without this every lane is an exact clone
+            for i, e in enumerate(self.envs):
+                if hasattr(e, "reseed"):
+                    e.reseed(seed * 1_000_003 + i)
+
+    def reset(self):
+        return np.stack([np.asarray(e.reset()) for e in self.envs])
+
+    def step(self, actions):
+        actions = np.asarray(actions)
+        assert actions.shape[0] == self.num_envs, actions.shape
+        obs, rewards, dones = [], [], []
+        for i, env in enumerate(self.envs):
+            o, r, d = env.step(int(actions[i]))
+            if d and not self._auto[i]:
+                o = env.reset()          # per-lane auto-reset
+            obs.append(np.asarray(o))
+            rewards.append(r)
+            dones.append(d)
+        return (np.stack(obs), np.asarray(rewards, np.float32),
+                np.asarray(dones, bool))
+
+
+class JaxVectorEnv(VectorEnv):
+    """vmap+jit over a pure-JAX env (`reset(key) -> (state, obs)`,
+    `step(state, a) -> (state, obs, reward, done)`).
+
+    The env batch lives as one stacked state pytree; each `step()` is a
+    single jitted device call over all E lanes. The pure-JAX envs in this
+    repo auto-reset inside `step`, so lanes never stall. Lane i is seeded
+    with `split(PRNGKey(seed), E)[i]` — deterministic and reproducible
+    against a scalar loop over the same keys.
+    """
+
+    def __init__(self, env, num_envs: int, seed: int = 0):
+        import jax  # deferred: host-only deployments never pay the import
+
+        self.env = env
+        self.num_envs = num_envs
+        self.num_actions = env.num_actions
+        self.obs_shape = tuple(getattr(env, "obs_shape", ()))
+        self._keys = jax.random.split(jax.random.PRNGKey(seed), num_envs)
+        self._reset = jax.jit(jax.vmap(env.reset))
+        self._step = jax.jit(jax.vmap(env.step))
+        self._state = None
+
+    def reset(self):
+        self._state, obs = self._reset(self._keys)
+        return np.asarray(obs)
+
+    def step(self, actions):
+        import jax.numpy as jnp
+
+        assert self._state is not None, "call reset() before step()"
+        a = jnp.asarray(np.asarray(actions), jnp.int32)
+        self._state, obs, reward, done = self._step(self._state, a)
+        return (np.asarray(obs), np.asarray(reward, np.float32),
+                np.asarray(done, bool))
+
+
+def _is_jax_env(env) -> bool:
+    """Pure-JAX envs take a PRNG key in reset(); host envs take nothing."""
+    try:
+        return len(inspect.signature(env.reset).parameters) >= 1
+    except (TypeError, ValueError):
+        return False
+
+
+def make_vector_env(env, num_envs: int = 1, seed: int = 0) -> VectorEnv:
+    """Normalize (factory | env | VectorEnv) into a VectorEnv of E lanes.
+
+    Pure-JAX envs (stateless, keyed reset) go through `JaxVectorEnv`; host
+    envs through `SyncVectorEnv`. An existing VectorEnv passes through.
+    """
+    if isinstance(env, VectorEnv):
+        return env
+    is_factory = callable(env) and (inspect.isclass(env)
+                                    or not hasattr(env, "reset"))
+    instance = env() if is_factory else env
+    if isinstance(instance, VectorEnv):
+        return instance
+    if _is_jax_env(instance):
+        return JaxVectorEnv(instance, num_envs, seed=seed)
+    if is_factory:
+        envs = [instance] + [env() for _ in range(num_envs - 1)]
+        return SyncVectorEnv(None, envs=envs, seed=seed)
+    # pre-built env: the caller chose its state (incl. seed) — leave it alone
+    return SyncVectorEnv(instance, num_envs)

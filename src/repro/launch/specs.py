@@ -126,7 +126,7 @@ def cache_specs(bundle, shape: InputShape, mesh, rules, dtype=jnp.bfloat16):
     cfg = bundle.cfg
     sds = jax.eval_shape(
         lambda: bundle.init_cache(shape.global_batch, shape.seq_len, dtype))
-    flat, treedef = jax.tree.flatten_with_path(sds)
+    flat, treedef = jax.tree_util.tree_flatten_with_path(sds)
     leaves = []
     for path, x in flat:
         ks = jax.tree_util.keystr(path)

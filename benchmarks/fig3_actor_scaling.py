@@ -1,6 +1,6 @@
 """Fig 3 reproduction: actor-count sweep, plus the envs-per-actor axis.
 
-Three parts:
+Four parts:
   (a) MEASURED (scaled-down): the real SEED system (threads + central
       inference + ALESim envs) swept over actor counts on this host. With 1
       hardware core the saturation knee appears immediately — the same
@@ -10,8 +10,16 @@ Three parts:
   (c) ENV VECTORIZATION (measured + model): env-frames/s per actor thread
       as each actor steps E lanes per inference round-trip (CuLE-style
       batching) — the highest-leverage knob on the CPU/GPU ratio.
+  (d) DESIGN POINTS (measured + model): per-step host vs vectorized host vs
+      device-resident (fused env+policy `lax.scan`, `repro.rollout`) at
+      equal (num_actors, E) on a pure-JAX env — the paper's CPU/GPU-ratio
+      endgame, where env stepping leaves the host entirely.
+
+`--smoke` shrinks every measured window so CI can exercise the full
+measured path in seconds.
 """
 
+import argparse
 import time
 
 import numpy as np
@@ -19,6 +27,7 @@ import numpy as np
 from repro.core.provisioning import fit_paper_actor_model
 from repro.core.system import SeedSystem
 from repro.envs.alesim import ALESimEnv
+from repro.envs.catch import CatchEnv
 
 
 def measured_sweep(actor_counts=(1, 2, 4, 8), seconds=1.2, step_cost=2048,
@@ -65,10 +74,63 @@ def model_env_sweep(env_counts=(1, 2, 4, 8, 16), n_actors=40):
             for E in env_counts]
 
 
+def measured_backend_sweep(num_actors=2, envs_per_actor=8, seconds=1.0,
+                           unroll=16):
+    """Part (d), measured: the three design points at equal (num_actors, E)
+    on a pure-JAX env (Catch), so the env itself is identical across all
+    three and only the rollout architecture changes."""
+    import jax
+
+    def host_policy(obs, ids):
+        return np.random.randint(0, CatchEnv.num_actions, size=(obs.shape[0],))
+
+    def device_policy(params, core, obs, key):
+        return jax.random.randint(key, (obs.shape[0],), 0,
+                                  CatchEnv.num_actions), core
+
+    points = (("per_step_host", "host", 1),
+              ("vectorized_host", "host", envs_per_actor),
+              ("device_resident", "device", envs_per_actor))
+    rows = []
+    for name, backend, E in points:
+        kwargs = dict(env_factory=CatchEnv, num_actors=num_actors,
+                      unroll=unroll, envs_per_actor=E)
+        if backend == "device":
+            sys_ = SeedSystem(backend="device", policy_apply=device_policy,
+                              **kwargs)
+        else:
+            sys_ = SeedSystem(policy_step=host_policy, deadline_ms=2.0,
+                              **kwargs)
+        sys_.warmup()
+        stats = sys_.run(seconds=seconds, with_learner=False)
+        rows.append((name, E, stats["env_frames_per_s"]))
+    return rows
+
+
+def model_backend_sweep(envs_per_actor=8, n_actors=40):
+    """Part (d), model: the same three design points at paper scale."""
+    model, _ = fit_paper_actor_model()
+    return [
+        ("per_step_host", float(model.throughput(n_actors))),
+        ("vectorized_host",
+         float(model.with_envs(envs_per_actor).throughput(n_actors))),
+        ("device_resident",
+         float(model.with_envs(envs_per_actor).with_device()
+               .throughput(n_actors))),
+    ]
+
+
 def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny measured windows (CI: exercise the path)")
+    args = ap.parse_args()
+    sec = 0.3 if args.smoke else 1.2
+    actor_counts = (1, 2) if args.smoke else (1, 2, 4, 8)
+    env_counts = (1, 4) if args.smoke else (1, 2, 4, 8)
     print("# fig3a: measured actor sweep (scaled-down, this host)")
     print("name,value,derived")
-    rows = measured_sweep()
+    rows = measured_sweep(actor_counts=actor_counts, seconds=sec)
     base = rows[0][1]
     for n, fps, occ, wait in rows:
         print(f"fig3a_actors_{n},{fps:.1f},frames_per_s speedup={fps/base:.2f} "
@@ -83,7 +145,7 @@ def main():
     print(f"fig3b_check_40to256,{s256_40:.2f},paper=2.0 err={abs(s256_40-2.0)/2.0:.1%}")
     print(f"fig3b_fit_residual,{err:.4f},rms")
     print("# fig3c: envs-per-actor sweep (measured, fixed actor threads)")
-    env_rows = measured_env_sweep()
+    env_rows = measured_env_sweep(env_counts=env_counts, seconds=sec)
     per_thread_base = env_rows[0][2]
     for E, fps, per_thread, occ, wait in env_rows:
         print(f"fig3c_envs_{E},{fps:.1f},frames_per_s per_thread={per_thread:.1f} "
@@ -92,6 +154,21 @@ def main():
     print("# fig3c: model at paper scale (40 actors, E lanes each)")
     for E, s in model_env_sweep():
         print(f"fig3c_model_envs_{E},{s:.2f},throughput_vs_E1_at_40_actors")
+    print("# fig3d: design points at equal (num_actors, E) — measured, Catch")
+    d_rows = measured_backend_sweep(seconds=sec, unroll=8 if args.smoke else 16)
+    d_base = d_rows[0][2]
+    for name, E, fps in d_rows:
+        print(f"fig3d_{name},{fps:.1f},frames_per_s E={E} "
+              f"vs_per_step={fps/d_base:.2f}x")
+    dev = dict((n, f) for n, _, f in d_rows)
+    if dev["device_resident"] <= dev["vectorized_host"]:
+        print("fig3d_WARNING,0,device_resident did not beat vectorized_host")
+    print("# fig3d: model at paper scale (40 actors x 8 lanes)")
+    m_rows = model_backend_sweep()
+    m_base = m_rows[0][1]
+    for name, t in m_rows:
+        print(f"fig3d_model_{name},{t:.1f},frames_per_s_model "
+              f"vs_per_step={t/m_base:.2f}x")
     # GPU power / perf-per-watt (paper's right axis): utilization-linear model
     from repro.hw import V100
     for n, s in sw:

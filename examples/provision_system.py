@@ -29,10 +29,18 @@ def main():
     for n in (4, 40, 256):
         print(f"   {n:4d} actors -> speedup {float(model.speedup(n, 4)):.2f}x")
 
-    print("\n== accelerator derating (Fig 4)")
+    print("\n== the three rollout design points (40 actors x 8 lanes, model)")
+    m8 = model.with_envs(8)
+    print(f"   per-step host    : {float(model.throughput(40)):8.1f} frames/s")
+    print(f"   vectorized host  : {float(m8.throughput(40)):8.1f} frames/s")
+    print(f"   device-resident  : {float(m8.with_device().throughput(40)):8.1f}"
+          f" frames/s (fused lax.scan; bound by scan throughput, not threads)")
+
+    print("\n== accelerator derating (Fig 4), swept along E like Fig 3")
     der = fit_paper_derating()
     for sm in (80, 40, 8, 2):
-        print(f"   {sm:3d}/80 SMs -> slowdown {float(der.slowdown(sm/80)):.2f}x")
+        print(f"   {sm:3d}/80 SMs -> slowdown {float(der.slowdown(sm/80)):.2f}x"
+              f"  (E=8: {float(der.with_envs(8).slowdown(sm/80)):.2f}x)")
 
     print("\n== provisioning RL workloads on a v5e-8 host slice")
     workloads = [

@@ -19,6 +19,30 @@ import numpy as np
 from repro.envs.vector import make_vector_env
 
 
+def flush_lane_unrolls(stacked, sink: Callable):
+    """Split a (T, E, ...) trajectory dict into E per-lane replay records —
+    the single schema BOTH rollout backends (host actors and device
+    `RolloutWorker`s) feed the trajectory sink."""
+    for lane in range(stacked["actions"].shape[1]):
+        sink({
+            "obs": stacked["obs"][:, lane],
+            "actions": stacked["actions"][:, lane].astype(np.int32),
+            "rewards": stacked["rewards"][:, lane].astype(np.float32),
+            "dones": stacked["dones"][:, lane].astype(np.float32),
+        })
+
+
+def account_episode_ends(rewards, dones, episode_returns, returns) -> int:
+    """Fold one vector step's (E,) rewards/dones into the per-lane running
+    returns; appends finished-episode returns and returns how many ended."""
+    episode_returns += rewards
+    ended = np.flatnonzero(dones)
+    for lane in ended:
+        returns.append(float(episode_returns[lane]))
+        episode_returns[lane] = 0.0
+    return len(ended)
+
+
 class Actor:
     def __init__(self, actor_id: int, env, server, sink: Callable,
                  unroll: int, num_envs: int = 1, seed: Optional[int] = None):
@@ -80,19 +104,10 @@ class Actor:
             buf["actions"].append(actions)
             buf["rewards"].append(rewards)
             buf["dones"].append(dones)
-            self.episode_returns += rewards
-            for lane in np.flatnonzero(dones):
-                self.episodes += 1
-                self.returns.append(float(self.episode_returns[lane]))
-                self.episode_returns[lane] = 0.0
+            self.episodes += account_episode_ends(
+                rewards, dones, self.episode_returns, self.returns)
             if len(buf["actions"]) >= self.unroll:
                 stacked = {k: np.stack(v) for k, v in buf.items()}  # (T, E, ..)
-                for lane in range(E):
-                    self.sink({
-                        "obs": stacked["obs"][:, lane],
-                        "actions": stacked["actions"][:, lane].astype(np.int32),
-                        "rewards": stacked["rewards"][:, lane].astype(np.float32),
-                        "dones": stacked["dones"][:, lane].astype(np.float32),
-                    })
+                flush_lane_unrolls(stacked, self.sink)
                 buf = {"obs": [], "actions": [], "rewards": [], "dones": []}
             obs = nobs

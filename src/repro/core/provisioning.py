@@ -45,19 +45,36 @@ class SystemModel:
     hw_threads: int
     batch_cap: int = 64   # SEED inference server max lane batch
     envs_per_actor: int = 1   # E lanes vectorized per actor thread
+    backend: str = "host"     # "host" | "device" (fused-scan rollouts)
+    t_dev0: float = 0.0   # device: fixed per-scan-step cost (launch/dispatch)
+    t_dev1: float = 0.0   # device: per-lane compute per scan step
 
     def throughput(self, n_actors):
         """Env frames/s at n actor threads, each stepping E lanes.
 
-        One actor cycle supplies E frames and costs E*t_env of CPU plus ONE
-        inference round-trip over the flattened lane batch (n*E lanes, up
-        to the server cap) — the vectorization amortizes t_inf over E. The
-        CPU capacity ceiling H / t_env is unchanged: lanes still cost t_env
-        of thread time each, so E>1 raises the latency-limited regime, not
-        the saturation ceiling.
+        Host backend: one actor cycle supplies E frames and costs E*t_env
+        of CPU plus ONE inference round-trip over the flattened lane batch
+        (n*E lanes, up to the server cap) — the vectorization amortizes
+        t_inf over E. The CPU capacity ceiling H / t_env is unchanged:
+        lanes still cost t_env of thread time each, so E>1 raises the
+        latency-limited regime, not the saturation ceiling.
+
+        Device backend (fused env+policy scan): both t_env (host CPU) and
+        t_inf (round-trip) drop out — per scan step the whole n*E lane
+        batch advances in t_dev0 + t_dev1 * lanes of accelerator time, so
+        throughput = lanes / t_step, asymptotically bounded by the scan
+        throughput 1/t_dev1 (not by host threads).
         """
         n = np.asarray(n_actors, np.float64)
         E = float(self.envs_per_actor)
+        if self.backend == "device":
+            if self.t_dev1 <= 0.0:
+                raise ValueError(
+                    "device backend needs per-lane scan cost t_dev1 > 0; "
+                    "construct via with_device(t_dev0, t_dev1)")
+            lanes = n * E
+            t_step = self.t_dev0 + self.t_dev1 * lanes
+            return lanes / t_step
         t_inf = self.t_inf0 + self.t_inf1 * np.minimum(n * E, self.batch_cap)
         latency_limited = n * E / (self.t_env * E + t_inf)
         capacity = self.hw_threads / self.t_env
@@ -69,6 +86,18 @@ class SystemModel:
     def with_envs(self, envs_per_actor: int) -> "SystemModel":
         """Same calibration, different lane count — the second sweep axis."""
         return replace(self, envs_per_actor=envs_per_actor)
+
+    def with_device(self, t_dev0: float = 0.05,
+                    t_dev1: float = 0.002) -> "SystemModel":
+        """The device-resident operating point (fused `lax.scan` rollouts).
+
+        Costs are in t_env units like t_inf0/t_inf1. Defaults: the scan
+        amortizes kernel launches over the unroll, so the fixed per-step
+        cost is a few % of a host env step, and per-lane device compute is
+        ~500x cheaper than the host step it replaces — the CuLE-style
+        measurement the paper's ratio analysis argues for.
+        """
+        return replace(self, backend="device", t_dev0=t_dev0, t_dev1=t_dev1)
 
 
 def fit_paper_actor_model(hw_threads=40, target_5p8=5.8, target_2p0=2.0):
@@ -93,14 +122,26 @@ def fit_paper_actor_model(hw_threads=40, target_5p8=5.8, target_2p0=2.0):
 
 @dataclass(frozen=True)
 class DeratingModel:
-    """Fig 4: slowdown when accelerator compute is scaled by f (SM-disable)."""
-    overlap_s: float      # actor-side time the accelerator hides behind
+    """Fig 4: slowdown when accelerator compute is scaled by f (SM-disable).
+
+    `overlap_s` is calibrated per lane at E=1; with E lanes vectorized per
+    actor (the `SystemModel.with_envs` axis) each training round overlaps
+    E times as much actor-side env time, so derating hides behind a larger
+    window: `with_envs(8).slowdown(0.5) < slowdown(0.5)`.
+    """
+    overlap_s: float      # actor-side time the accelerator hides behind (E=1)
     accel_s: float        # accelerator-serial time at full compute
+    envs_per_actor: int = 1   # E lanes per actor thread (scales the overlap)
 
     def slowdown(self, f):
         f = np.asarray(f, np.float64)
-        t_full = self.overlap_s + self.accel_s
-        return (self.overlap_s + self.accel_s / f) / t_full
+        o = self.overlap_s * self.envs_per_actor
+        t_full = o + self.accel_s
+        return (o + self.accel_s / f) / t_full
+
+    def with_envs(self, envs_per_actor: int) -> "DeratingModel":
+        """Same calibration, different lane count — sweep Fig 4 along E."""
+        return replace(self, envs_per_actor=envs_per_actor)
 
 
 def fit_paper_derating(slowdown_at_half=1.06):

@@ -1,13 +1,23 @@
 """End-to-end SEED system wiring: N actors x E env lanes + central
-inference + learner.
+inference + learner, with two rollout backends.
 
 This is the measured system behind the Fig-3 reproduction: construct with
 `num_actors` (CPU threads) and `envs_per_actor` (lanes per thread — the
 CuLE-style batching axis) and run; `throughput()` reports env-frames/s
 (= actor iterations x E), inference batch occupancy, and learner steps/s —
 the quantities the paper sweeps.
+
+Backends (see `repro.rollout` for the design-point taxonomy):
+  * `backend="host"` (default): actor threads step host/vmapped envs and
+    query the central `InferenceServer` once per vector step (`policy_step`
+    is a host callable `(obs, slot_ids) -> actions`);
+  * `backend="device"`: `RolloutWorker` threads drive fused env+policy
+    `lax.scan` unrolls on the accelerator (`policy_apply` is a pure
+    function `(params, core, obs, key) -> (actions, core)`); params refresh
+    from the learner between scans via the publish/version seam.
 """
 
+import threading
 import time
 from typing import Callable, Optional
 
@@ -20,28 +30,57 @@ from repro.core.replay import PrioritizedReplay
 
 
 class SeedSystem:
-    def __init__(self, *, env_factory: Callable, policy_step: Callable,
+    def __init__(self, *, env_factory: Callable, policy_step: Optional[Callable] = None,
                  num_actors: int, unroll: int, envs_per_actor: int = 1,
+                 backend: str = "host", policy_apply: Optional[Callable] = None,
+                 init_params=None, init_core: Optional[Callable] = None,
                  train_step: Optional[Callable] = None, state=None,
                  learner_batch: int = 8, replay_capacity: int = 512,
                  min_replay: int = 16, deadline_ms: float = 5.0,
                  inference_batch: Optional[int] = None,
                  checkpoint_manager=None, checkpoint_every: int = 0):
+        if backend not in ("host", "device"):
+            raise ValueError(f"unknown backend {backend!r}; use 'host' or 'device'")
+        self.backend = backend
         self.envs_per_actor = envs_per_actor
         self.replay = PrioritizedReplay(replay_capacity)
         self.min_replay = min_replay
         self.learner_batch = learner_batch
-        self.server = InferenceServer(
-            policy_step,
-            max_batch=inference_batch or max(num_actors * envs_per_actor, 1),
-            deadline_ms=deadline_ms)
-        self.actors = [Actor(i, env_factory, self.server, self._sink, unroll,
-                             num_envs=envs_per_actor)
-                       for i in range(num_actors)]
+        self.server = None
+        if backend == "host":
+            if policy_step is None:
+                raise ValueError("backend='host' requires policy_step")
+            self.server = InferenceServer(
+                policy_step,
+                max_batch=inference_batch or max(num_actors * envs_per_actor, 1),
+                deadline_ms=deadline_ms)
+            self.actors = [Actor(i, env_factory, self.server, self._sink,
+                                 unroll, num_envs=envs_per_actor)
+                           for i in range(num_actors)]
+        else:
+            if policy_apply is None:
+                raise ValueError("backend='device' requires policy_apply")
+            from repro.rollout import DeviceRolloutEngine, RolloutWorker
+            if init_params is None and isinstance(state, dict):
+                # workers must start from the learner's params, not None —
+                # and from the same pytree structure the first publish will
+                # have, or the fused scan recompiles mid-measurement
+                init_params = state.get("params")
+            self._live = {"params": init_params, "version": 0}
+            self._live_lock = threading.Lock()
+            self.actors = [
+                RolloutWorker(
+                    i,
+                    DeviceRolloutEngine(env_factory, policy_apply,
+                                        envs_per_actor, unroll,
+                                        init_core=init_core, seed=i),
+                    self._sink, self._param_source)
+                for i in range(num_actors)]
         self.learner = None
         if train_step is not None:
             self.learner = Learner(
                 train_step, state, self._learner_batch,
+                publish=self._publish if backend == "device" else None,
                 priority_update=lambda idx, pri: self.replay.update_priorities(idx, pri),
                 checkpoint_manager=checkpoint_manager,
                 checkpoint_every=checkpoint_every)
@@ -56,15 +95,29 @@ class SeedSystem:
         batch["is_weights"] = w
         return batch, idx
 
+    def _publish(self, params, step):
+        """Learner -> rollout workers param seam (device backend)."""
+        with self._live_lock:
+            self._live = {"params": params, "version": step}
+
+    def _param_source(self):
+        with self._live_lock:
+            return self._live["params"], self._live["version"]
+
     def warmup(self):
-        """Pre-compile the env step paths (vmapped JAX envs pay ~1s of jit on
-        first reset/step) so a short measured `run()` window is steady-state."""
+        """Pre-compile the env/rollout step paths (vmapped JAX envs pay ~1s
+        of jit on first reset/step; the fused scan pays it once per engine)
+        so a short measured `run()` window is steady-state."""
         for a in self.actors:
-            a.vec.reset()
-            a.vec.step(np.zeros(a.num_envs, np.int32))
+            if self.backend == "device":
+                a.warmup()
+            else:
+                a.vec.reset()
+                a.vec.step(np.zeros(a.num_envs, np.int32))
 
     def run(self, seconds: float, with_learner: bool = True):
-        self.server.start()
+        if self.server:
+            self.server.start()
         for a in self.actors:
             a.start()
         if self.learner and with_learner:
@@ -74,7 +127,8 @@ class SeedSystem:
         elapsed = time.perf_counter() - t0
         for a in self.actors:
             a.stop()
-        self.server.stop()
+        if self.server:
+            self.server.stop()
         if self.learner and with_learner:
             self.learner.stop()
             self.learner.join()
@@ -84,23 +138,45 @@ class SeedSystem:
 
     def throughput(self, elapsed: float):
         iterations = sum(a.iterations for a in self.actors)
-        frames = sum(a.frames for a in self.actors)   # = iterations * E
-        s = self.server.stats
-        return {
+        frames = sum(a.frames for a in self.actors)   # = iterations * E (* T)
+        out = {
             "elapsed_s": elapsed,
+            "backend": self.backend,
             "envs_per_actor": self.envs_per_actor,
             "actor_iterations": iterations,
             "env_frames": frames,
             "env_frames_per_s": frames / elapsed,
-            "inference_batches": s["batches"],
-            "inference_lanes": s["requests"],
-            "mean_batch_occupancy": s["batch_occupancy"] / max(s["batches"], 1),
-            "mean_queue_wait_ms": 1e3 * s["queue_wait_s"] / max(s["requests"], 1),
-            "inference_compute_s": s["compute_s"],
             "learner_steps": self.learner.steps if self.learner else 0,
             "learner_steps_per_s": (self.learner.steps / elapsed) if self.learner else 0.0,
             "learner_error": self.learner.error if self.learner else None,
-            "inference_error": self.server.error,
             "episode_return_mean": float(np.mean(
                 [r for a in self.actors for r in a.returns[-20:]] or [0.0])),
         }
+        if self.server:
+            s = self.server.stats
+            out.update({
+                "inference_batches": s["batches"],
+                "inference_lanes": s["requests"],
+                "mean_batch_occupancy": s["batch_occupancy"] / max(s["batches"], 1),
+                "mean_queue_wait_ms": 1e3 * s["queue_wait_s"] / max(s["requests"], 1),
+                "inference_compute_s": s["compute_s"],
+                "inference_error": self.server.error,
+            })
+        else:
+            # device backend: no central inference — one transfer per scan.
+            # scans == actor_iterations; each supplies T*E frames.
+            refreshes = sum(a.param_refreshes for a in self.actors)
+            lag = sum(a.param_lag_total for a in self.actors)
+            out.update({
+                "inference_batches": 0,
+                "inference_lanes": 0,
+                "mean_batch_occupancy": 0.0,
+                "mean_queue_wait_ms": 0.0,
+                "inference_compute_s": 0.0,
+                "inference_error": next(
+                    (a.error for a in self.actors if a.error), None),
+                "scans": iterations,
+                "param_refreshes": refreshes,
+                "mean_param_lag": lag / max(iterations, 1),
+            })
+        return out

@@ -59,7 +59,13 @@ class SyncVectorEnv(VectorEnv):
         elif callable(env_factory):
             self.envs = [env_factory() for _ in range(num_envs)]
         else:  # a single pre-built env only supports one lane
-            assert num_envs == 1, "pass a factory (or envs=...) for num_envs > 1"
+            if num_envs != 1:
+                raise ValueError(
+                    f"got a single pre-built env with num_envs={num_envs}: "
+                    f"one host env instance cannot back {num_envs} "
+                    f"independent lanes (they would share mutable state). "
+                    f"Pass a factory (e.g. lambda: {type(env_factory).__name__}(...)) "
+                    f"or explicit envs=[...] instead.")
             self.envs = [env_factory]
         self.num_envs = len(self.envs)
         self.num_actions = self.envs[0].num_actions
@@ -135,6 +141,18 @@ def _is_jax_env(env) -> bool:
         return False
 
 
+def as_env_instance(env) -> tuple:
+    """Normalize (factory | class | instance) -> (instance, was_factory).
+
+    The single factory-detection rule shared by the host (`make_vector_env`)
+    and device (`repro.rollout.as_jax_env`) backends, so both accept the
+    same env arguments.
+    """
+    is_factory = callable(env) and (inspect.isclass(env)
+                                    or not hasattr(env, "reset"))
+    return (env() if is_factory else env), is_factory
+
+
 def make_vector_env(env, num_envs: int = 1, seed: int = 0) -> VectorEnv:
     """Normalize (factory | env | VectorEnv) into a VectorEnv of E lanes.
 
@@ -143,9 +161,7 @@ def make_vector_env(env, num_envs: int = 1, seed: int = 0) -> VectorEnv:
     """
     if isinstance(env, VectorEnv):
         return env
-    is_factory = callable(env) and (inspect.isclass(env)
-                                    or not hasattr(env, "reset"))
-    instance = env() if is_factory else env
+    instance, is_factory = as_env_instance(env)
     if isinstance(instance, VectorEnv):
         return instance
     if _is_jax_env(instance):

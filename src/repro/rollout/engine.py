@@ -1,0 +1,117 @@
+"""Device-resident rollout engine: fused env+policy `lax.scan` unrolls.
+
+The host-backed actor loop (`repro.core.actor`) pays one host<->device
+round-trip per vector step: observations come down, actions go up, T times
+per unroll. `DeviceRolloutEngine` fuses the pure-JAX env's `step` and the
+policy forward into ONE jitted `lax.scan` over the unroll length, vmapped
+over E lanes — the env-state batch, recurrent core state, observations and
+PRNG key never leave the accelerator. The host sees exactly one transfer
+per unroll: the stacked `(T, E, ...)` trajectory pytree.
+
+Determinism contract (what the parity tests pin down):
+  * lane i's env is seeded with `split(PRNGKey(seed), E)[i]` — the same
+    derivation as `JaxVectorEnv`, so a host loop over the same keys
+    produces bit-identical trajectories;
+  * the per-step action key stream is `fold_in(PRNGKey(seed), 1)` split
+    once per scan step (see `action_key`), so stochastic policies are
+    reproducible against a host reference following the same stream.
+"""
+
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.envs.vector import _is_jax_env, as_env_instance
+
+
+def as_jax_env(env):
+    """Normalize (factory | class | instance) into a pure-JAX env instance.
+
+    The device engine requires a stateless keyed env (`reset(key)`,
+    `step(state, action)`); host envs cannot ride a `lax.scan`.
+    """
+    instance, _ = as_env_instance(env)
+    if not _is_jax_env(instance):
+        raise ValueError(
+            f"backend='device' requires a pure-JAX env (reset(key) -> "
+            f"(state, obs)); got {type(instance).__name__}, a host env. "
+            f"Use the host backend, or port the env to JAX.")
+    return instance
+
+
+def action_key(seed: int) -> jax.Array:
+    """Initial key of the engine's per-step action stream (parity hook)."""
+    return jax.random.fold_in(jax.random.PRNGKey(seed), 1)
+
+
+class DeviceRolloutEngine:
+    """Fused env+policy unrolls for one batch of E lanes.
+
+    policy_apply: (params, core, obs[E, ...], key) -> (actions[E], core) —
+    a pure function; `core` is any pytree of per-lane recurrent state (or
+    None for feed-forward policies). One `rollout(params)` call advances
+    all lanes T steps on-device and returns the host-side trajectory dict
+    {obs (T,E,...), actions (T,E) i32, rewards (T,E) f32, dones (T,E) bool}.
+    """
+
+    def __init__(self, env, policy_apply: Callable, num_envs: int,
+                 unroll: int, *, init_core: Optional[Callable] = None,
+                 seed: int = 0):
+        self.env = as_jax_env(env)
+        self.num_envs = num_envs
+        self.unroll = unroll
+        self.num_actions = self.env.num_actions
+        self.obs_shape = tuple(getattr(self.env, "obs_shape", ()))
+        self._init_core = init_core       # init_core(num_envs) -> core pytree
+        self._seed = seed
+        self._reset = jax.jit(jax.vmap(self.env.reset))
+        self._unroll_fn = jax.jit(self._build(policy_apply, unroll))
+        self._carry = None
+        self.scans = 0                    # device round-trips (one per unroll)
+        self.frames = 0                   # = scans * T * E
+
+    def _build(self, policy_apply, T):
+        vstep = jax.vmap(self.env.step)
+
+        def unroll_fn(params, carry):
+            def one_step(c, _):
+                env_state, core, obs, key = c
+                key, sub = jax.random.split(key)
+                actions, core = policy_apply(params, core, obs, sub)
+                actions = actions.astype(jnp.int32)
+                env_state, nobs, rewards, dones = vstep(env_state, actions)
+                out = {"obs": obs, "actions": actions,
+                       "rewards": rewards.astype(jnp.float32),
+                       "dones": dones}
+                return (env_state, core, nobs, key), out
+
+            return jax.lax.scan(one_step, carry, None, length=T)
+
+        return unroll_fn
+
+    def reset(self) -> np.ndarray:
+        """(Re)seed all lanes; returns the initial obs batch (E, ...)."""
+        keys = jax.random.split(jax.random.PRNGKey(self._seed), self.num_envs)
+        env_state, obs = self._reset(keys)
+        core = self._init_core(self.num_envs) if self._init_core else None
+        self._carry = (env_state, core, obs, action_key(self._seed))
+        return np.asarray(obs)
+
+    def warmup(self, params):
+        """Compile the fused scan without advancing lane state or counters."""
+        if self._carry is None:
+            self.reset()
+        carry, traj = self._unroll_fn(params, self._carry)
+        jax.block_until_ready(traj["actions"])
+
+    def rollout(self, params) -> dict:
+        """Advance all lanes T steps in one device call; ONE host transfer."""
+        if self._carry is None:
+            self.reset()
+        self._carry, traj = self._unroll_fn(params, self._carry)
+        host = jax.device_get(traj)       # the single per-unroll transfer
+        self.scans += 1
+        self.frames += self.unroll * self.num_envs
+        return {k: np.asarray(v) for k, v in host.items()}

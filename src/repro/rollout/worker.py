@@ -1,0 +1,89 @@
+"""RolloutWorker: the thread that drives repeated fused scans.
+
+Plays the role `core.actor.Actor` plays for the host backends — same
+counters (`iterations`, `frames`, `episodes`, `returns`), same per-lane
+unroll format into the trajectory sink — but each iteration is ONE device
+scan of T steps x E lanes instead of T inference round-trips. Between
+scans it refreshes params from the learner (`param_source`) and tracks the
+on-policy lag: how many learner steps elapsed since the params used for
+the previous scan were published.
+"""
+
+import threading
+import traceback
+from typing import Callable, Optional
+
+import numpy as np
+
+from repro.core.actor import account_episode_ends, flush_lane_unrolls
+
+
+class RolloutWorker:
+    def __init__(self, worker_id: int, engine, sink: Callable,
+                 param_source: Callable):
+        """param_source() -> (params, version): latest published params and
+        a monotone version counter (learner steps; 0 before any publish)."""
+        self.worker_id = worker_id
+        self.engine = engine
+        self.sink = sink
+        self.param_source = param_source
+        self._stop = threading.Event()
+        self._thread: Optional[threading.Thread] = None
+        self.episodes = 0
+        self.episode_returns = np.zeros(engine.num_envs, np.float64)
+        self.returns = []
+        self.param_version = 0            # version driving the current scan
+        self.param_refreshes = 0          # scans that picked up fresh params
+        self.param_lag_total = 0          # sum of version deltas across scans
+        self.error: Optional[str] = None
+
+    # the engine is the single source of truth for scan/frame counts
+    @property
+    def iterations(self):
+        """Scans driven (one device round-trip each)."""
+        return self.engine.scans
+
+    @property
+    def frames(self):
+        """Env frames supplied = scans * T * E."""
+        return self.engine.frames
+
+    def start(self):
+        self._thread = threading.Thread(target=self._loop, daemon=True)
+        self._thread.start()
+
+    def stop(self):
+        self._stop.set()
+
+    def join(self, timeout=5.0):
+        if self._thread:
+            self._thread.join(timeout=timeout)
+
+    def warmup(self):
+        """Compile the scan up front so the measured window is steady-state."""
+        params, _ = self.param_source()
+        self.engine.warmup(params)
+
+    def _loop(self):
+        # record fatal errors instead of dying silently (same class as
+        # Learner.error / InferenceServer.error)
+        try:
+            self._run()
+        except Exception:
+            self.error = traceback.format_exc()
+            self._stop.set()
+
+    def _run(self):
+        T = self.engine.unroll
+        while not self._stop.is_set():
+            params, version = self.param_source()
+            if version != self.param_version:
+                self.param_lag_total += version - self.param_version
+                self.param_refreshes += 1
+                self.param_version = version
+            traj = self.engine.rollout(params)          # (T, E, ...)
+            rewards, dones = traj["rewards"], traj["dones"].astype(bool)
+            for t in range(T):
+                self.episodes += account_episode_ends(
+                    rewards[t], dones[t], self.episode_returns, self.returns)
+            flush_lane_unrolls(traj, self.sink)

@@ -26,8 +26,8 @@ def run_py(code: str, devices: int = 8, timeout=420):
 def test_moe_ep_matches_gather_impl():
     out = run_py("""
         import jax, jax.numpy as jnp
-        from jax.sharding import AxisType
         from repro.configs.base import ModelConfig
+        from repro.launch.mesh import make_mesh, use_mesh
         from repro.nn.moe import init_moe, moe, moe_ep
         from repro.sharding.param import ArrayMaker
         from repro.sharding.ctx import sharding_ctx
@@ -36,13 +36,12 @@ def test_moe_ep_matches_gather_impl():
                           num_heads=4, num_kv_heads=2, d_ff=64, vocab_size=64,
                           num_experts=8, num_experts_per_tok=2, moe_d_ff=16,
                           n_shared_experts=1, capacity_factor=8.0, tp=4)
-        mesh = jax.make_mesh((2, 4), ("data", "model"),
-                             axis_types=(AxisType.Auto,)*2)
+        mesh = make_mesh((2, 4), ("data", "model"))
         rules = filter_rules(DEFAULT_RULES, mesh)
         p = init_moe(ArrayMaker(jax.random.PRNGKey(0)), cfg)
         x = jax.random.normal(jax.random.PRNGKey(1), (4, 16, 32))
         y_ref, _ = moe(cfg, p, x)
-        with sharding_ctx(mesh, rules), jax.set_mesh(mesh):
+        with sharding_ctx(mesh, rules), use_mesh(mesh):
             y_ep, _ = jax.jit(lambda p, x: moe_ep(cfg, p, x))(p, x)
             g_ref = jax.grad(lambda p, x: moe(cfg.with_(moe_impl='gather'),
                                               p, x)[0].sum())(p, x)
@@ -50,7 +49,7 @@ def test_moe_ep_matches_gather_impl():
         assert err < 1e-5, err
         # full-EP (experts over model+data)
         rules2 = dict(rules, experts=("model", "data"))
-        with sharding_ctx(mesh, rules2), jax.set_mesh(mesh):
+        with sharding_ctx(mesh, rules2), use_mesh(mesh):
             y_full, _ = jax.jit(lambda p, x: moe_ep(cfg, p, x))(p, x)
         err2 = float(jnp.abs(y_ref - y_full).max())
         assert err2 < 1e-5, err2

@@ -135,6 +135,16 @@ def test_make_vector_env_dispatch():
     assert make_vector_env(host, 3) is host   # VectorEnv passes through
 
 
+def test_make_vector_env_rejects_prebuilt_host_env_multi_lane():
+    """One host env instance cannot back E>1 lanes (shared mutable state):
+    a clear ValueError, not a bare assert."""
+    env = ALESimEnv(frame=8, step_cost=16)
+    with pytest.raises(ValueError, match="pre-built env"):
+        make_vector_env(env, 4)
+    # single-lane pre-built env is still fine
+    assert make_vector_env(env, 1).num_envs == 1
+
+
 # ------------------------- inference lane flattening -------------------------
 
 def test_inference_server_flattens_lanes_and_assigns_slots():

@@ -10,7 +10,8 @@ import sys
 sys.path.insert(0, "src")
 
 from repro.configs import active_param_count, get_config
-from repro.core.provisioning import (cpu_gpu_ratio, fit_paper_actor_model,
+from repro.core.provisioning import (cpu_gpu_ratio, cpu_gpu_ratio_breakdown,
+                                     fit_paper_actor_model,
                                      fit_paper_derating, provision)
 from repro.hw import DGX1_HOST, HostSpec, TPU_V5E, V100, V5E_HOST
 
@@ -29,12 +30,21 @@ def main():
     for n in (4, 40, 256):
         print(f"   {n:4d} actors -> speedup {float(model.speedup(n, 4)):.2f}x")
 
-    print("\n== the three rollout design points (40 actors x 8 lanes, model)")
+    print("\n== the four rollout design points (40 actors x 8 lanes, model)")
     m8 = model.with_envs(8)
     print(f"   per-step host    : {float(model.throughput(40)):8.1f} frames/s")
     print(f"   vectorized host  : {float(m8.throughput(40)):8.1f} frames/s")
+    print(f"   networked actors : {float(m8.with_network(0.2).throughput(40)):8.1f}"
+          f" frames/s (socket transport; RTT=0.2 t_env units)")
     print(f"   device-resident  : {float(m8.with_device().throughput(40)):8.1f}"
           f" frames/s (fused lax.scan; bound by scan throughput, not threads)")
+
+    print("\n== disaggregation: the ratio knob the transport unlocks")
+    for hosts in (1, 4, 16):
+        t = float(m8.with_network(0.2, n_hosts=hosts).throughput(40 * hosts))
+        b = cpu_gpu_ratio_breakdown([DGX1_HOST] * hosts, V100, 8)
+        print(f"   {hosts:2d} actor hosts x 40 threads: ratio {b.total:.3f}, "
+              f"{t:10.1f} frames/s at {40 * hosts} actors")
 
     print("\n== accelerator derating (Fig 4), swept along E like Fig 3")
     der = fit_paper_derating()

@@ -27,6 +27,12 @@ from repro.launch.serve import greedy_generate
 from repro.optim import adamw
 
 
+def _quickstart_policy(obs, ids):
+    # module-level (not a closure): the socket transport's spawned actor
+    # hosts never see it, but the env_factory they DO receive must pickle
+    return np.random.randint(0, 3, size=(obs.shape[0],))
+
+
 def vector_actor_demo(env_counts=(1, 8), seconds=0.6):
     """SEED system over a vmapped JAX env: each actor steps E Catch lanes
     per inference round-trip; frames/s grows with E on the same threads.
@@ -56,6 +62,17 @@ def vector_actor_demo(env_counts=(1, 8), seconds=0.6):
     stats = sys_.run(seconds=seconds, with_learner=False)
     print(f"  E={E} device-resident: {stats['env_frames_per_s']:8.0f} "
           f"env-frames/s ({stats['scans']} fused scans x 8 steps x {E} lanes)")
+
+    # disaggregated: the same system with actors in a SEPARATE OS process
+    # dialing a loopback TCP gateway (repro.transport) — the paper's
+    # CPU/GPU-ratio knob as a runnable deployment shape
+    sys_ = SeedSystem(env_factory=CatchEnv, policy_step=_quickstart_policy,
+                      num_actors=2, unroll=8, envs_per_actor=E,
+                      deadline_ms=1.0, transport="socket", num_actor_hosts=1)
+    stats = sys_.run(seconds=max(seconds, 0.8), with_learner=False)
+    print(f"  E={E} socket-transport: {stats['env_frames_per_s']:8.0f} "
+          f"env-frames/s ({stats['gateway_connections']} actor-host conns, "
+          f"{stats['gateway_traj_frames']} unrolls over the wire)")
 
 
 def main():

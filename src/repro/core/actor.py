@@ -16,6 +16,7 @@ from typing import Callable, Optional
 
 import numpy as np
 
+from repro.core.inference import ReplyError
 from repro.envs.vector import make_vector_env
 
 
@@ -60,6 +61,7 @@ class Actor:
         self.episodes = 0
         self.episode_returns = np.zeros(self.num_envs, np.float64)
         self.returns = []
+        self.error: Optional[str] = None     # server/transport death, surfaced
 
     @property
     def steps(self):
@@ -86,15 +88,26 @@ class Actor:
         while not self._stop.is_set():
             # ONE request per iteration; on timeout keep waiting on the SAME
             # reply — resubmitting would advance the server's per-lane
-            # recurrent state twice for one observation
+            # recurrent state twice for one observation. Fail fast instead
+            # of waiting forever: a stopped/dead server drains pending
+            # requests with a poison `ReplyError`, and `server.error` is
+            # the backstop for a request that died in-flight inside a batch
             reply = self.server.submit_batch(self.actor_id, obs)
             actions = None
             while not self._stop.is_set():
                 try:
-                    actions = np.asarray(reply.get(timeout=1.0))  # (E,)
-                    break
+                    result = reply.get(timeout=1.0)
                 except queue.Empty:
+                    err = getattr(self.server, "error", None)
+                    if err is not None:
+                        self.error = err
+                        break
                     continue
+                if isinstance(result, ReplyError):
+                    self.error = result.message
+                    break
+                actions = np.asarray(result)                      # (E,)
+                break
             if actions is None:
                 break
             nobs, rewards, dones = self.vec.step(actions)

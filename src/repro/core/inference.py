@@ -17,8 +17,14 @@ first-class here:
     stays on the server, keyed by `(actor_id, env_id)` slots, so actors
     exchange only (obs -> action) and lanes keep distinct recurrent state.
 
-In-process queues stand in for the gRPC transport of a real deployment;
-the interface below is the only seam a networked transport would replace.
+The queue API below (`submit_batch` -> reply `get`) is the transport seam.
+`repro.transport` implements it twice: `InProcTransport` (the in-process
+default, identical to handing actors this server directly) and
+`SocketTransport`/`InferenceGateway` (a wire-level TCP transport so actors
+can live on remote CPU hosts — the paper's disaggregated provisioning).
+Replies are either an action array or a poison `ReplyError`: when the
+server dies or stops, every pending request is drained with one so no
+actor ever blocks forever on a reply that cannot come (fail-fast).
 """
 
 import queue
@@ -29,6 +35,14 @@ from dataclasses import dataclass, field
 from typing import Callable, Dict, Optional, Tuple
 
 import numpy as np
+
+
+@dataclass
+class ReplyError:
+    """Poison reply: the server (or transport) died or stopped before this
+    request could be served. Actors treat it as a stop signal and surface
+    `message` instead of deadlocking on an empty reply queue."""
+    message: str
 
 
 @dataclass
@@ -79,20 +93,45 @@ class InferenceServer:
         self._stop.set()
         if self._thread:
             self._thread.join(timeout=5.0)
+        self._drain_pending(self.error or "inference server stopped")
+
+    def _drain_pending(self, message: str):
+        """Fail-fast: poison every queued request so blocked actors wake up
+        with a `ReplyError` instead of hanging on a reply that will never
+        be produced."""
+        while True:
+            try:
+                r = self.requests.get_nowait()
+            except queue.Empty:
+                return
+            r.reply.put(ReplyError(message))
+
+    def submit_request(self, r: InferenceRequest):
+        """Transport-facing entry: enqueue a request whose `reply` is any
+        object with `put(result)` — a `queue.Queue` for in-process actors,
+        a wire-writing proxy for the gateway. Poisons immediately if the
+        server is already stopped/dead (fail-fast)."""
+        if self._stop.is_set():
+            r.reply.put(ReplyError(self.error or "inference server stopped"))
+            return r.reply
+        self.requests.put(r)
+        if self._stop.is_set():
+            # stop()/death may have drained between the check above and our
+            # put — drain again so this request cannot strand unanswered
+            # (each request is popped at most once, so no double replies)
+            self._drain_pending(self.error or "inference server stopped")
+        return r.reply
 
     def submit(self, actor_id: int, obs: np.ndarray) -> "queue.Queue":
         """Single-observation submit; the reply holds one action."""
-        r = InferenceRequest(actor_id, np.asarray(obs)[None],
-                             queue.Queue(maxsize=1), scalar=True)
-        self.requests.put(r)
-        return r.reply
+        return self.submit_request(InferenceRequest(
+            actor_id, np.asarray(obs)[None], queue.Queue(maxsize=1),
+            scalar=True))
 
     def submit_batch(self, actor_id: int, obs: np.ndarray) -> "queue.Queue":
         """Lane-batched submit: obs is (E, ...); the reply holds (E,) actions."""
-        r = InferenceRequest(actor_id, np.asarray(obs),
-                             queue.Queue(maxsize=1))
-        self.requests.put(r)
-        return r.reply
+        return self.submit_request(InferenceRequest(
+            actor_id, np.asarray(obs), queue.Queue(maxsize=1)))
 
     def slot_ids(self, actor_id: int, lanes: int) -> np.ndarray:
         """Dense per-(actor, lane) slots — recurrent-state indices. The
@@ -114,6 +153,19 @@ class InferenceServer:
     def num_slots(self) -> int:
         return len(self._slots)
 
+    def derived_stats(self) -> dict:
+        """Normalized views of the accumulated counters, so callers don't
+        each need to know which raw sum divides by which count:
+        occupancy as a fraction of the lane budget, queue wait per lane,
+        and the batching ratios (lanes per forward / per RPC)."""
+        s = self.stats
+        return {
+            "mean_batch_occupancy": s["batch_occupancy"] / max(s["batches"], 1),
+            "mean_queue_wait_ms": 1e3 * s["queue_wait_s"] / max(s["requests"], 1),
+            "mean_lanes_per_batch": s["requests"] / max(s["batches"], 1),
+            "mean_lanes_per_rpc": s["requests"] / max(s["rpcs"], 1),
+        }
+
     def _loop(self):
         # record a fatal policy_step/shape error instead of dying silently:
         # actors wait on replies indefinitely, so a silent death here would
@@ -123,6 +175,7 @@ class InferenceServer:
         except Exception:
             self.error = traceback.format_exc()
             self._stop.set()
+            self._drain_pending(self.error)
 
     def _serve(self):
         while not self._stop.is_set():
@@ -130,10 +183,22 @@ class InferenceServer:
             if not batch:
                 continue
             t0 = time.perf_counter()
-            obs = np.concatenate([r.obs for r in batch])      # (N_lanes, ...)
-            ids = np.concatenate(
-                [self.slot_ids(r.actor_id, r.lanes) for r in batch])
-            actions = np.asarray(self.policy_step(obs, ids))
+            try:
+                obs = np.concatenate([r.obs for r in batch])  # (N_lanes, ...)
+                ids = np.concatenate(
+                    [self.slot_ids(r.actor_id, r.lanes) for r in batch])
+                actions = np.asarray(self.policy_step(obs, ids))
+            except Exception:
+                # poison the IN-FLIGHT batch too, not just the queue: these
+                # requests were already popped by _collect, and for wire
+                # transports the poison is the only signal the remote actor
+                # will ever receive (it cannot read this server's .error)
+                self.error = traceback.format_exc()
+                self._stop.set()
+                for r in batch:
+                    r.reply.put(ReplyError(self.error))
+                self._drain_pending(self.error)
+                return
             dt = time.perf_counter() - t0
             lanes = 0
             for r in batch:

@@ -45,9 +45,11 @@ class SystemModel:
     hw_threads: int
     batch_cap: int = 64   # SEED inference server max lane batch
     envs_per_actor: int = 1   # E lanes vectorized per actor thread
-    backend: str = "host"     # "host" | "device" (fused-scan rollouts)
+    backend: str = "host"     # "host" | "network" | "device"
     t_dev0: float = 0.0   # device: fixed per-scan-step cost (launch/dispatch)
     t_dev1: float = 0.0   # device: per-lane compute per scan step
+    t_net: float = 0.0    # network: wire RTT added per inference round-trip
+    n_actor_hosts: int = 1    # network: CPU hosts supplying actor threads
 
     def throughput(self, n_actors):
         """Env frames/s at n actor threads, each stepping E lanes.
@@ -64,6 +66,14 @@ class SystemModel:
         batch advances in t_dev0 + t_dev1 * lanes of accelerator time, so
         throughput = lanes / t_step, asymptotically bounded by the scan
         throughput 1/t_dev1 (not by host threads).
+
+        Network backend (socket transport, `with_network`): the host model
+        with the wire RTT t_net added to every inference round-trip — a
+        pure latency-regime tax — while the capacity ceiling scales with
+        the AGGREGATE threads of the n_actor_hosts disaggregated CPU hosts.
+        That asymmetry IS the design tradeoff the paper's ratio metric
+        prices: the wire costs only where latency already dominates, and
+        buys a ceiling no single host has.
         """
         n = np.asarray(n_actors, np.float64)
         E = float(self.envs_per_actor)
@@ -75,9 +85,10 @@ class SystemModel:
             lanes = n * E
             t_step = self.t_dev0 + self.t_dev1 * lanes
             return lanes / t_step
-        t_inf = self.t_inf0 + self.t_inf1 * np.minimum(n * E, self.batch_cap)
+        t_inf = (self.t_inf0 + self.t_net
+                 + self.t_inf1 * np.minimum(n * E, self.batch_cap))
         latency_limited = n * E / (self.t_env * E + t_inf)
-        capacity = self.hw_threads / self.t_env
+        capacity = self.hw_threads * self.n_actor_hosts / self.t_env
         return np.minimum(latency_limited, capacity)
 
     def speedup(self, n_actors, base_actors=4):
@@ -98,6 +109,23 @@ class SystemModel:
         measurement the paper's ratio analysis argues for.
         """
         return replace(self, backend="device", t_dev0=t_dev0, t_dev1=t_dev1)
+
+    def with_network(self, t_rtt: float,
+                     n_hosts: int = 1) -> "SystemModel":
+        """The networked operating point (`repro.transport` socket path):
+        actors live on `n_hosts` remote CPU hosts and every inference
+        round-trip pays the wire RTT `t_rtt` (same units as t_inf0) on top
+        of the batching latency. Throughput at fixed n can only drop
+        (latency regime), but the capacity ceiling becomes
+        n_hosts * hw_threads / t_env — the CPU/GPU-ratio knob turned by
+        adding hosts instead of swapping chips.
+        """
+        if t_rtt < 0:
+            raise ValueError(f"t_rtt must be >= 0, got {t_rtt}")
+        if n_hosts < 1:
+            raise ValueError(f"n_hosts must be >= 1, got {n_hosts}")
+        return replace(self, backend="network", t_net=float(t_rtt),
+                       n_actor_hosts=int(n_hosts))
 
 
 def fit_paper_actor_model(hw_threads=40, target_5p8=5.8, target_2p0=2.0):
@@ -155,6 +183,31 @@ def fit_paper_derating(slowdown_at_half=1.06):
 def cpu_gpu_ratio(host: HostSpec, chip: ChipSpec, n_chips: int = 1):
     """The paper's metric: host hardware threads per (V100-)SM-equivalent."""
     return host.hw_threads / (sm_equivalents(chip) * n_chips)
+
+
+@dataclass(frozen=True)
+class RatioBreakdown:
+    """Disaggregated CPU/GPU ratio: which host contributes how much."""
+    total: float                       # sum of per-host contributions
+    sm_equivalents: float
+    per_host: tuple                    # ((name, hw_threads, contribution), ..)
+
+
+def cpu_gpu_ratio_breakdown(hosts, chip: ChipSpec,
+                            n_chips: int = 1) -> RatioBreakdown:
+    """The ratio metric once actors are disaggregated (`repro.transport`):
+    the learner's accelerators are served by SEVERAL CPU hosts over the
+    wire, so threads are additive across hosts and the metric decomposes
+    per host. `hosts` is a sequence of `HostSpec` (repeat an entry for
+    identical hosts). With one host this reduces to `cpu_gpu_ratio`.
+    """
+    hosts = list(hosts)
+    if not hosts:
+        raise ValueError("need at least one actor host")
+    sm_eq = sm_equivalents(chip) * n_chips
+    per = tuple((h.name, h.hw_threads, h.hw_threads / sm_eq) for h in hosts)
+    return RatioBreakdown(total=sum(c for _, _, c in per),
+                          sm_equivalents=sm_eq, per_host=per)
 
 
 @dataclass(frozen=True)

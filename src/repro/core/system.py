@@ -15,6 +15,15 @@ Backends (see `repro.rollout` for the design-point taxonomy):
     `lax.scan` unrolls on the accelerator (`policy_apply` is a pure
     function `(params, core, obs, key) -> (actions, core)`); params refresh
     from the learner between scans via the publish/version seam.
+
+The host backend additionally picks a transport (`repro.transport`):
+  * `transport="inproc"` (default): actor threads in this process, queue
+    round-trips — identical to the pre-transport behavior;
+  * `transport="socket"`: actors move to `num_actor_hosts` spawned OS
+    processes (stand-ins for remote CPU hosts) that dial a TCP
+    `InferenceGateway` in front of the same `InferenceServer`; trajectory
+    unrolls return over the wire into the same replay sink. Requires a
+    picklable `env_factory` (class or module-level factory, not a lambda).
 """
 
 import threading
@@ -38,15 +47,26 @@ class SeedSystem:
                  learner_batch: int = 8, replay_capacity: int = 512,
                  min_replay: int = 16, deadline_ms: float = 5.0,
                  inference_batch: Optional[int] = None,
+                 transport: str = "inproc", num_actor_hosts: int = 1,
+                 gateway_host: str = "127.0.0.1", gateway_port: int = 0,
                  checkpoint_manager=None, checkpoint_every: int = 0):
         if backend not in ("host", "device"):
             raise ValueError(f"unknown backend {backend!r}; use 'host' or 'device'")
+        if transport not in ("inproc", "socket"):
+            raise ValueError(
+                f"unknown transport {transport!r}; use 'inproc' or 'socket'")
+        if transport == "socket" and backend != "host":
+            raise ValueError("transport='socket' applies to backend='host' "
+                             "(the device backend has no inference wire)")
         self.backend = backend
+        self.transport = transport
         self.envs_per_actor = envs_per_actor
         self.replay = PrioritizedReplay(replay_capacity)
         self.min_replay = min_replay
         self.learner_batch = learner_batch
         self.server = None
+        self.gateway = None
+        self.pool = None
         if backend == "host":
             if policy_step is None:
                 raise ValueError("backend='host' requires policy_step")
@@ -54,9 +74,21 @@ class SeedSystem:
                 policy_step,
                 max_batch=inference_batch or max(num_actors * envs_per_actor, 1),
                 deadline_ms=deadline_ms)
-            self.actors = [Actor(i, env_factory, self.server, self._sink,
-                                 unroll, num_envs=envs_per_actor)
-                           for i in range(num_actors)]
+            if transport == "socket":
+                from repro.launch.actor_host import ActorHostPool
+                from repro.transport.socket import InferenceGateway
+                self.gateway = InferenceGateway(
+                    self.server, sink=self._sink,
+                    host=gateway_host, port=gateway_port)
+                self.pool = ActorHostPool(
+                    env_factory, num_actors=num_actors,
+                    envs_per_actor=envs_per_actor, unroll=unroll,
+                    num_hosts=num_actor_hosts)
+                self.actors = []
+            else:
+                self.actors = [Actor(i, env_factory, self.server, self._sink,
+                                     unroll, num_envs=envs_per_actor)
+                               for i in range(num_actors)]
         else:
             if policy_apply is None:
                 raise ValueError("backend='device' requires policy_apply")
@@ -107,7 +139,9 @@ class SeedSystem:
     def warmup(self):
         """Pre-compile the env/rollout step paths (vmapped JAX envs pay ~1s
         of jit on first reset/step; the fused scan pays it once per engine)
-        so a short measured `run()` window is steady-state."""
+        so a short measured `run()` window is steady-state. Socket-transport
+        actor hosts warm up inside their own processes before their
+        measured window, so this is a no-op for them."""
         for a in self.actors:
             if self.backend == "device":
                 a.warmup()
@@ -116,6 +150,8 @@ class SeedSystem:
                 a.vec.step(np.zeros(a.num_envs, np.int32))
 
     def run(self, seconds: float, with_learner: bool = True):
+        if self.pool is not None:
+            return self._run_socket(seconds, with_learner)
         if self.server:
             self.server.start()
         for a in self.actors:
@@ -136,12 +172,45 @@ class SeedSystem:
             a.join()
         return self.throughput(elapsed)
 
+    def _run_socket(self, seconds: float, with_learner: bool):
+        """Disaggregated run: gateway + server here, actors in K spawned
+        host processes. `elapsed` is the actor hosts' own measured window
+        (spawn + jit warmup excluded), so frames/s is comparable with the
+        in-proc backend's steady-state window."""
+        self.server.start()
+        address = self.gateway.start()
+        try:
+            if self.learner and with_learner:
+                self.learner.start()
+            host_stats = self.pool.run(address, seconds)
+        finally:
+            # even if the pool trips its hard timeout, tear the learner,
+            # gateway (which also restores the GIL switch interval) and
+            # server down — never leak threads or a bound listener
+            if self.learner and with_learner:
+                self.learner.stop()
+                self.learner.join()
+            self.gateway.stop()
+            self.server.stop()
+        elapsed = max((s["elapsed_s"] for s in host_stats), default=seconds)
+        return self.throughput(max(elapsed, 1e-9))
+
     def throughput(self, elapsed: float):
-        iterations = sum(a.iterations for a in self.actors)
-        frames = sum(a.frames for a in self.actors)   # = iterations * E (* T)
+        if self.pool is not None:
+            hs = self.pool.last_stats
+            iterations = sum(s["iterations"] for s in hs)
+            frames = sum(s["frames"] for s in hs)
+        else:
+            iterations = sum(a.iterations for a in self.actors)
+            frames = sum(a.frames for a in self.actors)  # = iterations*E(*T)
+        if self.pool is not None:
+            returns = [r for s in self.pool.last_stats for r in s["returns"]]
+        else:
+            returns = [r for a in self.actors for r in a.returns[-20:]]
         out = {
             "elapsed_s": elapsed,
             "backend": self.backend,
+            "transport": self.transport,
             "envs_per_actor": self.envs_per_actor,
             "actor_iterations": iterations,
             "env_frames": frames,
@@ -149,19 +218,35 @@ class SeedSystem:
             "learner_steps": self.learner.steps if self.learner else 0,
             "learner_steps_per_s": (self.learner.steps / elapsed) if self.learner else 0.0,
             "learner_error": self.learner.error if self.learner else None,
-            "episode_return_mean": float(np.mean(
-                [r for a in self.actors for r in a.returns[-20:]] or [0.0])),
+            "episode_return_mean": float(np.mean(returns or [0.0])),
         }
         if self.server:
             s = self.server.stats
+            actor_error = next(
+                (e for e in (getattr(a, "error", None) for a in self.actors)
+                 if e), None)
             out.update({
                 "inference_batches": s["batches"],
                 "inference_lanes": s["requests"],
-                "mean_batch_occupancy": s["batch_occupancy"] / max(s["batches"], 1),
-                "mean_queue_wait_ms": 1e3 * s["queue_wait_s"] / max(s["requests"], 1),
+                "inference_rpcs": s["rpcs"],
+                # raw accumulated counters, plus the derived means so
+                # callers never have to know which sum divides by what
+                "batch_occupancy_sum": s["batch_occupancy"],
+                "queue_wait_s_sum": s["queue_wait_s"],
                 "inference_compute_s": s["compute_s"],
-                "inference_error": self.server.error,
+                "inference_error": self.server.error or actor_error,
+                **self.server.derived_stats(),
             })
+            if self.pool is not None:
+                g = self.gateway.stats
+                out.update({
+                    "actor_hosts": self.pool.num_hosts,
+                    "gateway_connections": g["connections"],
+                    "gateway_request_frames": g["request_frames"],
+                    "gateway_traj_frames": g["traj_frames"],
+                    "host_errors": [s_["error"] for s_ in self.pool.last_stats
+                                    if s_["error"]],
+                })
         else:
             # device backend: no central inference — one transfer per scan.
             # scans == actor_iterations; each supplies T*E frames.

@@ -1,0 +1,183 @@
+"""Actor hosts: OS processes of vectorized actors against a remote gateway.
+
+This is the paper's disaggregated provisioning made runnable: the learner
+box keeps the `InferenceServer` + `InferenceGateway`, and env interaction
+moves to K separate *processes* — stand-ins for K separate CPU hosts. Each
+actor thread on a host dials the gateway with its own `SyncSocketTransport`
+connection (SEED's per-actor streaming-RPC shape: the reply is parsed in
+the submitting thread, no relay hop), so a host with A actors holds A
+connections. On one machine this exercises the full wire path over
+loopback; pointing `address` at another box is the same code.
+
+Processes are spawned (never forked: JAX holds threads at import time and
+fork would deadlock them), so `env_factory` must be picklable — a class
+like `CatchEnv` or a module-level factory function, not a lambda. Each
+child warms its vector envs up before its measured window, runs for
+`seconds`, then reports counters through a result queue. The parent
+enforces a hard timeout: a wire-level deadlock kills the run with an error
+instead of hanging the caller (or CI) forever.
+
+Determinism note: actor ids are partitioned contiguously across hosts and
+each `Actor` seeds its lanes from its id exactly as the in-process backend
+does, so a socket run with the same (num_actors, envs_per_actor, seed) is
+bit-identical to in-proc under a deterministic policy — the loopback
+parity contract `tests/test_transport.py` asserts.
+"""
+
+import multiprocessing as mp
+import queue as _queue
+import time
+import traceback
+from dataclasses import dataclass
+from typing import Any, List, Optional, Tuple
+
+
+@dataclass
+class ActorHostConfig:
+    """Everything one child process needs; must pickle under spawn."""
+    address: Tuple[str, int]
+    host_id: int
+    actor_ids: Tuple[int, ...]
+    env_factory: Any
+    envs_per_actor: int
+    unroll: int
+    seconds: float
+    seed: Optional[int] = None
+    connect_timeout_s: float = 15.0
+
+
+def run_actor_host(cfg: ActorHostConfig, result_q) -> None:
+    """Child entry point: dial the gateway, drive actors, report stats."""
+    stats = {"host_id": cfg.host_id, "elapsed_s": 0.0, "iterations": 0,
+             "frames": 0, "episodes": 0, "returns": [], "error": None}
+    try:
+        import sys
+
+        import numpy as np
+
+        from repro.core.actor import Actor
+        from repro.transport.socket import SyncSocketTransport
+
+        # compute-bound sibling actors convoy thread wakeups under
+        # CPython's default 5 ms GIL slice; this process exists only to
+        # run actors, so a finer slice is safe and worth real latency.
+        sys.setswitchinterval(1e-3)
+        # SEED's per-actor streaming-RPC shape: one connection per actor,
+        # replies parsed in the actor thread itself (no recv-thread hop)
+        transports = [
+            SyncSocketTransport.connect(cfg.address,
+                                        timeout_s=cfg.connect_timeout_s)
+            for _ in cfg.actor_ids]
+        actors = [
+            Actor(aid, cfg.env_factory, tr, tr.send_trajectory,
+                  cfg.unroll, num_envs=cfg.envs_per_actor,
+                  seed=None if cfg.seed is None else cfg.seed + aid)
+            for aid, tr in zip(cfg.actor_ids, transports)]
+        # pay jit/reset compilation before the measured window (JaxVectorEnv
+        # reset is idempotent — fixed keys — so this doesn't perturb the
+        # deterministic rollout the actor loop then produces)
+        for a in actors:
+            a.vec.reset()
+            a.vec.step(np.zeros(a.num_envs, np.int32))
+            a.vec.reset()
+        t0 = time.perf_counter()
+        for a in actors:
+            a.start()
+        deadline = t0 + cfg.seconds
+        while time.perf_counter() < deadline:
+            # exit the window early once the run is dead: a wire failure
+            # sets transport.error, but a server-stop poison reply only
+            # sets actor.error (the actor thread then exits) — wait on
+            # neither for the full measured window
+            if any(tr.error is not None for tr in transports):
+                break
+            if all(not a._thread.is_alive() for a in actors):
+                break
+            time.sleep(0.02)
+        for a in actors:
+            a.stop()
+        for a in actors:
+            a.join(timeout=5.0)
+        stats["elapsed_s"] = time.perf_counter() - t0
+        for tr in transports:
+            tr.close()
+        stats["iterations"] = sum(a.iterations for a in actors)
+        stats["frames"] = sum(a.frames for a in actors)
+        stats["episodes"] = sum(a.episodes for a in actors)
+        stats["returns"] = [r for a in actors for r in a.returns[-20:]]
+        stats["error"] = next(
+            (tr.error for tr in transports if tr.error), None) or next(
+            (a.error for a in actors if a.error), None)
+    except Exception:
+        stats["error"] = traceback.format_exc()
+    result_q.put(stats)
+
+
+class ActorHostPool:
+    """Spawn K actor-host processes and collect their run stats.
+
+    The pool partitions `num_actors` contiguously across `num_hosts` (host
+    h gets ids [h*per, ...)); globally-unique actor ids keep the gateway's
+    (actor_id, env_id) recurrent-slot mapping collision-free across hosts.
+    """
+
+    def __init__(self, env_factory, num_actors: int, envs_per_actor: int,
+                 unroll: int, num_hosts: int = 1,
+                 seed: Optional[int] = None, grace_s: float = 90.0):
+        if not 1 <= num_hosts <= num_actors:
+            raise ValueError(
+                f"num_hosts={num_hosts} must be in [1, num_actors={num_actors}]")
+        self.env_factory = env_factory
+        self.num_actors = num_actors
+        self.envs_per_actor = envs_per_actor
+        self.unroll = unroll
+        self.num_hosts = num_hosts
+        self.seed = seed
+        self.grace_s = grace_s       # spawn + jax import + jit headroom
+        self.last_stats: List[dict] = []
+
+    def _partitions(self) -> List[Tuple[int, ...]]:
+        ids = list(range(self.num_actors))
+        base, extra = divmod(self.num_actors, self.num_hosts)
+        parts, at = [], 0
+        for h in range(self.num_hosts):
+            n = base + (1 if h < extra else 0)
+            parts.append(tuple(ids[at:at + n]))
+            at += n
+        return parts
+
+    def run(self, address: Tuple[str, int], seconds: float) -> List[dict]:
+        """Block until every host reports (or the hard timeout trips)."""
+        ctx = mp.get_context("spawn")
+        result_q = ctx.Queue()
+        procs = []
+        for host_id, actor_ids in enumerate(self._partitions()):
+            cfg = ActorHostConfig(
+                address=tuple(address), host_id=host_id,
+                actor_ids=actor_ids, env_factory=self.env_factory,
+                envs_per_actor=self.envs_per_actor, unroll=self.unroll,
+                seconds=seconds, seed=self.seed)
+            p = ctx.Process(target=run_actor_host, args=(cfg, result_q),
+                            daemon=True)
+            p.start()
+            procs.append(p)
+        deadline = time.perf_counter() + seconds + self.grace_s
+        results = []
+        try:
+            for _ in procs:
+                remaining = deadline - time.perf_counter()
+                try:
+                    results.append(result_q.get(timeout=max(remaining, 0.1)))
+                except _queue.Empty:
+                    raise RuntimeError(
+                        f"actor host timed out after {seconds + self.grace_s:.0f}s "
+                        f"({len(results)}/{len(procs)} reported) — wire-level "
+                        f"deadlock or crash; partial stats: {results}")
+        finally:
+            for p in procs:
+                p.join(timeout=5.0)
+                if p.is_alive():
+                    p.terminate()
+                    p.join(timeout=5.0)
+        self.last_stats = sorted(results, key=lambda s: s["host_id"])
+        return self.last_stats

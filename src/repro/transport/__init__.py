@@ -1,0 +1,35 @@
+"""Wire-level inference transport — the gRPC-shaped seam, realized.
+
+`core.inference` promised that its queue API was "the only seam a
+networked transport would replace"; this package replaces it. Three
+layers:
+
+  * `repro.transport.codec` — length-prefixed binary frames (no pickle on
+    the hot path): requests, replies, errors, trajectory unrolls;
+  * `repro.transport.local.InProcTransport` — the identity transport over
+    a local `InferenceServer` (the default; bit-for-bit today's behavior);
+  * `repro.transport.socket` — `SocketTransport` (actor-host client) and
+    `InferenceGateway` (learner-side acceptor) over TCP, preserving the
+    batching deadline and per-(actor, lane) recurrent-slot semantics
+    across the wire.
+
+`repro.launch.actor_host` spawns OS-process actor hosts against a gateway
+address; `SeedSystem(transport="socket")` wires the whole thing together.
+"""
+
+from repro.transport.codec import (CodecError, Frame, FrameTooLarge,
+                                   TruncatedFrame, decode_frame,
+                                   encode_error, encode_reply,
+                                   encode_request, encode_trajectory,
+                                   read_frame)
+from repro.transport.local import InProcTransport, Transport
+from repro.transport.socket import (InferenceGateway, SocketTransport,
+                                    SyncSocketTransport)
+
+__all__ = [
+    "CodecError", "Frame", "FrameTooLarge", "TruncatedFrame",
+    "decode_frame", "encode_error", "encode_reply", "encode_request",
+    "encode_trajectory", "read_frame",
+    "InProcTransport", "Transport",
+    "InferenceGateway", "SocketTransport", "SyncSocketTransport",
+]

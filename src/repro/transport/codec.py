@@ -1,0 +1,264 @@
+"""Wire codec: length-prefixed binary frames for the inference transport.
+
+The hot path of a disaggregated SEED deployment is (obs -> action) at env
+frame rate, so the codec is deliberately dumb and fast: a fixed header,
+raw C-contiguous ndarray bytes with an explicit dtype/shape prologue, and
+NO pickle anywhere — a malicious or corrupted peer can produce garbage
+arrays, never code execution. Four frame kinds cover the whole protocol:
+
+  * ``REQUEST``  actor -> gateway: one lane-batched ``obs[E, ...]`` plus the
+    ``actor_id`` that keys the server's per-(actor, lane) recurrent slots
+    and a per-connection ``request_id`` for reply demultiplexing;
+  * ``REPLY``    gateway -> actor: the ``(E,)`` action array for a request;
+  * ``ERROR``    gateway -> actor (or broadcast with ``request_id == 0``):
+    a UTF-8 message — the wire form of the poison ``ReplyError`` that
+    fail-fast shutdown puts on in-process reply queues;
+  * ``TRAJ``     actor -> gateway: a dict of named arrays (one per-lane
+    unroll in the ``flush_lane_unrolls`` schema) feeding the learner-side
+    trajectory sink, so trajectories ride the same connection.
+
+Framing::
+
+    frame   := u32 body_len | body                      (big-endian)
+    body    := u16 magic | u8 ver | u8 kind | u8 flags
+               | u32 actor_id | u64 request_id | payload
+    ndarray := u8 dtype_len | dtype_str | u8 ndim | ndim * u32 dim
+               | u64 nbytes | raw bytes
+
+Truncated frames (EOF or short buffer mid-frame) raise ``TruncatedFrame``;
+a length prefix beyond ``max_frame`` raises ``FrameTooLarge`` before any
+allocation, so a desynchronized or hostile stream cannot balloon memory.
+"""
+
+import struct
+from dataclasses import dataclass, field
+from typing import Callable, Dict, Optional
+
+import numpy as np
+
+MAGIC = 0x5254           # "RT" — repro transport
+VERSION = 1
+
+KIND_REQUEST = 1
+KIND_REPLY = 2
+KIND_ERROR = 3
+KIND_TRAJ = 4
+
+FLAG_SCALAR = 0x01       # legacy single-obs submit: reply unwraps to obs[0]
+
+DEFAULT_MAX_FRAME = 64 << 20      # 64 MiB: > any sane lane batch or unroll
+
+_LEN = struct.Struct(">I")
+_HEADER = struct.Struct(">HBBBIQ")   # magic, ver, kind, flags, actor, request
+_U8 = struct.Struct(">B")
+_U16 = struct.Struct(">H")
+_U32 = struct.Struct(">I")
+_U64 = struct.Struct(">Q")
+
+
+class CodecError(ValueError):
+    """Malformed frame (bad magic/kind/dtype, trailing bytes, ...)."""
+
+
+class TruncatedFrame(CodecError):
+    """Stream or buffer ended in the middle of a frame."""
+
+
+class FrameTooLarge(CodecError):
+    """Length prefix exceeds the configured max frame size."""
+
+
+@dataclass
+class Frame:
+    kind: int
+    actor_id: int = 0
+    request_id: int = 0
+    flags: int = 0
+    array: Optional[np.ndarray] = None       # REQUEST / REPLY payload
+    message: str = ""                        # ERROR payload
+    arrays: Optional[Dict[str, np.ndarray]] = field(default=None)  # TRAJ
+
+    @property
+    def scalar(self) -> bool:
+        return bool(self.flags & FLAG_SCALAR)
+
+
+# ---------------------------------------------------------------- encoding
+
+def _encode_ndarray(arr: np.ndarray) -> bytes:
+    arr = np.asarray(arr)
+    if not arr.flags["C_CONTIGUOUS"]:
+        # ascontiguousarray would also promote 0-d to 1-d, so only call it
+        # when a copy is actually needed
+        arr = np.ascontiguousarray(arr)
+    if arr.dtype.hasobject:
+        raise CodecError(
+            f"dtype {arr.dtype} is not wire-safe (object arrays would need "
+            f"pickle, which the hot path forbids)")
+    dt = arr.dtype.str.encode("ascii")
+    data = arr.tobytes()
+    parts = [_U8.pack(len(dt)), dt, _U8.pack(arr.ndim)]
+    parts.extend(_U32.pack(d) for d in arr.shape)
+    parts.append(_U64.pack(len(data)))
+    parts.append(data)
+    return b"".join(parts)
+
+
+def _frame(kind: int, actor_id: int, request_id: int, flags: int,
+           payload: bytes) -> bytes:
+    body = _HEADER.pack(MAGIC, VERSION, kind, flags,
+                        actor_id, request_id) + payload
+    return _LEN.pack(len(body)) + body
+
+
+def encode_request(actor_id: int, request_id: int, obs: np.ndarray,
+                   scalar: bool = False) -> bytes:
+    return _frame(KIND_REQUEST, actor_id, request_id,
+                  FLAG_SCALAR if scalar else 0, _encode_ndarray(obs))
+
+
+def encode_reply(request_id: int, actions: np.ndarray) -> bytes:
+    return _frame(KIND_REPLY, 0, request_id, 0, _encode_ndarray(actions))
+
+
+def encode_error(request_id: int, message: str) -> bytes:
+    """request_id == 0 broadcasts: every pending request on the connection
+    fails (used for server death / shutdown)."""
+    return _frame(KIND_ERROR, 0, request_id, 0, message.encode("utf-8"))
+
+
+def encode_trajectory(actor_id: int, arrays: Dict[str, np.ndarray]) -> bytes:
+    parts = [_U16.pack(len(arrays))]
+    for name, arr in arrays.items():
+        nb = name.encode("utf-8")
+        if len(nb) > 255:
+            raise CodecError(f"trajectory key too long: {name!r}")
+        parts.append(_U8.pack(len(nb)))
+        parts.append(nb)
+        parts.append(_encode_ndarray(np.asarray(arr)))
+    return _frame(KIND_TRAJ, actor_id, 0, 0, b"".join(parts))
+
+
+# ---------------------------------------------------------------- decoding
+
+def _need(body: bytes, offset: int, n: int) -> int:
+    if offset + n > len(body):
+        raise TruncatedFrame(
+            f"frame body ended at {len(body)} bytes; needed {offset + n}")
+    return offset + n
+
+
+def _decode_ndarray(body: bytes, offset: int):
+    end = _need(body, offset, 1)
+    (dlen,) = _U8.unpack_from(body, offset)
+    offset = end
+    end = _need(body, offset, dlen)
+    try:
+        dtype = np.dtype(body[offset:end].decode("ascii"))
+    except (TypeError, UnicodeDecodeError) as e:
+        raise CodecError(f"bad dtype string: {e}") from None
+    if dtype.hasobject:
+        raise CodecError("refusing object dtype from the wire")
+    offset = end
+    end = _need(body, offset, 1)
+    (ndim,) = _U8.unpack_from(body, offset)
+    offset = end
+    shape = []
+    for _ in range(ndim):
+        end = _need(body, offset, 4)
+        shape.append(_U32.unpack_from(body, offset)[0])
+        offset = end
+    end = _need(body, offset, 8)
+    (nbytes,) = _U64.unpack_from(body, offset)
+    offset = end
+    # arbitrary-precision product: a hostile shape like (2^31, 2^31, 4)
+    # must not wrap to a small number and slip past the length check
+    expected = dtype.itemsize
+    for d in shape:
+        expected *= d
+    if nbytes != expected:
+        raise CodecError(
+            f"ndarray length mismatch: header says {nbytes} bytes, "
+            f"shape {tuple(shape)} x {dtype} needs {expected}")
+    end = _need(body, offset, nbytes)
+    arr = np.frombuffer(body[offset:end], dtype=dtype).reshape(shape)
+    return arr.copy(), end       # copy: detach from the recv buffer
+
+
+def decode_frame(body: bytes) -> Frame:
+    """Decode one frame body (length prefix already stripped)."""
+    if len(body) < _HEADER.size:
+        raise TruncatedFrame(f"frame body of {len(body)} bytes < header")
+    magic, ver, kind, flags, actor_id, request_id = _HEADER.unpack_from(body)
+    if magic != MAGIC:
+        raise CodecError(f"bad magic 0x{magic:04x} (stream desynchronized?)")
+    if ver != VERSION:
+        raise CodecError(f"unsupported wire version {ver}")
+    offset = _HEADER.size
+    frame = Frame(kind=kind, actor_id=actor_id, request_id=request_id,
+                  flags=flags)
+    if kind in (KIND_REQUEST, KIND_REPLY):
+        frame.array, offset = _decode_ndarray(body, offset)
+    elif kind == KIND_ERROR:
+        frame.message = body[offset:].decode("utf-8", errors="replace")
+        offset = len(body)
+    elif kind == KIND_TRAJ:
+        end = _need(body, offset, 2)
+        (count,) = _U16.unpack_from(body, offset)
+        offset = end
+        arrays = {}
+        for _ in range(count):
+            end = _need(body, offset, 1)
+            (nlen,) = _U8.unpack_from(body, offset)
+            offset = end
+            end = _need(body, offset, nlen)
+            name = body[offset:end].decode("utf-8")
+            offset = end
+            arrays[name], offset = _decode_ndarray(body, offset)
+        frame.arrays = arrays
+    else:
+        raise CodecError(f"unknown frame kind {kind}")
+    if offset != len(body):
+        raise CodecError(
+            f"{len(body) - offset} trailing bytes after frame payload")
+    return frame
+
+
+def read_frame(read_exact: Callable[[int], bytes],
+               max_frame: int = DEFAULT_MAX_FRAME) -> Optional[Frame]:
+    """Read one frame from a stream.
+
+    ``read_exact(n)`` must return exactly n bytes, b"" on clean EOF, and may
+    raise OSError. Returns None on clean EOF at a frame boundary; raises
+    TruncatedFrame if the stream dies mid-frame, FrameTooLarge before
+    reading an oversized body.
+    """
+    prefix = read_exact(_LEN.size)
+    if prefix == b"":
+        return None
+    if len(prefix) < _LEN.size:
+        raise TruncatedFrame("EOF inside length prefix")
+    (body_len,) = _LEN.unpack(prefix)
+    if body_len > max_frame:
+        raise FrameTooLarge(
+            f"frame of {body_len} bytes exceeds max_frame={max_frame}")
+    body = read_exact(body_len)
+    if len(body) < body_len:
+        raise TruncatedFrame(
+            f"EOF after {len(body)}/{body_len} body bytes")
+    return decode_frame(body)
+
+
+def recv_exact(sock, n: int) -> bytes:
+    """Socket adapter for ``read_frame``: exactly n bytes or b"" iff the
+    peer closed before the first byte; short reads mid-buffer return what
+    arrived (the caller raises TruncatedFrame)."""
+    chunks = []
+    got = 0
+    while got < n:
+        chunk = sock.recv(min(n - got, 1 << 20))
+        if not chunk:
+            break
+        chunks.append(chunk)
+        got += len(chunk)
+    return b"".join(chunks)

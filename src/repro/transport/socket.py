@@ -1,0 +1,467 @@
+"""TCP transport: disaggregated CPU actor hosts behind a wire.
+
+Client side — `SocketTransport`: all actor threads on one host share ONE
+TCP connection; a per-connection ``request_id`` demultiplexes replies back
+to the right actor's reply queue (gRPC-stream-shaped, like SEED RL's
+inference RPC). Trajectory unrolls ride the same connection as ``TRAJ``
+frames, so an actor host needs exactly one socket to the learner box.
+
+Server side — `InferenceGateway`: accepts N actor-host connections and
+demultiplexes request frames into the central `InferenceServer`'s request
+queue — the SAME queue the in-process actors use, so remote and local
+actors batch together and the batching deadline + per-(actor, lane)
+recurrent-slot semantics hold unchanged across the wire. Replies skip a
+relay thread entirely: each request carries a `_WireReply` whose ``put``
+encodes and sends on the server's own loop thread (replies are a few
+dozen bytes, so the sendall cannot meaningfully stall the batch loop; a
+production gateway would make this write async — see ROADMAP).
+
+Fail-fast: a dead server drains its queue with poison `ReplyError`s which
+the writer forwards as ``ERROR`` frames; a dropped connection poisons every
+pending reply client-side. Either way actors surface an error instead of
+blocking forever.
+"""
+
+import queue
+import socket as _socket
+import struct
+import sys
+import threading
+import time
+import traceback
+from typing import Callable, Dict, Optional, Tuple
+
+import numpy as np
+
+from repro.core.inference import InferenceRequest, ReplyError
+from repro.transport.codec import (DEFAULT_MAX_FRAME, KIND_ERROR,
+                                   KIND_REPLY, KIND_REQUEST, KIND_TRAJ,
+                                   CodecError, decode_frame, encode_error,
+                                   encode_reply, encode_request,
+                                   encode_trajectory, read_frame,
+                                   recv_exact)
+from repro.transport.local import Transport
+
+Address = Tuple[str, int]
+
+
+class _ScalarReply:
+    """Unwrap a lane-batched (1,) reply to a scalar action client-side, so
+    the legacy single-obs ``submit`` never needs a wire flag round-trip."""
+
+    def __init__(self, inner: "queue.Queue"):
+        self._inner = inner
+
+    def get(self, timeout=None):
+        out = self._inner.get(timeout=timeout)
+        return out if isinstance(out, ReplyError) else out[0]
+
+
+class SocketTransport(Transport):
+    """Client half of the wire. One connection, many actor threads."""
+
+    def __init__(self, sock: _socket.socket,
+                 max_frame: int = DEFAULT_MAX_FRAME):
+        sock.setsockopt(_socket.IPPROTO_TCP, _socket.TCP_NODELAY, 1)
+        self._sock = sock
+        self.max_frame = max_frame
+        self._send_lock = threading.Lock()
+        self._pending: Dict[int, "queue.Queue"] = {}
+        self._pending_lock = threading.Lock()
+        self._next_id = 1          # 0 is the broadcast id — never assigned
+        self._closed = threading.Event()
+        self.error: Optional[str] = None
+        self._recv_thread = threading.Thread(target=self._recv_loop,
+                                             daemon=True)
+        self._recv_thread.start()
+
+    @classmethod
+    def connect(cls, address: Address, timeout_s: float = 10.0,
+                max_frame: int = DEFAULT_MAX_FRAME) -> "SocketTransport":
+        """Dial the gateway, retrying while it binds (actor hosts and the
+        learner box start concurrently)."""
+        deadline = time.perf_counter() + timeout_s
+        while True:
+            try:
+                sock = _socket.create_connection(address, timeout=2.0)
+                sock.settimeout(None)
+                return cls(sock, max_frame=max_frame)
+            except OSError:
+                if time.perf_counter() >= deadline:
+                    raise
+                time.sleep(0.05)
+
+    # ------------------------------------------------------- actor surface
+
+    def submit_batch(self, actor_id: int, obs: np.ndarray) -> "queue.Queue":
+        obs = np.asarray(obs)
+        reply: "queue.Queue" = queue.Queue(maxsize=1)
+        if self.error is not None or self._closed.is_set():
+            reply.put(ReplyError(self.error or "transport closed"))
+            return reply
+        with self._pending_lock:
+            request_id = self._next_id
+            self._next_id += 1
+            self._pending[request_id] = reply
+        try:
+            self._send(encode_request(actor_id, request_id, obs))
+        except OSError as e:
+            self._fail(f"send failed: {e}")
+        return reply
+
+    def submit(self, actor_id: int, obs: np.ndarray):
+        return _ScalarReply(
+            self.submit_batch(actor_id, np.asarray(obs)[None]))
+
+    def send_trajectory(self, arrays: Dict[str, np.ndarray],
+                        actor_id: int = 0):
+        """Trajectory sink over the same wire (``flush_lane_unrolls``
+        schema); drops silently once the transport has failed — the actor
+        is already being torn down on `error`."""
+        if self.error is not None or self._closed.is_set():
+            return
+        try:
+            self._send(encode_trajectory(actor_id, arrays))
+        except OSError as e:
+            self._fail(f"send failed: {e}")
+
+    def close(self):
+        self._closed.set()
+        try:
+            self._sock.shutdown(_socket.SHUT_RDWR)
+        except OSError:
+            pass
+        self._sock.close()
+        self._recv_thread.join(timeout=5.0)
+
+    # ------------------------------------------------------------ plumbing
+
+    def _send(self, frame: bytes):
+        with self._send_lock:
+            self._sock.sendall(frame)
+
+    def _fail(self, message: str):
+        """Poison every pending reply so no actor blocks on a dead wire."""
+        if self.error is None:
+            self.error = message
+        with self._pending_lock:
+            pending, self._pending = self._pending, {}
+        for reply in pending.values():
+            reply.put(ReplyError(self.error))
+
+    def _pop(self, request_id: int) -> Optional["queue.Queue"]:
+        with self._pending_lock:
+            return self._pending.pop(request_id, None)
+
+    def _recv_loop(self):
+        try:
+            while not self._closed.is_set():
+                frame = read_frame(lambda n: recv_exact(self._sock, n),
+                                   self.max_frame)
+                if frame is None:                      # clean peer close
+                    break
+                if frame.kind == KIND_REPLY:
+                    reply = self._pop(frame.request_id)
+                    if reply is not None:
+                        reply.put(frame.array)
+                elif frame.kind == KIND_ERROR:
+                    if frame.request_id == 0:          # broadcast: all fail
+                        self._fail(frame.message)
+                    else:
+                        reply = self._pop(frame.request_id)
+                        if reply is not None:
+                            reply.put(ReplyError(frame.message))
+                else:
+                    raise CodecError(
+                        f"unexpected frame kind {frame.kind} on client")
+        except (OSError, CodecError) as e:
+            if not self._closed.is_set():
+                self._fail(f"connection lost: {e}")
+            return
+        except Exception as e:       # never die silently holding replies
+            self._fail(f"receiver crashed: {e!r}")
+            return
+        # clean EOF before OUR close() is a gateway shutdown: poison any
+        # in-flight requests and mark the wire dead so actors stop
+        if not self._closed.is_set():
+            self._fail("gateway closed the connection")
+
+
+class _WireReply:
+    """Queue-shaped reply proxy: ``put(result)`` encodes the action array
+    (or poison `ReplyError`) and sends it straight from the caller's thread
+    — the `InferenceServer` loop on the happy path, its drain on shutdown.
+    Send failures are swallowed: a vanished actor host must not take the
+    server (and every other connection's actors) down with it."""
+
+    def __init__(self, gateway: "InferenceGateway", sock, send_lock,
+                 request_id: int):
+        self._gateway = gateway
+        self._sock = sock
+        self._send_lock = send_lock
+        self._request_id = request_id
+
+    def put(self, result):
+        if isinstance(result, ReplyError):
+            self._gateway._bump("error_frames")
+            frame = encode_error(self._request_id, result.message)
+        else:
+            self._gateway._bump("reply_frames")
+            frame = encode_reply(self._request_id, np.asarray(result))
+        try:
+            with self._send_lock:
+                self._sock.sendall(frame)
+        except OSError:
+            pass
+
+
+class _SyncReply:
+    """Reply handle for `SyncSocketTransport`: `get` reads the socket in
+    the calling (actor) thread. Raises `queue.Empty` on timeout to match
+    the `queue.Queue` contract the actor loop already handles."""
+
+    def __init__(self, transport: "SyncSocketTransport", request_id: int):
+        self._transport = transport
+        self._request_id = request_id
+
+    def get(self, timeout: Optional[float] = None):
+        return self._transport._read_reply(self._request_id, timeout)
+
+
+class SyncSocketTransport(Transport):
+    """One connection per actor thread, replies read synchronously.
+
+    The multiplexed `SocketTransport` pays two client-side thread wakeups
+    per reply (recv thread -> pending queue -> actor); under a busy GIL
+    each wakeup can convoy for milliseconds. This variant is SEED's
+    per-actor streaming-RPC shape instead: the actor thread that submitted
+    the request parses the reply off the socket itself — zero wakeups.
+    NOT thread-safe: one actor, one in-flight request at a time (the
+    actor loop's contract anyway). Trajectory sends from the same thread
+    interleave safely because TRAJ frames are strictly client -> gateway.
+    A mid-frame timeout keeps partial bytes buffered, so retrying `get` on
+    the same reply never desynchronizes the stream.
+    """
+
+    def __init__(self, sock: _socket.socket,
+                 max_frame: int = DEFAULT_MAX_FRAME):
+        sock.setsockopt(_socket.IPPROTO_TCP, _socket.TCP_NODELAY, 1)
+        self._sock = sock
+        self.max_frame = max_frame
+        self._buf = bytearray()
+        self._next_id = 1
+        self.error: Optional[str] = None
+
+    connect = classmethod(SocketTransport.connect.__func__)
+
+    def submit_batch(self, actor_id: int, obs: np.ndarray) -> _SyncReply:
+        request_id = self._next_id
+        self._next_id += 1
+        if self.error is None:
+            try:
+                # clear any sub-second timeout a previous timed get() left
+                # on the socket: a partially-sent frame on a send timeout
+                # would desynchronize the whole stream
+                self._sock.settimeout(None)
+                self._sock.sendall(
+                    encode_request(actor_id, request_id, np.asarray(obs)))
+            except OSError as e:
+                self.error = f"send failed: {e}"
+        return _SyncReply(self, request_id)
+
+    def submit(self, actor_id: int, obs: np.ndarray):
+        return _ScalarReply(
+            self.submit_batch(actor_id, np.asarray(obs)[None]))
+
+    def send_trajectory(self, arrays: Dict[str, np.ndarray],
+                        actor_id: int = 0):
+        if self.error is not None:
+            return
+        try:
+            self._sock.settimeout(None)      # see submit_batch
+            self._sock.sendall(encode_trajectory(actor_id, arrays))
+        except OSError as e:
+            self.error = f"send failed: {e}"
+
+    def close(self):
+        try:
+            self._sock.shutdown(_socket.SHUT_RDWR)
+        except OSError:
+            pass
+        self._sock.close()
+
+    # ------------------------------------------------------------ reading
+
+    def _fill(self, n: int, deadline: Optional[float]):
+        """Grow the buffer to >= n bytes; `queue.Empty` on deadline, with
+        any partial bytes retained for the next attempt."""
+        while len(self._buf) < n:
+            if deadline is None:
+                self._sock.settimeout(None)
+            else:
+                remaining = deadline - time.perf_counter()
+                if remaining <= 0:
+                    raise queue.Empty
+                self._sock.settimeout(remaining)
+            try:
+                chunk = self._sock.recv(1 << 16)
+            except TimeoutError:
+                raise queue.Empty from None
+            except OSError as e:
+                raise ConnectionError(f"recv failed: {e}") from None
+            if not chunk:
+                raise ConnectionError("gateway closed the connection")
+            self._buf += chunk
+
+    def _next_frame(self, deadline):
+        self._fill(4, deadline)
+        (body_len,) = struct.unpack(">I", self._buf[:4])
+        if body_len > self.max_frame:
+            raise CodecError(
+                f"frame of {body_len} bytes exceeds max_frame={self.max_frame}")
+        self._fill(4 + body_len, deadline)
+        body = bytes(self._buf[4:4 + body_len])
+        del self._buf[:4 + body_len]
+        return decode_frame(body)
+
+    def _read_reply(self, request_id: int, timeout: Optional[float]):
+        if self.error is not None:
+            return ReplyError(self.error)
+        deadline = None if timeout is None else \
+            time.perf_counter() + timeout
+        try:
+            while True:
+                frame = self._next_frame(deadline)
+                if frame.kind == KIND_REPLY:
+                    if frame.request_id == request_id:
+                        return frame.array
+                    continue            # stale reply from an abandoned rid
+                if frame.kind == KIND_ERROR:
+                    if frame.request_id in (0, request_id):
+                        return ReplyError(frame.message)
+                    continue
+                raise CodecError(
+                    f"unexpected frame kind {frame.kind} on sync client")
+        except queue.Empty:
+            raise
+        except (ConnectionError, CodecError) as e:
+            self.error = str(e)
+            return ReplyError(self.error)
+        except Exception as e:       # decode bug must not kill the actor
+            self.error = f"receiver crashed: {e!r}"
+            return ReplyError(self.error)
+
+
+class InferenceGateway:
+    """Server half of the wire: N connections -> one `InferenceServer`.
+
+    Per connection, a reader thread decodes frames — requests into the
+    server's queue (each carrying a `_WireReply` that writes the response
+    back from the server thread), trajectories into ``sink``. ``port=0``
+    binds an ephemeral loopback port; read ``address`` after `start()`.
+    """
+
+    def __init__(self, server, sink: Optional[Callable] = None,
+                 host: str = "127.0.0.1", port: int = 0,
+                 max_frame: int = DEFAULT_MAX_FRAME,
+                 gil_switch_interval_s: Optional[float] = 1e-3):
+        self.server = server
+        self.sink = sink
+        self._bind = (host, port)
+        self.max_frame = max_frame
+        # every wire reply crosses two thread wakeups in this process
+        # (reader -> server loop -> send); under CPython's default 5 ms GIL
+        # slice a compute-bound peer thread turns each wakeup into a
+        # multi-ms convoy, dominating the loopback RTT. A 1 ms slice
+        # measured ~1.6x end-to-end frames/s on a 2-core host. None keeps
+        # the process default; the old value is restored on stop().
+        self._gil_interval = gil_switch_interval_s
+        self._old_gil_interval: Optional[float] = None
+        self.address: Optional[Address] = None
+        self._listener: Optional[_socket.socket] = None
+        self._stop = threading.Event()
+        self._threads = []
+        self._conns = []
+        self._lock = threading.Lock()
+        self.stats = {"connections": 0, "request_frames": 0,
+                      "reply_frames": 0, "error_frames": 0, "traj_frames": 0}
+        self.error: Optional[str] = None
+
+    def _bump(self, key: str):
+        # N reader threads + the server loop all count; += is not atomic
+        with self._lock:
+            self.stats[key] += 1
+
+    def start(self) -> Address:
+        if self._gil_interval is not None:
+            self._old_gil_interval = sys.getswitchinterval()
+            sys.setswitchinterval(self._gil_interval)
+        self._listener = _socket.socket(_socket.AF_INET, _socket.SOCK_STREAM)
+        self._listener.setsockopt(_socket.SOL_SOCKET, _socket.SO_REUSEADDR, 1)
+        self._listener.bind(self._bind)
+        self._listener.listen(128)
+        self.address = self._listener.getsockname()
+        t = threading.Thread(target=self._accept_loop, daemon=True)
+        t.start()
+        self._threads.append(t)
+        return self.address
+
+    def stop(self):
+        self._stop.set()
+        if self._old_gil_interval is not None:
+            sys.setswitchinterval(self._old_gil_interval)
+            self._old_gil_interval = None
+        if self._listener is not None:
+            self._listener.close()
+        with self._lock:
+            conns = list(self._conns)
+        for sock in conns:
+            try:
+                sock.shutdown(_socket.SHUT_RDWR)
+            except OSError:
+                pass
+            sock.close()
+        for t in self._threads:
+            t.join(timeout=5.0)
+
+    def _accept_loop(self):
+        while not self._stop.is_set():
+            try:
+                sock, _ = self._listener.accept()
+            except OSError:
+                return                       # listener closed by stop()
+            sock.setsockopt(_socket.IPPROTO_TCP, _socket.TCP_NODELAY, 1)
+            with self._lock:
+                self._conns.append(sock)
+                self.stats["connections"] += 1
+            t = threading.Thread(target=self._read_conn, args=(sock,),
+                                 daemon=True)
+            t.start()
+            self._threads.append(t)
+
+    def _read_conn(self, sock):
+        send_lock = threading.Lock()         # replies interleave safely
+        try:
+            while not self._stop.is_set():
+                frame = read_frame(lambda n: recv_exact(sock, n),
+                                   self.max_frame)
+                if frame is None:
+                    break
+                if frame.kind == KIND_REQUEST:
+                    self._bump("request_frames")
+                    self.server.submit_request(InferenceRequest(
+                        frame.actor_id, frame.array,
+                        _WireReply(self, sock, send_lock,
+                                   frame.request_id)))
+                elif frame.kind == KIND_TRAJ:
+                    self._bump("traj_frames")
+                    if self.sink is not None:
+                        self.sink(frame.arrays)
+                else:
+                    raise CodecError(
+                        f"unexpected frame kind {frame.kind} on gateway")
+        except (OSError, CodecError):
+            if not self._stop.is_set():
+                self.error = traceback.format_exc()
+        finally:
+            sock.close()

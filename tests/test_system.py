@@ -14,7 +14,8 @@ import pytest
 
 from repro.core.bottleneck import (RooflineTerms, paper_fig2_reference,
                                    sequential_idealization)
-from repro.core.provisioning import (cpu_gpu_ratio, fit_paper_actor_model,
+from repro.core.provisioning import (cpu_gpu_ratio, cpu_gpu_ratio_breakdown,
+                                     fit_paper_actor_model,
                                      fit_paper_derating, provision)
 from repro.core.system import SeedSystem
 from repro.envs.alesim import ALESimEnv
@@ -54,6 +55,39 @@ def test_derating_reproduces_paper_fig4():
 def test_cpu_gpu_ratio_matches_paper_examples():
     # DGX-1: 40 threads / (8 x 80 SMs) = 1/16
     assert cpu_gpu_ratio(DGX1_HOST, V100, n_chips=8) == pytest.approx(1 / 16)
+
+
+def test_with_network_is_a_fourth_operating_point():
+    model, _ = fit_paper_actor_model()
+    # the wire RTT is a pure latency tax: throughput at fixed n can only drop
+    net = model.with_network(t_rtt=0.5)
+    assert float(net.throughput(40)) < float(model.throughput(40))
+    assert float(model.with_network(0.0).throughput(40)) == pytest.approx(
+        float(model.throughput(40)))
+    # ...but disaggregated hosts raise the capacity ceiling: past the knee a
+    # 4-host deployment beats the single host even paying the RTT
+    assert float(net.throughput(512)) <= float(
+        model.with_network(0.5, n_hosts=4).throughput(512))
+    assert float(model.with_network(0.5, n_hosts=4).throughput(2048)) \
+        == pytest.approx(4 * model.hw_threads / model.t_env)
+    with pytest.raises(ValueError):
+        model.with_network(-1.0)
+    with pytest.raises(ValueError):
+        model.with_network(0.1, n_hosts=0)
+
+
+def test_cpu_gpu_ratio_breakdown_decomposes_per_host():
+    one = cpu_gpu_ratio_breakdown([DGX1_HOST], V100, n_chips=8)
+    assert one.total == pytest.approx(cpu_gpu_ratio(DGX1_HOST, V100, 8))
+    many = cpu_gpu_ratio_breakdown([DGX1_HOST] * 16, V100, n_chips=8)
+    assert many.total == pytest.approx(16 / 16)   # 16 hosts reach ratio 1
+    assert len(many.per_host) == 16
+    assert sum(c for _, _, c in many.per_host) == pytest.approx(many.total)
+    mixed = cpu_gpu_ratio_breakdown([DGX1_HOST, V5E_HOST], V100, n_chips=8)
+    assert mixed.total == pytest.approx(
+        cpu_gpu_ratio(DGX1_HOST, V100, 8) + cpu_gpu_ratio(V5E_HOST, V100, 8))
+    with pytest.raises(ValueError):
+        cpu_gpu_ratio_breakdown([], V100)
 
 
 def test_provisioning_rule():

@@ -1,0 +1,393 @@
+"""Wire-transport tests: codec round-trips and rejection, fail-fast reply
+contracts, loopback gateway semantics, and the in-proc <-> socket parity
+the disaggregated deployment rests on.
+
+The parity test is the load-bearing one: a socket-transport rollout with
+the same (num_actors, envs_per_actor, seed) must be BIT-identical to the
+in-process backend, because the transport replaces only the request/reply
+plumbing — batching, recurrent slots, env seeding all stay server-side.
+"""
+
+import io
+import queue
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core.actor import Actor
+from repro.core.inference import InferenceServer, ReplyError
+from repro.envs.catch import CatchEnv
+from repro.launch.actor_host import ActorHostPool
+from repro.transport import codec
+from repro.transport.local import InProcTransport
+from repro.transport.socket import (InferenceGateway, SocketTransport,
+                                    SyncSocketTransport)
+
+
+def det_policy(obs, ids):
+    """Deterministic and slot-order independent, so batching/arrival order
+    (which legitimately differs across transports) cannot change actions."""
+    flat = np.abs(obs.reshape(obs.shape[0], -1))
+    return (flat.sum(axis=1) * 997.0).astype(np.int64) % CatchEnv.num_actions
+
+
+# ------------------------------------------------------------------ codec
+
+@pytest.mark.parametrize("dtype,shape", [
+    (np.uint8, (4, 84, 84)),        # Atari-style frame lanes
+    (np.float32, (8, 50)),          # vectorized obs
+    (np.float64, (3,)),
+    (np.int32, ()),                 # scalar action
+    (np.bool_, (2, 5)),
+    (np.float32, (0,)),             # zero-length lane batch
+    (np.uint8, (0, 84, 84)),
+])
+def test_codec_request_roundtrip_preserves_dtype_shape_bytes(dtype, shape):
+    rng = np.random.default_rng(0)
+    arr = (rng.random(shape) * 100).astype(dtype)
+    wire = codec.encode_request(actor_id=7, request_id=123, obs=arr)
+    stream = io.BytesIO(wire)
+    frame = codec.read_frame(stream.read)
+    assert frame.kind == codec.KIND_REQUEST
+    assert frame.actor_id == 7 and frame.request_id == 123
+    assert frame.array.dtype == arr.dtype
+    assert frame.array.shape == arr.shape
+    assert np.array_equal(frame.array, arr)
+
+
+def test_codec_reply_error_traj_roundtrip():
+    actions = np.arange(6, dtype=np.int64)
+    frame = codec.decode_frame(codec.encode_reply(9, actions)[4:])
+    assert frame.kind == codec.KIND_REPLY and frame.request_id == 9
+    assert np.array_equal(frame.array, actions)
+
+    err = codec.decode_frame(codec.encode_error(0, "server died: boom")[4:])
+    assert err.kind == codec.KIND_ERROR and err.request_id == 0
+    assert err.message == "server died: boom"
+
+    traj = {"obs": np.random.rand(8, 50).astype(np.float32),
+            "actions": np.arange(8, dtype=np.int32),
+            "rewards": np.zeros(8, np.float32),
+            "dones": np.zeros(8, np.float32)}
+    out = codec.decode_frame(codec.encode_trajectory(3, traj)[4:])
+    assert out.kind == codec.KIND_TRAJ and out.actor_id == 3
+    assert sorted(out.arrays) == sorted(traj)
+    for k in traj:
+        assert out.arrays[k].dtype == traj[k].dtype
+        assert np.array_equal(out.arrays[k], traj[k])
+
+
+def test_codec_scalar_flag_survives():
+    wire = codec.encode_request(1, 2, np.zeros((1, 4), np.float32),
+                                scalar=True)
+    assert codec.decode_frame(wire[4:]).scalar
+
+
+def test_codec_rejects_truncated_frames():
+    wire = codec.encode_request(1, 1, np.random.rand(4, 10).astype(np.float32))
+    # truncation at every interesting boundary: inside the length prefix,
+    # inside the header, inside the ndarray prologue, inside the data
+    for cut in (2, 6, 24, len(wire) - 3):
+        stream = io.BytesIO(wire[:cut])
+        with pytest.raises(codec.TruncatedFrame):
+            codec.read_frame(stream.read)
+    # clean EOF at a frame boundary is not an error
+    assert codec.read_frame(io.BytesIO(b"").read) is None
+
+
+def test_codec_rejects_oversized_frames_before_allocating():
+    wire = codec.encode_request(1, 1, np.zeros((4, 10), np.float32))
+    with pytest.raises(codec.FrameTooLarge):
+        codec.read_frame(io.BytesIO(wire).read, max_frame=16)
+
+
+def test_codec_rejects_garbage():
+    with pytest.raises(codec.CodecError):
+        codec.decode_frame(b"\x00" * 40)          # bad magic
+    wire = codec.encode_reply(1, np.zeros(3, np.float32))
+    with pytest.raises(codec.CodecError):
+        codec.decode_frame(wire[4:] + b"xx")      # trailing bytes
+    # internal length lies about the payload size
+    tampered = bytearray(wire[4:])
+    tampered[-13] ^= 0xFF                          # flip a byte of u64 nbytes
+    with pytest.raises(codec.CodecError):
+        codec.decode_frame(bytes(tampered))
+    with pytest.raises(codec.CodecError):          # no pickle on the wire
+        codec.encode_reply(1, np.array([object()], dtype=object))
+
+
+def test_codec_property_roundtrip():
+    hypothesis = pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    @settings(deadline=None, max_examples=30)
+    @given(st.sampled_from(["u1", "i4", "i8", "f4", "f8"]),
+           st.lists(st.integers(0, 5), min_size=0, max_size=3),
+           st.integers(0, 2 ** 31 - 1))
+    def roundtrip(dtype, shape, seed):
+        rng = np.random.default_rng(seed)
+        arr = (rng.random(shape) * 50).astype(dtype)
+        frame = codec.decode_frame(
+            codec.encode_request(seed % 1000, seed, arr)[4:])
+        assert frame.array.dtype == arr.dtype
+        assert frame.array.shape == arr.shape
+        assert np.array_equal(frame.array, arr)
+
+    roundtrip()
+
+
+# -------------------------------------------------- in-proc transport + fail-fast
+
+def test_inproc_transport_is_the_server_behavior():
+    srv = InferenceServer(det_policy, max_batch=4, deadline_ms=2.0)
+    tr = InProcTransport(srv)
+    srv.start()
+    obs = np.random.rand(4, 50).astype(np.float32)
+    try:
+        got = tr.submit_batch(0, obs).get(timeout=5.0)
+        assert np.array_equal(got, det_policy(obs, None))
+        assert tr.error is None
+    finally:
+        srv.stop()
+    assert isinstance(tr.submit_batch(0, obs).get(timeout=1.0), ReplyError)
+
+
+def test_server_stop_drains_pending_with_poison():
+    started = threading.Event()
+
+    def slow_policy(obs, ids):
+        started.set()
+        time.sleep(0.2)
+        return np.zeros((obs.shape[0],), np.int32)
+
+    srv = InferenceServer(slow_policy, max_batch=1, deadline_ms=1.0)
+    srv.start()
+    srv.submit_batch(0, np.zeros((1, 4), np.float32))
+    started.wait(timeout=5.0)
+    # second request is queued behind the in-flight batch when stop() lands
+    reply = srv.submit_batch(1, np.zeros((1, 4), np.float32))
+    srv.stop()
+    out = reply.get(timeout=2.0)
+    assert isinstance(out, ReplyError), out
+
+
+def test_actor_surfaces_server_death_instead_of_deadlocking():
+    calls = []
+
+    def dying_policy(obs, ids):
+        calls.append(1)
+        if len(calls) > 3:
+            raise RuntimeError("policy exploded")
+        return np.zeros((obs.shape[0],), np.int32)
+
+    srv = InferenceServer(dying_policy, max_batch=2, deadline_ms=1.0)
+    actor = Actor(0, CatchEnv, srv, lambda t: None, unroll=4, num_envs=2)
+    srv.start()
+    actor.start()
+    # without fail-fast the actor thread would hang forever here
+    actor._thread.join(timeout=10.0)
+    assert not actor._thread.is_alive(), "actor deadlocked on a dead server"
+    assert actor.error is not None and "policy exploded" in actor.error
+    assert "policy exploded" in srv.error
+    srv.stop()
+
+
+def test_derived_stats_normalize_the_raw_sums():
+    srv = InferenceServer(det_policy, max_batch=4, deadline_ms=1.0)
+    srv.start()
+    try:
+        for _ in range(5):
+            out = srv.submit_batch(0, np.random.rand(2, 50).astype(
+                np.float32)).get(timeout=5.0)
+            assert out.shape == (2,)
+    finally:
+        srv.stop()
+    d = srv.derived_stats()
+    s = srv.stats
+    assert d["mean_batch_occupancy"] == pytest.approx(
+        s["batch_occupancy"] / s["batches"])
+    assert d["mean_queue_wait_ms"] == pytest.approx(
+        1e3 * s["queue_wait_s"] / s["requests"])
+    assert d["mean_lanes_per_rpc"] == pytest.approx(
+        s["requests"] / s["rpcs"])
+    assert 0 < d["mean_batch_occupancy"] <= 1.0
+
+
+# ------------------------------------------------------- socket loopback
+
+def test_socket_loopback_roundtrip_and_recurrent_slots():
+    seen_slots = {}
+
+    def slot_recording_policy(obs, ids):
+        for row, slot in enumerate(np.asarray(ids)):
+            seen_slots.setdefault(int(slot), 0)
+            seen_slots[int(slot)] += 1
+        return det_policy(obs, ids)
+
+    srv = InferenceServer(slot_recording_policy, max_batch=8, deadline_ms=2.0)
+    gw = InferenceGateway(srv)
+    srv.start()
+    addr = gw.start()
+    tr = SocketTransport.connect(addr)
+    try:
+        obs = np.random.rand(4, 50).astype(np.float32)
+        for _ in range(3):
+            got = tr.submit_batch(11, obs).get(timeout=5.0)
+            assert np.array_equal(got, det_policy(obs, None))
+        # scalar (legacy) submit unwraps client-side
+        scalar = tr.submit(12, np.zeros(50, np.float32)).get(timeout=5.0)
+        assert np.ndim(scalar) == 0
+        # 4 lanes of actor 11 + 1 lane of actor 12 = 5 distinct slots, and
+        # lane slots are stable across repeated requests
+        assert srv.num_slots == 5
+        assert sorted(seen_slots) == [0, 1, 2, 3, 4]
+        assert all(c == 3 for s, c in seen_slots.items() if s < 4)
+    finally:
+        tr.close()
+        gw.stop()
+        srv.stop()
+
+
+def test_sync_socket_transport_roundtrip_and_timeout():
+    srv = InferenceServer(det_policy, max_batch=2, deadline_ms=1.0)
+    gw = InferenceGateway(srv)
+    srv.start()
+    addr = gw.start()
+    tr = SyncSocketTransport.connect(addr)
+    try:
+        obs = np.random.rand(2, 50).astype(np.float32)
+        reply = tr.submit_batch(0, obs)
+        assert np.array_equal(reply.get(timeout=5.0), det_policy(obs, None))
+        # a too-short timeout raises queue.Empty (the actor-loop contract)
+        # and a retry on the SAME reply object still succeeds
+        reply2 = tr.submit_batch(0, obs)
+        try:
+            got = reply2.get(timeout=1e-5)
+        except queue.Empty:
+            got = reply2.get(timeout=5.0)
+        assert np.array_equal(got, det_policy(obs, None))
+    finally:
+        tr.close()
+        gw.stop()
+        srv.stop()
+
+
+def test_transport_poisons_pending_on_gateway_loss():
+    block = threading.Event()
+
+    def blocking_policy(obs, ids):
+        block.wait(timeout=10.0)
+        return np.zeros((obs.shape[0],), np.int32)
+
+    srv = InferenceServer(blocking_policy, max_batch=1, deadline_ms=1.0)
+    gw = InferenceGateway(srv)
+    srv.start()
+    addr = gw.start()
+    tr = SocketTransport.connect(addr)
+    try:
+        reply = tr.submit_batch(0, np.zeros((1, 4), np.float32))
+        time.sleep(0.1)
+        gw.stop()                     # connection drops mid-request
+        out = reply.get(timeout=5.0)
+        assert isinstance(out, ReplyError), out
+        assert tr.error is not None
+        # subsequent submits fail fast, no new hang
+        out2 = tr.submit_batch(0, np.zeros((1, 4), np.float32)).get(
+            timeout=1.0)
+        assert isinstance(out2, ReplyError)
+    finally:
+        block.set()
+        tr.close()
+        srv.stop()
+
+
+# ------------------------------------------- parity + end-to-end system
+
+def _run_inproc_rollout(n_traj):
+    srv = InferenceServer(det_policy, max_batch=3, deadline_ms=2.0)
+    trajs = []
+    actor = Actor(0, CatchEnv, srv, lambda t: trajs.append(t),
+                  unroll=4, num_envs=3)
+    srv.start()
+    actor.start()
+    deadline = time.perf_counter() + 30.0
+    while len(trajs) < n_traj and time.perf_counter() < deadline:
+        time.sleep(0.01)
+    actor.stop()
+    srv.stop()
+    actor.join()
+    assert len(trajs) >= n_traj, "in-proc rollout produced too few unrolls"
+    return trajs[:n_traj]
+
+
+def _run_socket_rollout(n_traj):
+    srv = InferenceServer(det_policy, max_batch=3, deadline_ms=2.0)
+    trajs = []
+    gw = InferenceGateway(srv, sink=lambda t: trajs.append(t))
+    srv.start()
+    addr = gw.start()
+    pool = ActorHostPool(CatchEnv, num_actors=1, envs_per_actor=3, unroll=4)
+    stats = pool.run(addr, seconds=2.0)
+    gw.stop()
+    srv.stop()
+    assert stats[0]["error"] is None, stats[0]["error"]
+    assert len(trajs) >= n_traj, \
+        f"socket rollout produced {len(trajs)} < {n_traj} unrolls"
+    return trajs[:n_traj]
+
+
+def test_loopback_parity_socket_rollouts_bit_identical_to_inproc():
+    """THE transport contract: same seeds, same policy -> the per-lane
+    unroll stream that crosses the wire equals the in-proc one, bitwise."""
+    n = 6
+    a_trajs = _run_inproc_rollout(n)
+    b_trajs = _run_socket_rollout(n)
+    for i, (ta, tb) in enumerate(zip(a_trajs, b_trajs)):
+        assert sorted(ta) == sorted(tb)
+        for k in ta:
+            va, vb = np.asarray(ta[k]), np.asarray(tb[k])
+            assert va.dtype == vb.dtype, (i, k)
+            assert np.array_equal(va, vb), f"unroll {i} key {k} diverged"
+
+
+def test_seed_system_socket_transport_end_to_end():
+    """`SeedSystem(transport='socket')` on loopback: frames flow, replay is
+    fed over the wire, derived+raw inference stats are reported, and
+    throughput is within sanity range of the in-proc backend (the strict
+    0.5x acceptance sweep lives in fig4 --smoke; here we gate against
+    catastrophic regression on noisy CI boxes)."""
+    from repro.core.system import SeedSystem
+
+    def run_once(transport):
+        kwargs = dict(env_factory=CatchEnv, policy_step=det_policy,
+                      num_actors=2, unroll=8, envs_per_actor=4,
+                      deadline_ms=1.0, transport=transport)
+        if transport == "socket":
+            kwargs["num_actor_hosts"] = 1
+        sys_ = SeedSystem(**kwargs)
+        sys_.warmup()
+        stats = sys_.run(seconds=0.8, with_learner=False)
+        return sys_, stats
+
+    best_rel = 0.0
+    for attempt in range(3):
+        sys_in, stats_in = run_once("inproc")
+        sys_so, stats_so = run_once("socket")
+        assert stats_so["inference_error"] is None
+        assert stats_so["host_errors"] == []
+        assert stats_so["env_frames"] > 50, stats_so
+        assert stats_so["gateway_traj_frames"] > 0
+        assert len(sys_so.replay) > 0, "trajectories did not reach replay"
+        # raw counters AND derived means are both reported
+        for key in ("batch_occupancy_sum", "queue_wait_s_sum",
+                    "mean_batch_occupancy", "mean_queue_wait_ms",
+                    "mean_lanes_per_rpc", "inference_rpcs"):
+            assert key in stats_so, key
+        best_rel = max(best_rel, stats_so["env_frames_per_s"]
+                       / stats_in["env_frames_per_s"])
+        if best_rel >= 0.5:
+            break
+    assert best_rel >= 0.25, \
+        f"socket transport {best_rel:.2f}x in-proc: wire path regressed"

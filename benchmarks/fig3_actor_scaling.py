@@ -14,9 +14,15 @@ Four parts:
       device-resident (fused env+policy `lax.scan`, `repro.rollout`) at
       equal (num_actors, E) on a pure-JAX env — the paper's CPU/GPU-ratio
       endgame, where env stepping leaves the host entirely.
+  (e) SHARDED INFERENCE (measured + model): the same SEED system with the
+      central policy forward split across `num_replicas` data-parallel
+      workers (sticky actor->replica routing) — the GA3C single-predictor
+      bottleneck removed — plus the `with_sharded` model at paper scale
+      and an engine-sharded device point (`engine_shards`).
 
 `--smoke` shrinks every measured window so CI can exercise the full
-measured path in seconds.
+measured path in seconds; `--replicas N` sets the sharded sweep's widest
+point (CI runs `--smoke --replicas 2`).
 """
 
 import argparse
@@ -120,10 +126,76 @@ def model_backend_sweep(envs_per_actor=8, n_actors=40):
     ]
 
 
+def measured_replica_sweep(replica_counts=(1, 2), num_actors=4,
+                           envs_per_actor=2, seconds=1.0, unroll=8):
+    """Part (e), measured: equal (num_actors, E) with the inference plane
+    split across R data-parallel replicas. The policy forward is
+    LATENCY-bound (a GIL-releasing sleep — the host's view of a real
+    accelerator forward), so the single loop serializes forwards and
+    replicas overlap them: the GA3C single-predictor regime, measurable
+    even on a 2-core host because overlapping waits needs no extra
+    cores."""
+
+    def busy_policy(obs, ids):
+        time.sleep(0.005)                     # the "device forward"
+        flat = np.abs(obs.reshape(obs.shape[0], -1))
+        return (flat.sum(axis=1) * 997.0).astype(np.int64) \
+            % CatchEnv.num_actions
+
+    rows = []
+    for R in replica_counts:
+        sys_ = SeedSystem(env_factory=CatchEnv, policy_step=busy_policy,
+                          num_actors=num_actors, unroll=unroll,
+                          envs_per_actor=envs_per_actor, deadline_ms=1.0,
+                          num_replicas=R)
+        sys_.warmup()
+        stats = sys_.run(seconds=seconds, with_learner=False)
+        rows.append((R, stats["env_frames_per_s"],
+                     stats["mean_batch_occupancy"],
+                     stats.get("replica_lanes", [stats["inference_lanes"]])))
+    return rows
+
+
+def measured_engine_shard_sweep(shard_counts=(1, 2), num_actors=2,
+                                envs_per_actor=8, seconds=1.0, unroll=8):
+    """Part (e), measured, device path: the fused scan split across K
+    placed engines. On a CPU-only host the K scans serialize on the one
+    device, so this measures the sharding overhead floor; on a multi-GPU
+    host the same code overlaps them."""
+    import jax
+
+    def device_policy(params, core, obs, key):
+        return jax.random.randint(key, (obs.shape[0],), 0,
+                                  CatchEnv.num_actions), core
+
+    rows = []
+    for K in shard_counts:
+        sys_ = SeedSystem(env_factory=CatchEnv, backend="device",
+                          policy_apply=device_policy, num_actors=num_actors,
+                          unroll=unroll, envs_per_actor=envs_per_actor,
+                          engine_shards=K)
+        sys_.warmup()
+        stats = sys_.run(seconds=seconds, with_learner=False)
+        rows.append((K, stats["env_frames_per_s"]))
+    return rows
+
+
+def model_replica_sweep(replica_counts=(1, 2, 4, 8), n_actors=40):
+    """Part (e), model at paper scale: `with_sharded` — forward capacity
+    xN until per-replica batch fill starves (t_inf0 floor). E=1, so the
+    inference term is not already amortized away by lane vectorization."""
+    model, _ = fit_paper_actor_model()
+    base = float(model.throughput(n_actors))
+    return [(R, float(model.with_sharded(R).throughput(n_actors)) / base)
+            for R in replica_counts]
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
                     help="tiny measured windows (CI: exercise the path)")
+    ap.add_argument("--replicas", type=int, default=2,
+                    help="widest point of the sharded-inference sweep (e)")
     args = ap.parse_args()
     sec = 0.3 if args.smoke else 1.2
     actor_counts = (1, 2) if args.smoke else (1, 2, 4, 8)
@@ -169,6 +241,26 @@ def main():
     for name, t in m_rows:
         print(f"fig3d_model_{name},{t:.1f},frames_per_s_model "
               f"vs_per_step={t/m_base:.2f}x")
+    print("# fig3e: sharded inference — measured replica sweep (this host)")
+    replica_counts = tuple(sorted({1, max(args.replicas, 1)}))
+    r_rows = measured_replica_sweep(replica_counts=replica_counts,
+                                    seconds=sec)
+    r_base = r_rows[0][1]
+    for R, fps, occ, lanes in r_rows:
+        print(f"fig3e_replicas_{R},{fps:.1f},frames_per_s "
+              f"vs_single={fps/max(r_base, 1e-9):.2f}x occupancy={occ:.2f} "
+              f"replica_lanes={lanes}")
+    print("# fig3e: engine-sharded device scans (measured)")
+    k_rows = measured_engine_shard_sweep(shard_counts=replica_counts,
+                                         seconds=sec,
+                                         unroll=8 if args.smoke else 16)
+    k_base = k_rows[0][1]
+    for K, fps in k_rows:
+        print(f"fig3e_engine_shards_{K},{fps:.1f},frames_per_s "
+              f"vs_single={fps/max(k_base, 1e-9):.2f}x")
+    print("# fig3e: with_sharded model at paper scale (40 actors, E=1)")
+    for R, s in model_replica_sweep():
+        print(f"fig3e_model_replicas_{R},{s:.2f},throughput_vs_1_replica")
     # GPU power / perf-per-watt (paper's right axis): utilization-linear model
     from repro.hw import V100
     for n, s in sw:

@@ -16,6 +16,7 @@ import numpy as np
 
 from repro.core.provisioning import (SystemModel, cpu_gpu_ratio,
                                      cpu_gpu_ratio_breakdown,
+                                     fit_paper_actor_model,
                                      fit_paper_derating, provision)
 from repro.core.system import SeedSystem
 from repro.envs.catch import CatchEnv
@@ -29,9 +30,12 @@ def _policy_step(obs, ids):
 
 
 def measured_transport_sweep(num_actors=2, envs_per_actor=4, seconds=1.0,
-                             unroll=8, num_actor_hosts=2):
+                             unroll=8, num_actor_hosts=2, num_gateways=1):
     """The same (num_actors, E) SEED system on Catch, in-proc vs loopback
-    TCP: frames/s, per-actor cycle time, and the implied wire RTT."""
+    TCP: frames/s, per-actor cycle time, and the implied wire RTT. With
+    `num_gateways > 1` the socket run shards the accept loop: G gateways
+    (+ G inference replicas, one per gateway) with actor hosts hashed
+    across their addresses."""
     rows = []
     for transport in ("inproc", "socket"):
         kwargs = dict(env_factory=CatchEnv, policy_step=_policy_step,
@@ -40,6 +44,8 @@ def measured_transport_sweep(num_actors=2, envs_per_actor=4, seconds=1.0,
                       transport=transport)
         if transport == "socket":
             kwargs["num_actor_hosts"] = num_actor_hosts
+            kwargs["num_gateways"] = num_gateways
+            kwargs["num_replicas"] = num_gateways
         sys_ = SeedSystem(**kwargs)
         sys_.warmup()
         stats = sys_.run(seconds=seconds, with_learner=False)
@@ -102,9 +108,12 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
                     help="tiny measured windows (CI: exercise the wire path)")
+    ap.add_argument("--gateways", type=int, default=1,
+                    help="shard the socket run across G gateways (+ G "
+                         "inference replicas); hosts hash across addresses")
     args = ap.parse_args()
     sec = 0.5 if args.smoke else 1.5
-    hosts = 1 if args.smoke else 2
+    hosts = max(1 if args.smoke else 2, args.gateways)
 
     print("# fig4: slowdown vs compute fraction (40 CPU threads fixed)")
     print("name,value,derived")
@@ -131,18 +140,24 @@ def main():
               f"{k}x{DGX1_HOST.hw_threads}threads {verdict}")
 
     print("# measured: in-proc vs loopback-TCP transport (same system)")
-    n_act, E = 2, 4
+    n_act, E = max(2, hosts), 4
     t_rows = measured_transport_sweep(num_actors=n_act, envs_per_actor=E,
-                                      seconds=sec, num_actor_hosts=hosts)
+                                      seconds=sec, num_actor_hosts=hosts,
+                                      num_gateways=args.gateways)
     fps = {}
     for transport, stats in t_rows:
         fps[transport] = stats["env_frames_per_s"]
         err = stats["inference_error"] or \
             (stats.get("host_errors") or [None])[0]
+        shard = ""
+        if transport == "socket":
+            shard = (f" gateways={stats.get('num_gateways', 1)} "
+                     f"conns_per_gateway="
+                     f"{stats.get('per_gateway_connections')}")
         print(f"fig4_transport_{transport},{stats['env_frames_per_s']:.1f},"
               f"frames_per_s occupancy={stats['mean_batch_occupancy']:.2f} "
               f"queue_wait_ms={stats['mean_queue_wait_ms']:.2f} "
-              f"error={err}")
+              f"error={err}{shard}")
     if min(fps.values()) <= 0:
         # a failed run reports its error above; don't bury it under a
         # ZeroDivisionError traceback
@@ -160,6 +175,21 @@ def main():
         print(f"fig4_model_network,{model_net:.1f},frames_per_s "
               f"with_network({1e3*t_rtt:.2f}ms)_prediction "
               f"measured={fps['socket']:.1f} ordering_ok={ordered}")
+
+    print("# sharded inference plane: with_sharded at paper scale, and the")
+    print("# per-replica ratio decomposition (hosts hash to replicas)")
+    model, _ = fit_paper_actor_model()
+    m_net = model.with_network(0.2, n_hosts=4)
+    base = float(m_net.throughput(160))
+    for R in (1, 2, 4, 8):
+        t = float(m_net.with_sharded(R).throughput(160))
+        print(f"fig4_model_sharded_{R},{t/base:.3f},"
+              f"throughput_vs_1_replica_at_4hosts_160actors")
+    b = cpu_gpu_ratio_breakdown([DGX1_HOST] * 3, V100, 8, n_replicas=2)
+    for r, threads, ratio in b.per_replica:
+        print(f"fig4_ratio_replica_{r},{ratio:.4f},"
+              f"threads={threads:.0f} over_sm_slice "
+              f"(3 hosts hashed across 2 replicas -> imbalance visible)")
 
     print("# provisioning: host threads needed per workload (v5e-8 host)")
     for name, flops_frame in (("r2d2_atari_2M", 2e6),

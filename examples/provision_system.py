@@ -46,6 +46,22 @@ def main():
         print(f"   {hosts:2d} actor hosts x 40 threads: ratio {b.total:.3f}, "
               f"{t:10.1f} frames/s at {40 * hosts} actors")
 
+    print("\n== sharding the inference plane (SeedSystem num_replicas /")
+    print("   num_gateways; model point: with_sharded, E=1 to isolate it)")
+    m_net = model.with_network(0.2, n_hosts=4)
+    base = float(m_net.throughput(160))
+    for R in (1, 2, 4, 8):
+        t = float(m_net.with_sharded(R).throughput(160))
+        print(f"   {R} replica(s): {t:10.1f} frames/s "
+              f"({t / base:.2f}x) — batch-linear latency / {R}, "
+              f"t_inf0 floor remains")
+    b = cpu_gpu_ratio_breakdown([DGX1_HOST] * 3, V100, 8, n_replicas=2)
+    print("   per-replica ratio, 3 hosts hashed across 2 replicas "
+          "(imbalance is visible, not averaged away):")
+    for r, threads, ratio in b.per_replica:
+        print(f"     replica {r}: {threads:.0f} threads over a 1/2 "
+              f"accelerator slice -> ratio {ratio:.3f}")
+
     print("\n== accelerator derating (Fig 4), swept along E like Fig 3")
     der = fit_paper_derating()
     for sm in (80, 40, 8, 2):

@@ -75,6 +75,41 @@ def vector_actor_demo(env_counts=(1, 8), seconds=0.6):
           f"{stats['gateway_traj_frames']} unrolls over the wire)")
 
 
+def sharded_inference_demo(E=8, seconds=0.8):
+    """Sharding the inference plane: the same disaggregated system with
+    `num_replicas` data-parallel policy workers (sticky actor->replica
+    routing keeps each lane's recurrent slot on one replica),
+    `num_gateways` accept loops (actor hosts hash across their
+    addresses), and trajectory frames from every gateway feeding the one
+    learner sink. `num_replicas=1, num_gateways=1` is bit-for-bit the
+    unsharded path; the model point for this knob is
+    `SystemModel.with_sharded` (see examples/provision_system.py)."""
+    sys_ = SeedSystem(env_factory=CatchEnv, policy_step=_quickstart_policy,
+                      num_actors=2, unroll=8, envs_per_actor=E,
+                      deadline_ms=1.0, transport="socket",
+                      num_actor_hosts=2, num_gateways=2, num_replicas=2)
+    stats = sys_.run(seconds=seconds, with_learner=False)
+    print(f"  E={E} sharded ({stats['num_replicas']} replicas x "
+          f"{stats['num_gateways']} gateways): "
+          f"{stats['env_frames_per_s']:8.0f} env-frames/s "
+          f"(conns/gateway={stats['per_gateway_connections']}, "
+          f"lanes/replica={stats['replica_lanes']})")
+
+    # the device path shards the other way: engine_shards=K places K fused
+    # scan engines round-robin over jax.devices() (one carry per device)
+    def policy_apply(params, core, obs, key):
+        return jax.random.randint(key, (obs.shape[0],), 0, 3), core
+
+    sys_ = SeedSystem(env_factory=CatchEnv, backend="device",
+                      policy_apply=policy_apply, num_actors=2, unroll=8,
+                      envs_per_actor=E, engine_shards=2)
+    sys_.warmup()
+    stats = sys_.run(seconds=seconds, with_learner=False)
+    print(f"  E={E} engine-sharded device (K={stats['engine_shards']}): "
+          f"{stats['env_frames_per_s']:8.0f} env-frames/s "
+          f"({stats['scans']} sharded scans)")
+
+
 def main():
     arch = sys.argv[1] if len(sys.argv) > 1 else "qwen3-14b"
     cfg = smoke_config(arch)
@@ -108,6 +143,8 @@ def main():
 
     print("== vectorized SEED actors (JaxVectorEnv over Catch)")
     vector_actor_demo()
+    print("== sharded inference plane (replicas x gateways, engine shards)")
+    sharded_inference_demo()
     print("ok")
 
 

@@ -104,7 +104,11 @@ class Actor:
                         break
                     continue
                 if isinstance(result, ReplyError):
-                    self.error = result.message
+                    # a poison that lands AFTER our own stop() is just the
+                    # server draining our in-flight request during normal
+                    # shutdown — not an error worth surfacing
+                    if not self._stop.is_set():
+                        self.error = result.message
                     break
                 actions = np.asarray(result)                      # (E,)
                 break

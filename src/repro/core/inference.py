@@ -1,11 +1,11 @@
-"""Central inference server — SEED RL's core mechanism.
+"""Central inference server — SEED RL's core mechanism, now data-parallel.
 
 Actors do NOT run the policy network locally (IMPALA-style); they send
 observations to this server, which batches them and runs one jitted
 forward step on the accelerator, returning actions. Three SEED details are
 first-class here:
 
-  * **batching deadline** (straggler mitigation): the server closes a batch
+  * **batching deadline** (straggler mitigation): a replica closes a batch
     when it is full OR when `deadline_ms` elapses, so one slow actor cannot
     stall the pipeline — the learner's analogue of the paper's observation
     that slow environment interaction starves the accelerator;
@@ -17,11 +17,23 @@ first-class here:
     stays on the server, keyed by `(actor_id, env_id)` slots, so actors
     exchange only (obs -> action) and lanes keep distinct recurrent state.
 
+**Lane sharding** (`num_replicas > 1`): GA3C showed the single predictor
+queue is the first structure to saturate; past that point the server runs
+N data-parallel replica workers, each with its own request queue, batch
+loop, and shard of the `max_batch` lane budget. Requests are routed by a
+STABLE actor-id hash (`replica_for`), so every lane's `(actor_id, env_id)`
+recurrent slot only ever appears on one replica — core state never
+migrates. Slot ids stay globally dense (one shared table) so a single
+`policy_step` state array serves all replicas; replicas touch disjoint
+slot rows and may call `policy_step` concurrently. `num_replicas=1` is
+bit-for-bit the historical single-loop server.
+
 The queue API below (`submit_batch` -> reply `get`) is the transport seam.
 `repro.transport` implements it twice: `InProcTransport` (the in-process
 default, identical to handing actors this server directly) and
 `SocketTransport`/`InferenceGateway` (a wire-level TCP transport so actors
-can live on remote CPU hosts — the paper's disaggregated provisioning).
+can live on remote CPU hosts — the paper's disaggregated provisioning; one
+gateway per replica composes with the sharding here).
 Replies are either an action array or a poison `ReplyError`: when the
 server dies or stops, every pending request is drained with one so no
 actor ever blocks forever on a reply that cannot come (fail-fast).
@@ -58,53 +70,202 @@ class InferenceRequest:
         return self.obs.shape[0]
 
 
+def _fresh_stats() -> dict:
+    # "requests" counts LANES (the supply quantity the paper sweeps);
+    # "rpcs" counts request messages (the transport quantity).
+    return {"batches": 0, "requests": 0, "rpcs": 0,
+            "batch_occupancy": 0.0, "queue_wait_s": 0.0, "compute_s": 0.0}
+
+
+def _derive_stats(s: dict) -> dict:
+    """Normalized views of the accumulated counters, so callers don't each
+    need to know which raw sum divides by which count: occupancy as a
+    fraction of the lane budget, queue wait per lane, and the batching
+    ratios (lanes per forward / per RPC)."""
+    return {
+        "mean_batch_occupancy": s["batch_occupancy"] / max(s["batches"], 1),
+        "mean_queue_wait_ms": 1e3 * s["queue_wait_s"] / max(s["requests"], 1),
+        "mean_lanes_per_batch": s["requests"] / max(s["batches"], 1),
+        "mean_lanes_per_rpc": s["requests"] / max(s["rpcs"], 1),
+    }
+
+
+class _Replica:
+    """One data-parallel inference worker: its own request queue, batch
+    loop thread, stats shard, and `lane_budget` share of the server's
+    `max_batch`. Routing (`InferenceServer.replica_for`) guarantees a
+    given actor's lanes only ever land here, so the slot rows this replica
+    passes to `policy_step` are disjoint from every other replica's."""
+
+    def __init__(self, server: "InferenceServer", replica_id: int,
+                 lane_budget: int):
+        self.server = server
+        self.replica_id = replica_id
+        self.lane_budget = lane_budget
+        self.requests: "queue.Queue[InferenceRequest]" = queue.Queue()
+        self.stats = _fresh_stats()
+        self._thread: Optional[threading.Thread] = None
+
+    def start(self):
+        self._thread = threading.Thread(
+            target=self._loop, daemon=True,
+            name=f"inference-replica-{self.replica_id}")
+        self._thread.start()
+
+    def join(self, timeout: float = 5.0):
+        if self._thread:
+            self._thread.join(timeout=timeout)
+
+    def _loop(self):
+        # record a fatal policy_step/shape error instead of dying silently:
+        # actors wait on replies indefinitely, so a silent death here would
+        # stall the whole system with no trace (same class as Learner.error)
+        try:
+            self._serve()
+        except Exception:
+            self.server._fatal(traceback.format_exc())
+
+    def _serve(self):
+        srv = self.server
+        while not srv._stop.is_set():
+            batch = self._collect()
+            if not batch:
+                continue
+            t0 = time.perf_counter()
+            try:
+                obs = np.concatenate([r.obs for r in batch])  # (N_lanes, ...)
+                ids = np.concatenate(
+                    [srv.slot_ids(r.actor_id, r.lanes) for r in batch])
+                actions = np.asarray(srv.policy_step(obs, ids))
+            except Exception:
+                # poison the IN-FLIGHT batch too, not just the queues: these
+                # requests were already popped by _collect, and for wire
+                # transports the poison is the only signal the remote actor
+                # will ever receive (it cannot read this server's .error)
+                err = traceback.format_exc()
+                for r in batch:
+                    r.reply.put(ReplyError(err))
+                srv._fatal(err)
+                return
+            dt = time.perf_counter() - t0
+            lanes = 0
+            for r in batch:
+                a = actions[lanes:lanes + r.lanes]
+                lanes += r.lanes
+                r.reply.put(a[0] if r.scalar else a)
+                self.stats["queue_wait_s"] += (t0 - r.t_enqueue) * r.lanes
+            self.stats["compute_s"] += dt
+            self.stats["batches"] += 1
+            self.stats["requests"] += lanes
+            self.stats["rpcs"] += len(batch)
+            self.stats["batch_occupancy"] += min(lanes / self.lane_budget, 1.0)
+
+    def _collect(self):
+        """Fill a batch until `lane_budget` LANES or the deadline —
+        straggler cut. One request's lanes are never split across forwards
+        (or replicas)."""
+        batch = []
+        try:
+            batch.append(self.requests.get(timeout=0.05))
+        except queue.Empty:
+            return batch
+        lanes = batch[0].lanes
+        deadline = time.perf_counter() + self.server.deadline_ms / 1e3
+        while lanes < self.lane_budget:
+            remaining = deadline - time.perf_counter()
+            if remaining <= 0:
+                break
+            try:
+                r = self.requests.get(timeout=remaining)
+            except queue.Empty:
+                break
+            batch.append(r)
+            lanes += r.lanes
+        return batch
+
+
 class InferenceServer:
     """policy_step: (stacked_obs (N, ...), slot_ids (N,)) -> actions (N,).
 
-    N is the total number of *lanes* flattened across the batched requests.
-    `slot_ids` are dense ints assigned per (actor_id, env_id) on first
-    sight; the callable owns all device state (params, per-slot recurrent
-    state) and indexes it with them.
+    N is the total number of *lanes* flattened across the batched requests
+    of ONE replica's forward. `slot_ids` are dense ints assigned per
+    (actor_id, env_id) on first sight, globally unique across replicas;
+    the callable owns all device state (params, per-slot recurrent state)
+    and indexes it with them. With `num_replicas > 1` the callable may be
+    invoked concurrently from several replica threads, always on disjoint
+    slot sets (routing is sticky per actor).
     """
 
     def __init__(self, policy_step: Callable, max_batch: int,
-                 deadline_ms: float = 10.0):
+                 deadline_ms: float = 10.0, num_replicas: int = 1):
+        if not isinstance(num_replicas, int) or num_replicas < 1:
+            raise ValueError(
+                f"num_replicas must be a positive int, got {num_replicas!r}")
+        if num_replicas > max_batch:
+            raise ValueError(
+                f"num_replicas={num_replicas} exceeds the max_batch="
+                f"{max_batch} lane budget: each replica needs at least one "
+                f"lane of batch budget (lower num_replicas or raise "
+                f"inference_batch)")
         self.policy_step = policy_step
-        self.max_batch = max_batch           # lane budget per forward
+        self.max_batch = max_batch           # TOTAL lane budget per round
         self.deadline_ms = deadline_ms
-        self.requests: "queue.Queue[InferenceRequest]" = queue.Queue()
+        self.num_replicas = num_replicas
+        # each replica serves a shard of the lane budget; ceil so the
+        # shards cover max_batch and N=1 keeps the budget bit-identical
+        budget = -(-max_batch // num_replicas)
+        self._replicas = [_Replica(self, k, budget)
+                          for k in range(num_replicas)]
         self._stop = threading.Event()
-        self._thread: Optional[threading.Thread] = None
         self._slots: Dict[Tuple[int, int], int] = {}   # (actor, lane) -> slot
         self._slot_cache: Dict[Tuple[int, int], np.ndarray] = {}
         self._slot_lock = threading.Lock()
-        # "requests" counts LANES (the supply quantity the paper sweeps);
-        # "rpcs" counts request messages (the transport quantity).
-        self.stats = {"batches": 0, "requests": 0, "rpcs": 0,
-                      "batch_occupancy": 0.0, "queue_wait_s": 0.0,
-                      "compute_s": 0.0}
         self.error: Optional[str] = None     # traceback of a fatal loop error
 
+    # ------------------------------------------------------------- routing
+
+    def replica_for(self, actor_id: int) -> int:
+        """STABLE actor -> replica hash: the whole point of sharding the
+        dense slot table is that a lane's recurrent state never migrates,
+        so this must be a pure function of actor_id (not load, not time).
+        Plain modulo also spreads the contiguous actor-id blocks that
+        `ActorHostPool` assigns per host across all replicas."""
+        return actor_id % self.num_replicas
+
+    # ------------------------------------------------------------ lifecycle
+
     def start(self):
-        self._thread = threading.Thread(target=self._loop, daemon=True)
-        self._thread.start()
+        for rep in self._replicas:
+            rep.start()
 
     def stop(self):
         self._stop.set()
-        if self._thread:
-            self._thread.join(timeout=5.0)
+        for rep in self._replicas:
+            rep.join(timeout=5.0)
         self._drain_pending(self.error or "inference server stopped")
 
+    def _fatal(self, err: str):
+        """A replica died: record the first traceback, stop EVERY replica
+        (a half-sharded server would silently serve a fraction of lanes),
+        and poison all queues."""
+        if self.error is None:
+            self.error = err
+        self._stop.set()
+        self._drain_pending(self.error)
+
     def _drain_pending(self, message: str):
-        """Fail-fast: poison every queued request so blocked actors wake up
-        with a `ReplyError` instead of hanging on a reply that will never
-        be produced."""
-        while True:
-            try:
-                r = self.requests.get_nowait()
-            except queue.Empty:
-                return
-            r.reply.put(ReplyError(message))
+        """Fail-fast: poison every queued request on every replica so
+        blocked actors wake up with a `ReplyError` instead of hanging on a
+        reply that will never be produced."""
+        for rep in self._replicas:
+            while True:
+                try:
+                    r = rep.requests.get_nowait()
+                except queue.Empty:
+                    break
+                r.reply.put(ReplyError(message))
+
+    # -------------------------------------------------------------- submit
 
     def submit_request(self, r: InferenceRequest):
         """Transport-facing entry: enqueue a request whose `reply` is any
@@ -114,7 +275,7 @@ class InferenceServer:
         if self._stop.is_set():
             r.reply.put(ReplyError(self.error or "inference server stopped"))
             return r.reply
-        self.requests.put(r)
+        self._replicas[self.replica_for(r.actor_id)].requests.put(r)
         if self._stop.is_set():
             # stop()/death may have drained between the check above and our
             # put — drain again so this request cannot strand unanswered
@@ -133,9 +294,14 @@ class InferenceServer:
         return self.submit_request(InferenceRequest(
             actor_id, np.asarray(obs), queue.Queue(maxsize=1)))
 
+    # --------------------------------------------------------------- slots
+
     def slot_ids(self, actor_id: int, lanes: int) -> np.ndarray:
         """Dense per-(actor, lane) slots — recurrent-state indices. The
-        mapping is immutable once assigned, so steady state is one dict hit."""
+        mapping is immutable once assigned, so steady state is one dict
+        hit. Globally dense across replicas: one policy-side state table
+        serves all of them, and sticky routing keeps each row on exactly
+        one replica."""
         cached = self._slot_cache.get((actor_id, lanes))
         if cached is not None:
             return cached
@@ -153,83 +319,27 @@ class InferenceServer:
     def num_slots(self) -> int:
         return len(self._slots)
 
+    # --------------------------------------------------------------- stats
+
+    @property
+    def stats(self) -> dict:
+        """Aggregated raw counters, summed across replicas (the historical
+        single-loop shape; with num_replicas=1 it IS replica 0's dict)."""
+        out = _fresh_stats()
+        for rep in self._replicas:
+            for k, v in rep.stats.items():
+                out[k] += v
+        return out
+
     def derived_stats(self) -> dict:
-        """Normalized views of the accumulated counters, so callers don't
-        each need to know which raw sum divides by which count:
-        occupancy as a fraction of the lane budget, queue wait per lane,
-        and the batching ratios (lanes per forward / per RPC)."""
-        s = self.stats
-        return {
-            "mean_batch_occupancy": s["batch_occupancy"] / max(s["batches"], 1),
-            "mean_queue_wait_ms": 1e3 * s["queue_wait_s"] / max(s["requests"], 1),
-            "mean_lanes_per_batch": s["requests"] / max(s["batches"], 1),
-            "mean_lanes_per_rpc": s["requests"] / max(s["rpcs"], 1),
-        }
+        """Aggregate derived means (see `_derive_stats`); the per-replica
+        decomposition is `per_replica_stats()`."""
+        return _derive_stats(self.stats)
 
-    def _loop(self):
-        # record a fatal policy_step/shape error instead of dying silently:
-        # actors wait on replies indefinitely, so a silent death here would
-        # stall the whole system with no trace (same class as Learner.error)
-        try:
-            self._serve()
-        except Exception:
-            self.error = traceback.format_exc()
-            self._stop.set()
-            self._drain_pending(self.error)
-
-    def _serve(self):
-        while not self._stop.is_set():
-            batch = self._collect()
-            if not batch:
-                continue
-            t0 = time.perf_counter()
-            try:
-                obs = np.concatenate([r.obs for r in batch])  # (N_lanes, ...)
-                ids = np.concatenate(
-                    [self.slot_ids(r.actor_id, r.lanes) for r in batch])
-                actions = np.asarray(self.policy_step(obs, ids))
-            except Exception:
-                # poison the IN-FLIGHT batch too, not just the queue: these
-                # requests were already popped by _collect, and for wire
-                # transports the poison is the only signal the remote actor
-                # will ever receive (it cannot read this server's .error)
-                self.error = traceback.format_exc()
-                self._stop.set()
-                for r in batch:
-                    r.reply.put(ReplyError(self.error))
-                self._drain_pending(self.error)
-                return
-            dt = time.perf_counter() - t0
-            lanes = 0
-            for r in batch:
-                a = actions[lanes:lanes + r.lanes]
-                lanes += r.lanes
-                r.reply.put(a[0] if r.scalar else a)
-                self.stats["queue_wait_s"] += (t0 - r.t_enqueue) * r.lanes
-            self.stats["compute_s"] += dt
-            self.stats["batches"] += 1
-            self.stats["requests"] += lanes
-            self.stats["rpcs"] += len(batch)
-            self.stats["batch_occupancy"] += min(lanes / self.max_batch, 1.0)
-
-    def _collect(self):
-        """Fill a batch until `max_batch` LANES or the deadline — straggler
-        cut. One request's lanes are never split across forwards."""
-        batch = []
-        try:
-            batch.append(self.requests.get(timeout=0.05))
-        except queue.Empty:
-            return batch
-        lanes = batch[0].lanes
-        deadline = time.perf_counter() + self.deadline_ms / 1e3
-        while lanes < self.max_batch:
-            remaining = deadline - time.perf_counter()
-            if remaining <= 0:
-                break
-            try:
-                r = self.requests.get(timeout=remaining)
-            except queue.Empty:
-                break
-            batch.append(r)
-            lanes += r.lanes
-        return batch
+    def per_replica_stats(self) -> list:
+        """Raw + derived stats per replica — the sharded decomposition
+        `SeedSystem.throughput()` reports, so batch-fill starvation on one
+        replica (occupancy collapsing as N grows) is visible per shard."""
+        return [dict(rep.stats, replica=rep.replica_id,
+                     lane_budget=rep.lane_budget, **_derive_stats(rep.stats))
+                for rep in self._replicas]

@@ -50,6 +50,7 @@ class SystemModel:
     t_dev1: float = 0.0   # device: per-lane compute per scan step
     t_net: float = 0.0    # network: wire RTT added per inference round-trip
     n_actor_hosts: int = 1    # network: CPU hosts supplying actor threads
+    n_replicas: int = 1   # data-parallel inference replicas (lane sharding)
 
     def throughput(self, n_actors):
         """Env frames/s at n actor threads, each stepping E lanes.
@@ -74,6 +75,15 @@ class SystemModel:
         That asymmetry IS the design tradeoff the paper's ratio metric
         prices: the wire costs only where latency already dominates, and
         buys a ceiling no single host has.
+
+        Sharded inference (`with_sharded`, host/network backends): N
+        data-parallel replicas each forward 1/N of the flattened lanes —
+        per-replica batch min(n*E, cap)/N, exactly the runtime's
+        `max_batch // num_replicas` budget split — so the batch-linear
+        latency term divides by N: forward capacity xN. The fixed cost
+        t_inf0 does NOT divide (each replica still pays the round-trip
+        floor), so gains taper once per-replica batches starve: as
+        n*E/N shrinks, t_inf -> t_inf0 and extra replicas buy nothing.
         """
         n = np.asarray(n_actors, np.float64)
         E = float(self.envs_per_actor)
@@ -86,7 +96,8 @@ class SystemModel:
             t_step = self.t_dev0 + self.t_dev1 * lanes
             return lanes / t_step
         t_inf = (self.t_inf0 + self.t_net
-                 + self.t_inf1 * np.minimum(n * E, self.batch_cap))
+                 + self.t_inf1 * np.minimum(n * E, self.batch_cap)
+                 / self.n_replicas)
         latency_limited = n * E / (self.t_env * E + t_inf)
         capacity = self.hw_threads * self.n_actor_hosts / self.t_env
         return np.minimum(latency_limited, capacity)
@@ -126,6 +137,33 @@ class SystemModel:
             raise ValueError(f"n_hosts must be >= 1, got {n_hosts}")
         return replace(self, backend="network", t_net=float(t_rtt),
                        n_actor_hosts=int(n_hosts))
+
+    def with_sharded(self, n_replicas: int) -> "SystemModel":
+        """The sharded-inference operating point (`num_replicas` in
+        `SeedSystem` / `InferenceServer`): N data-parallel policy workers,
+        each forwarding a 1/N shard of the lane batch, behind sticky
+        actor->replica routing. Composes with `with_network` (one gateway
+        per replica) — forward capacity xN until per-replica batch fill
+        starves (see `throughput`). Same validation rule as the runtime
+        server: each replica needs at least one lane of batch budget.
+        """
+        if not isinstance(n_replicas, int) or n_replicas < 1:
+            raise ValueError(
+                f"n_replicas must be a positive int, got {n_replicas!r}")
+        if n_replicas > self.batch_cap:
+            raise ValueError(
+                f"n_replicas={n_replicas} exceeds batch_cap="
+                f"{self.batch_cap}: each replica needs at least one lane "
+                f"of batch budget")
+        if self.backend == "device":
+            # mirrors the runtime: SeedSystem(backend='device',
+            # num_replicas=N) raises too — the device path has no central
+            # inference term for replicas to divide (its sharding knob is
+            # engine_shards, which scales 1/t_dev1 with devices instead)
+            raise ValueError(
+                "with_sharded applies to the host/network backends; the "
+                "device operating point has no central inference replicas")
+        return replace(self, n_replicas=n_replicas)
 
 
 def fit_paper_actor_model(hw_threads=40, target_5p8=5.8, target_2p0=2.0):
@@ -187,27 +225,50 @@ def cpu_gpu_ratio(host: HostSpec, chip: ChipSpec, n_chips: int = 1):
 
 @dataclass(frozen=True)
 class RatioBreakdown:
-    """Disaggregated CPU/GPU ratio: which host contributes how much."""
+    """Disaggregated CPU/GPU ratio: which host contributes how much, and —
+    once the inference plane is sharded — how the supply divides across
+    the data-parallel replicas each host's gateway feeds."""
     total: float                       # sum of per-host contributions
     sm_equivalents: float
     per_host: tuple                    # ((name, hw_threads, contribution), ..)
+    per_replica: tuple = ()            # ((replica, hw_threads, ratio), ..)
 
 
-def cpu_gpu_ratio_breakdown(hosts, chip: ChipSpec,
-                            n_chips: int = 1) -> RatioBreakdown:
+def cpu_gpu_ratio_breakdown(hosts, chip: ChipSpec, n_chips: int = 1,
+                            n_replicas: int = 1) -> RatioBreakdown:
     """The ratio metric once actors are disaggregated (`repro.transport`):
     the learner's accelerators are served by SEVERAL CPU hosts over the
     wire, so threads are additive across hosts and the metric decomposes
     per host. `hosts` is a sequence of `HostSpec` (repeat an entry for
     identical hosts). With one host this reduces to `cpu_gpu_ratio`.
+
+    With `n_replicas > 1` (sharded inference, one gateway per replica) the
+    breakdown ALSO decomposes per replica: hosts hash to replicas with the
+    same stable ``host % n_replicas`` map the runtime uses
+    (`ActorHostPool`), each replica owns a 1/N slice of the accelerator,
+    and its ratio is the threads it is actually fed over that slice — so
+    an uneven host count shows up as replica-level imbalance (one shard
+    starved, another over-provisioned) instead of vanishing into the
+    aggregate.
     """
     hosts = list(hosts)
     if not hosts:
         raise ValueError("need at least one actor host")
+    if n_replicas < 1:
+        raise ValueError(f"n_replicas must be >= 1, got {n_replicas}")
     sm_eq = sm_equivalents(chip) * n_chips
     per = tuple((h.name, h.hw_threads, h.hw_threads / sm_eq) for h in hosts)
+    per_replica = ()
+    if n_replicas > 1:
+        threads_r = [0.0] * n_replicas
+        for h_id, h in enumerate(hosts):
+            threads_r[h_id % n_replicas] += h.hw_threads
+        sm_slice = sm_eq / n_replicas
+        per_replica = tuple((r, t, t / sm_slice)
+                            for r, t in enumerate(threads_r))
     return RatioBreakdown(total=sum(c for _, _, c in per),
-                          sm_equivalents=sm_eq, per_host=per)
+                          sm_equivalents=sm_eq, per_host=per,
+                          per_replica=per_replica)
 
 
 @dataclass(frozen=True)

@@ -24,6 +24,18 @@ The host backend additionally picks a transport (`repro.transport`):
     `InferenceGateway` in front of the same `InferenceServer`; trajectory
     unrolls return over the wire into the same replay sink. Requires a
     picklable `env_factory` (class or module-level factory, not a lambda).
+
+Sharding the inference plane (all three knobs default to 1 = the
+historical single-path behavior, bit-for-bit):
+  * `num_replicas=N`: the `InferenceServer` runs N data-parallel policy
+    workers over shards of the lane batch, with sticky actor->replica
+    routing so recurrent slots never migrate (see `core.inference`);
+  * `num_gateways=G` (socket transport): G `InferenceGateway`s — one
+    accept loop + reply path per shard — with actor hosts hashed across
+    their addresses (`launch.actor_host`); pair with `num_replicas=G` for
+    one wire per policy worker;
+  * `engine_shards=K` (device backend): each worker drives a
+    `ShardedRolloutEngine` of K device-placed scan engines instead of one.
 """
 
 import threading
@@ -49,6 +61,8 @@ class SeedSystem:
                  inference_batch: Optional[int] = None,
                  transport: str = "inproc", num_actor_hosts: int = 1,
                  gateway_host: str = "127.0.0.1", gateway_port: int = 0,
+                 num_replicas: int = 1, num_gateways: int = 1,
+                 engine_shards: int = 1, wire_compression: bool = False,
                  checkpoint_manager=None, checkpoint_every: int = 0):
         if backend not in ("host", "device"):
             raise ValueError(f"unknown backend {backend!r}; use 'host' or 'device'")
@@ -58,32 +72,67 @@ class SeedSystem:
         if transport == "socket" and backend != "host":
             raise ValueError("transport='socket' applies to backend='host' "
                              "(the device backend has no inference wire)")
+        if not isinstance(num_gateways, int) or num_gateways < 1:
+            raise ValueError(
+                f"num_gateways must be a positive int, got {num_gateways!r}")
+        if num_gateways > 1 and transport != "socket":
+            raise ValueError(
+                f"num_gateways={num_gateways} applies to transport='socket' "
+                f"(the in-process path has no gateways to shard)")
+        if num_gateways > num_actor_hosts and transport == "socket":
+            raise ValueError(
+                f"num_gateways={num_gateways} exceeds num_actor_hosts="
+                f"{num_actor_hosts}: hosts hash across gateways, so extra "
+                f"gateways would sit idle — raise num_actor_hosts or lower "
+                f"num_gateways")
+        if num_gateways > 1 and gateway_port != 0:
+            raise ValueError(
+                f"num_gateways={num_gateways} requires gateway_port=0 "
+                f"(ephemeral): a fixed port cannot be bound by more than "
+                f"one gateway")
+        if engine_shards != 1 and backend != "device":
+            raise ValueError(
+                f"engine_shards={engine_shards} applies to backend='device' "
+                f"(the host backend has no scan engines to shard)")
+        if num_replicas != 1 and backend != "host":
+            raise ValueError(
+                f"num_replicas={num_replicas} applies to backend='host' "
+                f"(the device backend has no central inference server)")
+        if wire_compression and transport != "socket":
+            raise ValueError(
+                "wire_compression applies to transport='socket' (there is "
+                "no wire to compress in-process)")
         self.backend = backend
         self.transport = transport
         self.envs_per_actor = envs_per_actor
+        self.engine_shards = engine_shards
         self.replay = PrioritizedReplay(replay_capacity)
         self.min_replay = min_replay
         self.learner_batch = learner_batch
         self.server = None
         self.gateway = None
+        self.gateways = []
         self.pool = None
         if backend == "host":
             if policy_step is None:
                 raise ValueError("backend='host' requires policy_step")
+            # raises ValueError when num_replicas exceeds the lane budget
             self.server = InferenceServer(
                 policy_step,
                 max_batch=inference_batch or max(num_actors * envs_per_actor, 1),
-                deadline_ms=deadline_ms)
+                deadline_ms=deadline_ms, num_replicas=num_replicas)
             if transport == "socket":
                 from repro.launch.actor_host import ActorHostPool
                 from repro.transport.socket import InferenceGateway
-                self.gateway = InferenceGateway(
-                    self.server, sink=self._sink,
-                    host=gateway_host, port=gateway_port)
+                self.gateways = [
+                    InferenceGateway(self.server, sink=self._sink,
+                                     host=gateway_host, port=gateway_port)
+                    for _ in range(num_gateways)]
+                self.gateway = self.gateways[0]    # back-compat handle
                 self.pool = ActorHostPool(
                     env_factory, num_actors=num_actors,
                     envs_per_actor=envs_per_actor, unroll=unroll,
-                    num_hosts=num_actor_hosts)
+                    num_hosts=num_actor_hosts, compress=wire_compression)
                 self.actors = []
             else:
                 self.actors = [Actor(i, env_factory, self.server, self._sink,
@@ -92,7 +141,8 @@ class SeedSystem:
         else:
             if policy_apply is None:
                 raise ValueError("backend='device' requires policy_apply")
-            from repro.rollout import DeviceRolloutEngine, RolloutWorker
+            from repro.rollout import (DeviceRolloutEngine,
+                                       RolloutWorker, ShardedRolloutEngine)
             if init_params is None and isinstance(state, dict):
                 # workers must start from the learner's params, not None —
                 # and from the same pytree structure the first publish will
@@ -100,13 +150,21 @@ class SeedSystem:
                 init_params = state.get("params")
             self._live = {"params": init_params, "version": 0}
             self._live_lock = threading.Lock()
+
+            def make_engine(i):
+                if engine_shards == 1:
+                    return DeviceRolloutEngine(env_factory, policy_apply,
+                                               envs_per_actor, unroll,
+                                               init_core=init_core, seed=i)
+                # raises ValueError when shards exceed lanes / no devices
+                return ShardedRolloutEngine(env_factory, policy_apply,
+                                            envs_per_actor, unroll,
+                                            num_shards=engine_shards,
+                                            init_core=init_core, seed=i)
+
             self.actors = [
-                RolloutWorker(
-                    i,
-                    DeviceRolloutEngine(env_factory, policy_apply,
-                                        envs_per_actor, unroll,
-                                        init_core=init_core, seed=i),
-                    self._sink, self._param_source)
+                RolloutWorker(i, make_engine(i), self._sink,
+                              self._param_source)
                 for i in range(num_actors)]
         self.learner = None
         if train_step is not None:
@@ -173,24 +231,33 @@ class SeedSystem:
         return self.throughput(elapsed)
 
     def _run_socket(self, seconds: float, with_learner: bool):
-        """Disaggregated run: gateway + server here, actors in K spawned
-        host processes. `elapsed` is the actor hosts' own measured window
-        (spawn + jit warmup excluded), so frames/s is comparable with the
-        in-proc backend's steady-state window."""
-        self.server.start()
-        address = self.gateway.start()
+        """Disaggregated run: G gateways + server here, actors in K
+        spawned host processes hashed across the gateway addresses.
+        `elapsed` is the actor hosts' own measured window (spawn + jit
+        warmup excluded), so frames/s is comparable with the in-proc
+        backend's steady-state window."""
         try:
+            # inside the try: a bind failure here must still unwind the
+            # already-started server/gateways (stop() on a never-started
+            # gateway is safe), or we leak threads, a listener, and the
+            # 1 ms GIL switch interval a started gateway installed
+            self.server.start()
+            addresses = [gw.start() for gw in self.gateways]
             if self.learner and with_learner:
                 self.learner.start()
-            host_stats = self.pool.run(address, seconds)
+            host_stats = self.pool.run(addresses, seconds)
         finally:
             # even if the pool trips its hard timeout, tear the learner,
-            # gateway (which also restores the GIL switch interval) and
+            # gateways (which also restore the GIL switch interval) and
             # server down — never leak threads or a bound listener
             if self.learner and with_learner:
                 self.learner.stop()
                 self.learner.join()
-            self.gateway.stop()
+            # reverse order: each gateway saved the GIL switch interval it
+            # found at start(), so unwinding the stack restores the real
+            # process default, not a sibling gateway's 1 ms slice
+            for gw in reversed(self.gateways):
+                gw.stop()
             self.server.stop()
         elapsed = max((s["elapsed_s"] for s in host_stats), default=seconds)
         return self.throughput(max(elapsed, 1e-9))
@@ -221,7 +288,7 @@ class SeedSystem:
             "episode_return_mean": float(np.mean(returns or [0.0])),
         }
         if self.server:
-            s = self.server.stats
+            s = self.server.stats           # summed across replicas
             actor_error = next(
                 (e for e in (getattr(a, "error", None) for a in self.actors)
                  if e), None)
@@ -235,15 +302,27 @@ class SeedSystem:
                 "queue_wait_s_sum": s["queue_wait_s"],
                 "inference_compute_s": s["compute_s"],
                 "inference_error": self.server.error or actor_error,
+                "num_replicas": self.server.num_replicas,
                 **self.server.derived_stats(),
             })
+            if self.server.num_replicas > 1:
+                # ONE snapshot for both views: the sharded decomposition's
+                # per-replica lane counts and occupancy expose batch-fill
+                # starvation per shard, and must be mutually consistent
+                per = self.server.per_replica_stats()
+                out["replica_lanes"] = [r["requests"] for r in per]
+                out["replica_occupancy"] = [r["mean_batch_occupancy"]
+                                            for r in per]
             if self.pool is not None:
-                g = self.gateway.stats
+                gs = [gw.stats for gw in self.gateways]
                 out.update({
                     "actor_hosts": self.pool.num_hosts,
-                    "gateway_connections": g["connections"],
-                    "gateway_request_frames": g["request_frames"],
-                    "gateway_traj_frames": g["traj_frames"],
+                    "num_gateways": len(self.gateways),
+                    "gateway_connections": sum(g["connections"] for g in gs),
+                    "gateway_request_frames": sum(g["request_frames"]
+                                                  for g in gs),
+                    "gateway_traj_frames": sum(g["traj_frames"] for g in gs),
+                    "per_gateway_connections": [g["connections"] for g in gs],
                     "host_errors": [s_["error"] for s_ in self.pool.last_stats
                                     if s_["error"]],
                 })
@@ -261,6 +340,7 @@ class SeedSystem:
                 "inference_error": next(
                     (a.error for a in self.actors if a.error), None),
                 "scans": iterations,
+                "engine_shards": self.engine_shards,
                 "param_refreshes": refreshes,
                 "mean_param_lag": lag / max(iterations, 1),
             })

@@ -1,13 +1,22 @@
-"""Actor hosts: OS processes of vectorized actors against a remote gateway.
+"""Actor hosts: OS processes of vectorized actors against remote gateways.
 
 This is the paper's disaggregated provisioning made runnable: the learner
-box keeps the `InferenceServer` + `InferenceGateway`, and env interaction
-moves to K separate *processes* — stand-ins for K separate CPU hosts. Each
-actor thread on a host dials the gateway with its own `SyncSocketTransport`
-connection (SEED's per-actor streaming-RPC shape: the reply is parsed in
-the submitting thread, no relay hop), so a host with A actors holds A
-connections. On one machine this exercises the full wire path over
-loopback; pointing `address` at another box is the same code.
+box keeps the `InferenceServer` + its `InferenceGateway`s, and env
+interaction moves to K separate *processes* — stand-ins for K separate CPU
+hosts. Each actor thread on a host dials its gateway with its own
+`SyncSocketTransport` connection (SEED's per-actor streaming-RPC shape:
+the reply is parsed in the submitting thread, no relay hop), so a host
+with A actors holds A connections. On one machine this exercises the full
+wire path over loopback; pointing the addresses at another box is the
+same code.
+
+With G > 1 gateway addresses (`SeedSystem(num_gateways=G)` — the
+multi-gateway sharding that removes the single accept loop), hosts are
+HASHED across them: host h dials ``addresses[h % G]``. The hash is stable
+in host_id, so a host's actors — and therefore their (actor_id, env_id)
+recurrent slots — always enter the server through the same gateway, and
+trajectory frames ride that gateway's connections into the shared learner
+sink.
 
 Processes are spawned (never forked: JAX holds threads at import time and
 fork would deadlock them), so `env_factory` must be picklable — a class
@@ -35,7 +44,7 @@ from typing import Any, List, Optional, Tuple
 @dataclass
 class ActorHostConfig:
     """Everything one child process needs; must pickle under spawn."""
-    address: Tuple[str, int]
+    address: Tuple[str, int]     # this host's gateway (already hashed)
     host_id: int
     actor_ids: Tuple[int, ...]
     env_factory: Any
@@ -44,6 +53,7 @@ class ActorHostConfig:
     seconds: float
     seed: Optional[int] = None
     connect_timeout_s: float = 15.0
+    compress: bool = False       # negotiate RLE for uint8 obs payloads
 
 
 def run_actor_host(cfg: ActorHostConfig, result_q) -> None:
@@ -66,7 +76,8 @@ def run_actor_host(cfg: ActorHostConfig, result_q) -> None:
         # replies parsed in the actor thread itself (no recv-thread hop)
         transports = [
             SyncSocketTransport.connect(cfg.address,
-                                        timeout_s=cfg.connect_timeout_s)
+                                        timeout_s=cfg.connect_timeout_s,
+                                        compress=cfg.compress)
             for _ in cfg.actor_ids]
         actors = [
             Actor(aid, cfg.env_factory, tr, tr.send_trajectory,
@@ -123,7 +134,8 @@ class ActorHostPool:
 
     def __init__(self, env_factory, num_actors: int, envs_per_actor: int,
                  unroll: int, num_hosts: int = 1,
-                 seed: Optional[int] = None, grace_s: float = 90.0):
+                 seed: Optional[int] = None, grace_s: float = 90.0,
+                 compress: bool = False):
         if not 1 <= num_hosts <= num_actors:
             raise ValueError(
                 f"num_hosts={num_hosts} must be in [1, num_actors={num_actors}]")
@@ -134,6 +146,7 @@ class ActorHostPool:
         self.num_hosts = num_hosts
         self.seed = seed
         self.grace_s = grace_s       # spawn + jax import + jit headroom
+        self.compress = compress
         self.last_stats: List[dict] = []
 
     def _partitions(self) -> List[Tuple[int, ...]]:
@@ -146,17 +159,35 @@ class ActorHostPool:
             at += n
         return parts
 
-    def run(self, address: Tuple[str, int], seconds: float) -> List[dict]:
-        """Block until every host reports (or the hard timeout trips)."""
+    @staticmethod
+    def _normalize_addresses(address) -> List[Tuple[str, int]]:
+        """Accept one gateway address ``(host, port)`` or a list of them
+        (multi-gateway sharding)."""
+        if len(address) and isinstance(address[0], str):
+            return [tuple(address)]
+        addrs = [tuple(a) for a in address]
+        if not addrs:
+            raise ValueError("need at least one gateway address")
+        return addrs
+
+    def run(self, address, seconds: float) -> List[dict]:
+        """Block until every host reports (or the hard timeout trips).
+
+        `address` is one gateway ``(host, port)`` or a list of them; hosts
+        hash across the list with the stable ``host_id % G`` map (see
+        module docstring). mp start method is ALWAYS "spawn" — JAX holds
+        threads at import time, so fork would deadlock the children.
+        """
+        addresses = self._normalize_addresses(address)
         ctx = mp.get_context("spawn")
         result_q = ctx.Queue()
         procs = []
         for host_id, actor_ids in enumerate(self._partitions()):
             cfg = ActorHostConfig(
-                address=tuple(address), host_id=host_id,
+                address=addresses[host_id % len(addresses)], host_id=host_id,
                 actor_ids=actor_ids, env_factory=self.env_factory,
                 envs_per_actor=self.envs_per_actor, unroll=self.unroll,
-                seconds=seconds, seed=self.seed)
+                seconds=seconds, seed=self.seed, compress=self.compress)
             p = ctx.Process(target=run_actor_host, args=(cfg, result_q),
                             daemon=True)
             p.start()

@@ -17,12 +17,19 @@ repo, all behind `SeedSystem`:
      (the trajectory), not one per step. The bound is scan throughput on
      the accelerator, not host threads (CuLE / Isaac Gym end state;
      `provisioning.SystemModel.with_device` models it).
+  4. **engine-sharded device** (`backend="device"`, `engine_shards=K`):
+     `ShardedRolloutEngine` partitions the lanes into K
+     `DeviceRolloutEngine`s placed round-robin over `jax.devices()` with
+     `jax.device_put` — when one scan saturates a device, K scans run
+     data-parallel across devices (one per engine carry). CPU-only hosts
+     fall back to K serial scans on the single device.
 
 `RolloutWorker` threads drive repeated scans, refresh params from the
 learner between scans (with an on-policy lag counter), and feed the same
 replay sink as the host actors.
 """
 
-from repro.rollout.engine import (DeviceRolloutEngine, action_key,  # noqa: F401
+from repro.rollout.engine import (DeviceRolloutEngine,  # noqa: F401
+                                  ShardedRolloutEngine, action_key,
                                   as_jax_env)
 from repro.rollout.worker import RolloutWorker  # noqa: F401

@@ -58,7 +58,7 @@ class DeviceRolloutEngine:
 
     def __init__(self, env, policy_apply: Callable, num_envs: int,
                  unroll: int, *, init_core: Optional[Callable] = None,
-                 seed: int = 0):
+                 seed: int = 0, device=None):
         self.env = as_jax_env(env)
         self.num_envs = num_envs
         self.unroll = unroll
@@ -66,6 +66,11 @@ class DeviceRolloutEngine:
         self.obs_shape = tuple(getattr(self.env, "obs_shape", ()))
         self._init_core = init_core       # init_core(num_envs) -> core pytree
         self._seed = seed
+        # optional explicit placement (engine sharding): the carry is
+        # committed to `device` at reset, params are committed per call,
+        # and jit then executes the whole fused scan there. None keeps the
+        # historical default-device behavior bit-for-bit.
+        self.device = device
         self._reset = jax.jit(jax.vmap(self.env.reset))
         self._unroll_fn = jax.jit(self._build(policy_apply, unroll))
         self._carry = None
@@ -91,27 +96,119 @@ class DeviceRolloutEngine:
 
         return unroll_fn
 
+    def _place(self, tree):
+        """Commit a pytree to this engine's device (no-op when unplaced)."""
+        return tree if self.device is None else jax.device_put(tree,
+                                                               self.device)
+
     def reset(self) -> np.ndarray:
         """(Re)seed all lanes; returns the initial obs batch (E, ...)."""
         keys = jax.random.split(jax.random.PRNGKey(self._seed), self.num_envs)
         env_state, obs = self._reset(keys)
         core = self._init_core(self.num_envs) if self._init_core else None
-        self._carry = (env_state, core, obs, action_key(self._seed))
+        self._carry = self._place(
+            (env_state, core, obs, action_key(self._seed)))
         return np.asarray(obs)
 
     def warmup(self, params):
         """Compile the fused scan without advancing lane state or counters."""
         if self._carry is None:
             self.reset()
-        carry, traj = self._unroll_fn(params, self._carry)
+        carry, traj = self._unroll_fn(self._place(params), self._carry)
         jax.block_until_ready(traj["actions"])
+
+    def dispatch(self, params):
+        """Launch one unroll asynchronously: advances the carry and the
+        counters, returns the ON-DEVICE trajectory pytree (no host
+        transfer yet). `ShardedRolloutEngine` uses this to get all K
+        engines' scans in flight before the first blocking device_get, so
+        multi-device hosts overlap their scans."""
+        if self._carry is None:
+            self.reset()
+        self._carry, traj = self._unroll_fn(self._place(params), self._carry)
+        self.scans += 1
+        self.frames += self.unroll * self.num_envs
+        return traj
 
     def rollout(self, params) -> dict:
         """Advance all lanes T steps in one device call; ONE host transfer."""
-        if self._carry is None:
-            self.reset()
-        self._carry, traj = self._unroll_fn(params, self._carry)
+        traj = self.dispatch(params)
         host = jax.device_get(traj)       # the single per-unroll transfer
-        self.scans += 1
-        self.frames += self.unroll * self.num_envs
         return {k: np.asarray(v) for k, v in host.items()}
+
+
+class ShardedRolloutEngine:
+    """K device-sharded `DeviceRolloutEngine`s presenting as one engine.
+
+    The `DeviceRolloutEngine` is one-device-one-carry by construction, so
+    sharding the scan across accelerators is pure *placement*: lanes are
+    partitioned contiguously into K shards, shard k's engine is committed
+    to ``devices[k % len(devices)]`` with `jax.device_put`, and one
+    `rollout()` dispatches ALL K fused scans before the first blocking
+    host transfer — on a multi-device host the scans overlap, on a
+    CPU-only host the round-robin degenerates to K serial scans on the one
+    device (correct, just unaccelerated). Frame/scan accounting is summed
+    across engines; the trajectory comes back as one (T, E_total, ...)
+    batch, so `RolloutWorker` and the replay schema are unchanged.
+
+    Seeding: shard k of an engine seeded `s` uses ``s * K + k`` — distinct
+    per shard, and disjoint across workers as long as every worker uses
+    the same K (which `SeedSystem` does).
+    """
+
+    def __init__(self, env, policy_apply: Callable, num_envs: int,
+                 unroll: int, *, num_shards: int,
+                 init_core: Optional[Callable] = None, seed: int = 0,
+                 devices=None):
+        if not isinstance(num_shards, int) or num_shards < 1:
+            raise ValueError(
+                f"num_shards must be a positive int, got {num_shards!r}")
+        if num_shards > num_envs:
+            raise ValueError(
+                f"num_shards={num_shards} exceeds num_envs={num_envs}: "
+                f"each engine shard needs at least one lane")
+        devices = list(devices) if devices is not None else jax.devices()
+        if not devices:
+            raise ValueError("no devices available to place engine shards")
+        self.num_envs = num_envs
+        self.unroll = unroll
+        self.num_shards = num_shards
+        base, extra = divmod(num_envs, num_shards)
+        self.engines = []
+        for k in range(num_shards):
+            lanes = base + (1 if k < extra else 0)
+            self.engines.append(DeviceRolloutEngine(
+                env, policy_apply, lanes, unroll, init_core=init_core,
+                seed=seed * num_shards + k,
+                device=devices[k % len(devices)]))
+        self.num_actions = self.engines[0].num_actions
+        self.obs_shape = self.engines[0].obs_shape
+        self.devices = [e.device for e in self.engines]
+        self.scans = 0                    # sharded rollouts driven
+
+    @property
+    def frames(self) -> int:
+        """Env frames supplied, summed across engine shards."""
+        return sum(e.frames for e in self.engines)
+
+    @property
+    def shard_scans(self) -> int:
+        """Per-engine scan total (= scans * num_shards once started)."""
+        return sum(e.scans for e in self.engines)
+
+    def reset(self) -> np.ndarray:
+        return np.concatenate([e.reset() for e in self.engines])
+
+    def warmup(self, params):
+        for e in self.engines:
+            e.warmup(params)
+
+    def rollout(self, params) -> dict:
+        """Advance all lanes T steps: K device calls dispatched before any
+        host transfer, then ONE gather per shard, concatenated on the lane
+        axis into the (T, E_total, ...) unroll schema."""
+        trajs = [e.dispatch(params) for e in self.engines]
+        hosts = [jax.device_get(t) for t in trajs]
+        self.scans += 1
+        return {k: np.concatenate([np.asarray(h[k]) for h in hosts], axis=1)
+                for k in hosts[0]}

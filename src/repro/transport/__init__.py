@@ -17,19 +17,22 @@ layers:
 address; `SeedSystem(transport="socket")` wires the whole thing together.
 """
 
-from repro.transport.codec import (CodecError, Frame, FrameTooLarge,
-                                   TruncatedFrame, decode_frame,
-                                   encode_error, encode_reply,
-                                   encode_request, encode_trajectory,
-                                   read_frame)
+from repro.transport.codec import (CODEC_RLE, SUPPORTED_CODECS, CodecError,
+                                   Frame, FrameTooLarge, TruncatedFrame,
+                                   decode_frame, encode_error, encode_hello,
+                                   encode_reply, encode_request,
+                                   encode_trajectory, read_frame,
+                                   rle_decode_u8, rle_encode_u8)
 from repro.transport.local import InProcTransport, Transport
 from repro.transport.socket import (InferenceGateway, SocketTransport,
                                     SyncSocketTransport)
 
 __all__ = [
+    "CODEC_RLE", "SUPPORTED_CODECS",
     "CodecError", "Frame", "FrameTooLarge", "TruncatedFrame",
-    "decode_frame", "encode_error", "encode_reply", "encode_request",
-    "encode_trajectory", "read_frame",
+    "decode_frame", "encode_error", "encode_hello", "encode_reply",
+    "encode_request", "encode_trajectory", "read_frame",
+    "rle_decode_u8", "rle_encode_u8",
     "InProcTransport", "Transport",
     "InferenceGateway", "SocketTransport", "SyncSocketTransport",
 ]

@@ -15,7 +15,19 @@ arrays, never code execution. Four frame kinds cover the whole protocol:
     fail-fast shutdown puts on in-process reply queues;
   * ``TRAJ``     actor -> gateway: a dict of named arrays (one per-lane
     unroll in the ``flush_lane_unrolls`` schema) feeding the learner-side
-    trajectory sink, so trajectories ride the same connection.
+    trajectory sink, so trajectories ride the same connection;
+  * ``HELLO``    both ways: a u32 codec capability bitmask. A client that
+    wants payload compression sends one at connect; the gateway answers
+    with the intersection of the two masks, and only then does the client
+    start setting ``FLAG_RLE`` — negotiation per connection, so a plain
+    peer never sees a compressed frame.
+
+Compression (``FLAG_RLE``): uint8 observation payloads (Atari lanes) are
+run-length encoded as (count u8, value u8) pairs — still raw bytes, NO
+pickle — and only when that actually shrinks the frame; the flag records
+the choice per frame. Decoding checks the run-total against the shape
+BEFORE expanding, and unknown flag bits are rejected before any payload
+allocation, so a hostile stream cannot balloon memory through the codec.
 
 Framing::
 
@@ -23,7 +35,8 @@ Framing::
     body    := u16 magic | u8 ver | u8 kind | u8 flags
                | u32 actor_id | u64 request_id | payload
     ndarray := u8 dtype_len | dtype_str | u8 ndim | ndim * u32 dim
-               | u64 nbytes | raw bytes
+               | u64 nbytes | raw bytes          (rle pairs if FLAG_RLE)
+    hello   := u32 codec_mask
 
 Truncated frames (EOF or short buffer mid-frame) raise ``TruncatedFrame``;
 a length prefix beyond ``max_frame`` raises ``FrameTooLarge`` before any
@@ -43,8 +56,14 @@ KIND_REQUEST = 1
 KIND_REPLY = 2
 KIND_ERROR = 3
 KIND_TRAJ = 4
+KIND_HELLO = 5
 
 FLAG_SCALAR = 0x01       # legacy single-obs submit: reply unwraps to obs[0]
+FLAG_RLE = 0x02          # ndarray payload is RLE pairs, not raw bytes
+_KNOWN_FLAGS = FLAG_SCALAR | FLAG_RLE
+
+CODEC_RLE = 0x01         # HELLO capability bit for FLAG_RLE
+SUPPORTED_CODECS = CODEC_RLE
 
 DEFAULT_MAX_FRAME = 64 << 20      # 64 MiB: > any sane lane batch or unroll
 
@@ -77,13 +96,65 @@ class Frame:
     array: Optional[np.ndarray] = None       # REQUEST / REPLY payload
     message: str = ""                        # ERROR payload
     arrays: Optional[Dict[str, np.ndarray]] = field(default=None)  # TRAJ
+    codecs: int = 0                          # HELLO capability bitmask
 
     @property
     def scalar(self) -> bool:
         return bool(self.flags & FLAG_SCALAR)
 
 
+# ------------------------------------------------------------------- RLE
+
+def rle_encode_u8(data: np.ndarray) -> bytes:
+    """Run-length encode a flat uint8 array as (count u8, value u8) pairs,
+    count in [1, 255] (longer runs split). Pure numpy, no pickle."""
+    data = np.ascontiguousarray(data, np.uint8).reshape(-1)
+    if data.size == 0:
+        return b""
+    bounds = np.flatnonzero(data[1:] != data[:-1]) + 1
+    starts = np.concatenate([[0], bounds])
+    lengths = np.diff(np.concatenate([starts, [data.size]]))
+    values = data[starts]
+    reps = (lengths + 254) // 255              # pairs emitted per run
+    out_vals = np.repeat(values, reps)
+    out_lens = np.full(out_vals.size, 255, np.int64)
+    out_lens[np.cumsum(reps) - 1] = lengths - (reps - 1) * 255  # in [1,255]
+    pairs = np.empty((out_vals.size, 2), np.uint8)
+    pairs[:, 0] = out_lens
+    pairs[:, 1] = out_vals
+    return pairs.tobytes()
+
+
+def rle_decode_u8(buf: bytes, expected: int) -> np.ndarray:
+    """Inverse of `rle_encode_u8`; `expected` is the element count the
+    frame's shape prologue promises. The run total is checked BEFORE
+    `np.repeat`, so a hostile stream cannot expand past the shape it
+    declared (and the shape itself is capped by the caller)."""
+    pairs = np.frombuffer(buf, np.uint8)
+    if pairs.size % 2:
+        raise CodecError("RLE payload has an odd byte count")
+    counts = pairs[0::2].astype(np.int64)
+    if counts.size and int(counts.min()) == 0:
+        raise CodecError("zero-length RLE run")
+    if int(counts.sum()) != expected:
+        raise CodecError(
+            f"RLE runs expand to {int(counts.sum())} bytes; shape "
+            f"promised {expected}")
+    return np.repeat(pairs[1::2], counts)
+
+
 # ---------------------------------------------------------------- encoding
+
+def _ndarray_prologue(arr: np.ndarray, data: bytes) -> bytes:
+    """Shared dtype/shape/length framing for raw and RLE payloads — one
+    definition, so the two encodings cannot desynchronize."""
+    dt = arr.dtype.str.encode("ascii")
+    parts = [_U8.pack(len(dt)), dt, _U8.pack(arr.ndim)]
+    parts.extend(_U32.pack(d) for d in arr.shape)
+    parts.append(_U64.pack(len(data)))
+    parts.append(data)
+    return b"".join(parts)
+
 
 def _encode_ndarray(arr: np.ndarray) -> bytes:
     arr = np.asarray(arr)
@@ -95,13 +166,7 @@ def _encode_ndarray(arr: np.ndarray) -> bytes:
         raise CodecError(
             f"dtype {arr.dtype} is not wire-safe (object arrays would need "
             f"pickle, which the hot path forbids)")
-    dt = arr.dtype.str.encode("ascii")
-    data = arr.tobytes()
-    parts = [_U8.pack(len(dt)), dt, _U8.pack(arr.ndim)]
-    parts.extend(_U32.pack(d) for d in arr.shape)
-    parts.append(_U64.pack(len(data)))
-    parts.append(data)
-    return b"".join(parts)
+    return _ndarray_prologue(arr, arr.tobytes())
 
 
 def _frame(kind: int, actor_id: int, request_id: int, flags: int,
@@ -111,10 +176,36 @@ def _frame(kind: int, actor_id: int, request_id: int, flags: int,
     return _LEN.pack(len(body)) + body
 
 
+def _encode_ndarray_rle(arr: np.ndarray) -> Optional[bytes]:
+    """RLE-framed ndarray payload, or None when compression wouldn't
+    shrink it (the caller then sends raw, without FLAG_RLE — the flag is a
+    per-frame record of what was actually done)."""
+    arr = np.asarray(arr)
+    if arr.dtype != np.uint8 or arr.size == 0:
+        return None
+    data = rle_encode_u8(arr)
+    if len(data) >= arr.nbytes:
+        return None
+    return _ndarray_prologue(np.ascontiguousarray(arr), data)
+
+
 def encode_request(actor_id: int, request_id: int, obs: np.ndarray,
-                   scalar: bool = False) -> bytes:
-    return _frame(KIND_REQUEST, actor_id, request_id,
-                  FLAG_SCALAR if scalar else 0, _encode_ndarray(obs))
+                   scalar: bool = False, compress: bool = False) -> bytes:
+    """``compress=True`` opts this frame into RLE for uint8 payloads —
+    callers must only pass it after a HELLO negotiation granted
+    ``CODEC_RLE`` (see `repro.transport.socket`)."""
+    flags = FLAG_SCALAR if scalar else 0
+    payload = _encode_ndarray_rle(obs) if compress else None
+    if payload is not None:
+        flags |= FLAG_RLE
+    else:
+        payload = _encode_ndarray(obs)
+    return _frame(KIND_REQUEST, actor_id, request_id, flags, payload)
+
+
+def encode_hello(codecs: int) -> bytes:
+    """Connection-level capability advertisement (codec bitmask)."""
+    return _frame(KIND_HELLO, 0, 0, 0, _U32.pack(codecs & 0xFFFFFFFF))
 
 
 def encode_reply(request_id: int, actions: np.ndarray) -> bytes:
@@ -148,7 +239,8 @@ def _need(body: bytes, offset: int, n: int) -> int:
     return offset + n
 
 
-def _decode_ndarray(body: bytes, offset: int):
+def _decode_ndarray(body: bytes, offset: int, rle: bool = False,
+                    max_frame: int = DEFAULT_MAX_FRAME):
     end = _need(body, offset, 1)
     (dlen,) = _U8.unpack_from(body, offset)
     offset = end
@@ -176,6 +268,21 @@ def _decode_ndarray(body: bytes, offset: int):
     expected = dtype.itemsize
     for d in shape:
         expected *= d
+    if rle:
+        # compressed payload: nbytes is the RLE pair-stream length; the
+        # expansion target comes from the shape and is capped BEFORE any
+        # allocation (at the same max_frame bound the raw path enforces
+        # via its length prefix) so a tiny frame cannot decompress into
+        # gigabytes
+        if dtype != np.dtype(np.uint8):
+            raise CodecError(f"FLAG_RLE only covers uint8, got {dtype}")
+        if expected > max_frame:
+            raise CodecError(
+                f"RLE expansion to {expected} bytes exceeds "
+                f"max_frame={max_frame}")
+        end = _need(body, offset, nbytes)
+        arr = rle_decode_u8(body[offset:end], expected).reshape(shape)
+        return arr, end          # np.repeat already owns fresh memory
     if nbytes != expected:
         raise CodecError(
             f"ndarray length mismatch: header says {nbytes} bytes, "
@@ -185,8 +292,11 @@ def _decode_ndarray(body: bytes, offset: int):
     return arr.copy(), end       # copy: detach from the recv buffer
 
 
-def decode_frame(body: bytes) -> Frame:
-    """Decode one frame body (length prefix already stripped)."""
+def decode_frame(body: bytes,
+                 max_frame: int = DEFAULT_MAX_FRAME) -> Frame:
+    """Decode one frame body (length prefix already stripped).
+    `max_frame` bounds RLE expansion — pass the same limit the stream
+    reader enforces on raw frames."""
     if len(body) < _HEADER.size:
         raise TruncatedFrame(f"frame body of {len(body)} bytes < header")
     magic, ver, kind, flags, actor_id, request_id = _HEADER.unpack_from(body)
@@ -194,11 +304,24 @@ def decode_frame(body: bytes) -> Frame:
         raise CodecError(f"bad magic 0x{magic:04x} (stream desynchronized?)")
     if ver != VERSION:
         raise CodecError(f"unsupported wire version {ver}")
+    if flags & ~_KNOWN_FLAGS:
+        # reject BEFORE touching the payload: an unknown flag means we
+        # cannot know how the bytes are encoded, so allocating from them
+        # would be garbage at best and a decompression bomb at worst
+        raise CodecError(f"unknown flag bits 0x{flags & ~_KNOWN_FLAGS:02x}")
+    if flags & FLAG_RLE and kind not in (KIND_REQUEST, KIND_REPLY):
+        raise CodecError(f"FLAG_RLE is invalid on frame kind {kind}")
     offset = _HEADER.size
     frame = Frame(kind=kind, actor_id=actor_id, request_id=request_id,
                   flags=flags)
     if kind in (KIND_REQUEST, KIND_REPLY):
-        frame.array, offset = _decode_ndarray(body, offset)
+        frame.array, offset = _decode_ndarray(body, offset,
+                                              rle=bool(flags & FLAG_RLE),
+                                              max_frame=max_frame)
+    elif kind == KIND_HELLO:
+        end = _need(body, offset, 4)
+        (frame.codecs,) = _U32.unpack_from(body, offset)
+        offset = end
     elif kind == KIND_ERROR:
         frame.message = body[offset:].decode("utf-8", errors="replace")
         offset = len(body)
@@ -212,7 +335,12 @@ def decode_frame(body: bytes) -> Frame:
             (nlen,) = _U8.unpack_from(body, offset)
             offset = end
             end = _need(body, offset, nlen)
-            name = body[offset:end].decode("utf-8")
+            try:
+                name = body[offset:end].decode("utf-8")
+            except UnicodeDecodeError as e:
+                # must surface as CodecError: the gateway reader only
+                # treats (OSError, CodecError) as connection failures
+                raise CodecError(f"bad trajectory key: {e}") from None
             offset = end
             arrays[name], offset = _decode_ndarray(body, offset)
         frame.arrays = arrays
@@ -246,7 +374,7 @@ def read_frame(read_exact: Callable[[int], bytes],
     if len(body) < body_len:
         raise TruncatedFrame(
             f"EOF after {len(body)}/{body_len} body bytes")
-    return decode_frame(body)
+    return decode_frame(body, max_frame=max_frame)
 
 
 def recv_exact(sock, n: int) -> bytes:

@@ -5,21 +5,28 @@ TCP connection; a per-connection ``request_id`` demultiplexes replies back
 to the right actor's reply queue (gRPC-stream-shaped, like SEED RL's
 inference RPC). Trajectory unrolls ride the same connection as ``TRAJ``
 frames, so an actor host needs exactly one socket to the learner box.
+``compress=True`` sends a ``HELLO`` capability frame at connect; once the
+gateway grants ``CODEC_RLE``, uint8 observation payloads go RLE-compressed
+(Atari lanes shrink well; the no-pickle guarantee holds — see codec).
 
 Server side — `InferenceGateway`: accepts N actor-host connections and
 demultiplexes request frames into the central `InferenceServer`'s request
-queue — the SAME queue the in-process actors use, so remote and local
+queues — the SAME routing the in-process actors use, so remote and local
 actors batch together and the batching deadline + per-(actor, lane)
-recurrent-slot semantics hold unchanged across the wire. Replies skip a
-relay thread entirely: each request carries a `_WireReply` whose ``put``
-encodes and sends on the server's own loop thread (replies are a few
-dozen bytes, so the sendall cannot meaningfully stall the batch loop; a
-production gateway would make this write async — see ROADMAP).
+recurrent-slot semantics hold unchanged across the wire. Each request
+carries a `_WireReply` whose ``put`` encodes the reply and hands it to the
+connection's dedicated `_ConnWriter` thread (bounded queue), so ONE slow
+actor-host TCP buffer blocks only its own writer — never the server's
+batch loop. A writer whose queue fills is failed and its connection
+closed: the client's pending replies poison, which is the fail-fast
+contract, not a silent stall. To shard the accept loop itself, run several
+gateways in front of one server (`SeedSystem(num_gateways=G)`) and hash
+actor hosts across their addresses (`launch.actor_host`).
 
-Fail-fast: a dead server drains its queue with poison `ReplyError`s which
-the writer forwards as ``ERROR`` frames; a dropped connection poisons every
-pending reply client-side. Either way actors surface an error instead of
-blocking forever.
+Fail-fast: a dead server drains its queues with poison `ReplyError`s which
+the writers forward as ``ERROR`` frames before exiting; a dropped
+connection poisons every pending reply client-side. Either way actors
+surface an error instead of blocking forever.
 """
 
 import queue
@@ -34,12 +41,13 @@ from typing import Callable, Dict, Optional, Tuple
 import numpy as np
 
 from repro.core.inference import InferenceRequest, ReplyError
-from repro.transport.codec import (DEFAULT_MAX_FRAME, KIND_ERROR,
-                                   KIND_REPLY, KIND_REQUEST, KIND_TRAJ,
+from repro.transport.codec import (CODEC_RLE, DEFAULT_MAX_FRAME, FLAG_RLE,
+                                   KIND_ERROR, KIND_HELLO, KIND_REPLY,
+                                   KIND_REQUEST, KIND_TRAJ, SUPPORTED_CODECS,
                                    CodecError, decode_frame, encode_error,
-                                   encode_reply, encode_request,
-                                   encode_trajectory, read_frame,
-                                   recv_exact)
+                                   encode_hello, encode_reply,
+                                   encode_request, encode_trajectory,
+                                   read_frame, recv_exact)
 from repro.transport.local import Transport
 
 Address = Tuple[str, int]
@@ -61,7 +69,8 @@ class SocketTransport(Transport):
     """Client half of the wire. One connection, many actor threads."""
 
     def __init__(self, sock: _socket.socket,
-                 max_frame: int = DEFAULT_MAX_FRAME):
+                 max_frame: int = DEFAULT_MAX_FRAME,
+                 compress: bool = False):
         sock.setsockopt(_socket.IPPROTO_TCP, _socket.TCP_NODELAY, 1)
         self._sock = sock
         self.max_frame = max_frame
@@ -71,13 +80,23 @@ class SocketTransport(Transport):
         self._next_id = 1          # 0 is the broadcast id — never assigned
         self._closed = threading.Event()
         self.error: Optional[str] = None
+        # compression starts OFF and only turns on when the gateway's HELLO
+        # grants it (requests sent in the negotiation window go raw — a
+        # correct, just unoptimized, encoding)
+        self._rle = False
+        if compress:
+            try:
+                sock.sendall(encode_hello(SUPPORTED_CODECS))
+            except OSError as e:
+                self.error = f"send failed: {e}"
         self._recv_thread = threading.Thread(target=self._recv_loop,
                                              daemon=True)
         self._recv_thread.start()
 
     @classmethod
     def connect(cls, address: Address, timeout_s: float = 10.0,
-                max_frame: int = DEFAULT_MAX_FRAME) -> "SocketTransport":
+                max_frame: int = DEFAULT_MAX_FRAME,
+                compress: bool = False) -> "SocketTransport":
         """Dial the gateway, retrying while it binds (actor hosts and the
         learner box start concurrently)."""
         deadline = time.perf_counter() + timeout_s
@@ -85,7 +104,7 @@ class SocketTransport(Transport):
             try:
                 sock = _socket.create_connection(address, timeout=2.0)
                 sock.settimeout(None)
-                return cls(sock, max_frame=max_frame)
+                return cls(sock, max_frame=max_frame, compress=compress)
             except OSError:
                 if time.perf_counter() >= deadline:
                     raise
@@ -104,7 +123,8 @@ class SocketTransport(Transport):
             self._next_id += 1
             self._pending[request_id] = reply
         try:
-            self._send(encode_request(actor_id, request_id, obs))
+            self._send(encode_request(actor_id, request_id, obs,
+                                      compress=self._rle))
         except OSError as e:
             self._fail(f"send failed: {e}")
         return reply
@@ -164,6 +184,9 @@ class SocketTransport(Transport):
                     reply = self._pop(frame.request_id)
                     if reply is not None:
                         reply.put(frame.array)
+                elif frame.kind == KIND_HELLO:
+                    # the gateway granted (or refused) our codec offer
+                    self._rle = bool(frame.codecs & CODEC_RLE)
                 elif frame.kind == KIND_ERROR:
                     if frame.request_id == 0:          # broadcast: all fail
                         self._fail(frame.message)
@@ -187,18 +210,85 @@ class SocketTransport(Transport):
             self._fail("gateway closed the connection")
 
 
+class _ConnWriter:
+    """Per-connection reply writer: the server's batch loop hands encoded
+    frames to a bounded queue and returns immediately; this thread does
+    the blocking ``sendall``. One actor host with a full TCP buffer can
+    therefore stall only its own writer — every other connection (and the
+    batch loop itself) keeps moving. A queue that fills means the peer has
+    stopped reading: the writer FAILS the connection (shutdown), which
+    poisons the client's pending replies — fail-fast, not a hidden stall.
+
+    `stop()` poisons the queue with a sentinel; frames already enqueued
+    (including the ``ERROR`` drain of a dying server) are flushed first,
+    so the fail-fast wire contract survives the async hop."""
+
+    _POISON = object()
+
+    def __init__(self, sock, maxsize: int = 256):
+        self._sock = sock
+        self._q: "queue.Queue" = queue.Queue(maxsize=maxsize)
+        self._stop = threading.Event()
+        self.failed = False
+        self._thread = threading.Thread(target=self._loop, daemon=True)
+        self._thread.start()
+
+    def send(self, frame: bytes):
+        if self.failed or self._stop.is_set():
+            return
+        try:
+            self._q.put_nowait(frame)
+        except queue.Full:
+            self.fail()
+
+    def fail(self):
+        """Slow or dead consumer: sever the connection so the client's
+        recv loop poisons its pending replies, and unblock any in-flight
+        sendall."""
+        self.failed = True
+        try:
+            self._sock.shutdown(_socket.SHUT_RDWR)
+        except OSError:
+            pass
+
+    def stop(self):
+        self._stop.set()
+        try:
+            self._q.put_nowait(self._POISON)
+        except queue.Full:
+            pass                 # loop polls _stop, so it still exits
+        self._thread.join(timeout=5.0)
+
+    def _loop(self):
+        while True:
+            try:
+                frame = self._q.get(timeout=0.25)
+            except queue.Empty:
+                if self._stop.is_set():
+                    return
+                continue
+            if frame is self._POISON:
+                return
+            if self.failed:
+                continue         # drain without sending
+            try:
+                self._sock.sendall(frame)
+            except OSError:
+                self.failed = True
+
+
 class _WireReply:
     """Queue-shaped reply proxy: ``put(result)`` encodes the action array
-    (or poison `ReplyError`) and sends it straight from the caller's thread
-    — the `InferenceServer` loop on the happy path, its drain on shutdown.
-    Send failures are swallowed: a vanished actor host must not take the
-    server (and every other connection's actors) down with it."""
+    (or poison `ReplyError`) on the caller's thread — cheap; actions are a
+    few dozen bytes — and hands the frame to the connection's `_ConnWriter`
+    for the blocking send. Writer failures are contained: a vanished actor
+    host must not take the server (and every other connection's actors)
+    down with it."""
 
-    def __init__(self, gateway: "InferenceGateway", sock, send_lock,
+    def __init__(self, gateway: "InferenceGateway", writer: _ConnWriter,
                  request_id: int):
         self._gateway = gateway
-        self._sock = sock
-        self._send_lock = send_lock
+        self._writer = writer
         self._request_id = request_id
 
     def put(self, result):
@@ -208,11 +298,7 @@ class _WireReply:
         else:
             self._gateway._bump("reply_frames")
             frame = encode_reply(self._request_id, np.asarray(result))
-        try:
-            with self._send_lock:
-                self._sock.sendall(frame)
-        except OSError:
-            pass
+        self._writer.send(frame)
 
 
 class _SyncReply:
@@ -244,13 +330,20 @@ class SyncSocketTransport(Transport):
     """
 
     def __init__(self, sock: _socket.socket,
-                 max_frame: int = DEFAULT_MAX_FRAME):
+                 max_frame: int = DEFAULT_MAX_FRAME,
+                 compress: bool = False):
         sock.setsockopt(_socket.IPPROTO_TCP, _socket.TCP_NODELAY, 1)
         self._sock = sock
         self.max_frame = max_frame
         self._buf = bytearray()
         self._next_id = 1
+        self._rle = False        # enabled by the gateway's HELLO grant
         self.error: Optional[str] = None
+        if compress:
+            try:
+                sock.sendall(encode_hello(SUPPORTED_CODECS))
+            except OSError as e:
+                self.error = f"send failed: {e}"
 
     connect = classmethod(SocketTransport.connect.__func__)
 
@@ -264,7 +357,8 @@ class SyncSocketTransport(Transport):
                 # would desynchronize the whole stream
                 self._sock.settimeout(None)
                 self._sock.sendall(
-                    encode_request(actor_id, request_id, np.asarray(obs)))
+                    encode_request(actor_id, request_id, np.asarray(obs),
+                                   compress=self._rle))
             except OSError as e:
                 self.error = f"send failed: {e}"
         return _SyncReply(self, request_id)
@@ -322,7 +416,7 @@ class SyncSocketTransport(Transport):
         self._fill(4 + body_len, deadline)
         body = bytes(self._buf[4:4 + body_len])
         del self._buf[:4 + body_len]
-        return decode_frame(body)
+        return decode_frame(body, max_frame=self.max_frame)
 
     def _read_reply(self, request_id: int, timeout: Optional[float]):
         if self.error is not None:
@@ -336,6 +430,9 @@ class SyncSocketTransport(Transport):
                     if frame.request_id == request_id:
                         return frame.array
                     continue            # stale reply from an abandoned rid
+                if frame.kind == KIND_HELLO:
+                    self._rle = bool(frame.codecs & CODEC_RLE)
+                    continue
                 if frame.kind == KIND_ERROR:
                     if frame.request_id in (0, request_id):
                         return ReplyError(frame.message)
@@ -384,7 +481,8 @@ class InferenceGateway:
         self._conns = []
         self._lock = threading.Lock()
         self.stats = {"connections": 0, "request_frames": 0,
-                      "reply_frames": 0, "error_frames": 0, "traj_frames": 0}
+                      "reply_frames": 0, "error_frames": 0, "traj_frames": 0,
+                      "hello_frames": 0, "rle_request_frames": 0}
         self.error: Optional[str] = None
 
     def _bump(self, key: str):
@@ -440,7 +538,7 @@ class InferenceGateway:
             self._threads.append(t)
 
     def _read_conn(self, sock):
-        send_lock = threading.Lock()         # replies interleave safely
+        writer = _ConnWriter(sock)           # replies leave via this thread
         try:
             while not self._stop.is_set():
                 frame = read_frame(lambda n: recv_exact(sock, n),
@@ -449,14 +547,28 @@ class InferenceGateway:
                     break
                 if frame.kind == KIND_REQUEST:
                     self._bump("request_frames")
+                    if frame.flags & FLAG_RLE:
+                        self._bump("rle_request_frames")
+                    if frame.array.ndim < 1:
+                        # contain malformed requests to THIS connection: a
+                        # 0-d obs would blow up inside the server's batch
+                        # loop and _fatal() the whole plane for every peer
+                        raise CodecError(
+                            "REQUEST obs must be lane-batched (ndim >= 1), "
+                            f"got a {frame.array.ndim}-d array")
                     self.server.submit_request(InferenceRequest(
                         frame.actor_id, frame.array,
-                        _WireReply(self, sock, send_lock,
-                                   frame.request_id)))
+                        _WireReply(self, writer, frame.request_id)))
                 elif frame.kind == KIND_TRAJ:
                     self._bump("traj_frames")
                     if self.sink is not None:
                         self.sink(frame.arrays)
+                elif frame.kind == KIND_HELLO:
+                    # negotiate per connection: grant the intersection of
+                    # the client's offer and what this codec supports
+                    self._bump("hello_frames")
+                    writer.send(encode_hello(
+                        frame.codecs & SUPPORTED_CODECS))
                 else:
                     raise CodecError(
                         f"unexpected frame kind {frame.kind} on gateway")
@@ -464,4 +576,5 @@ class InferenceGateway:
             if not self._stop.is_set():
                 self.error = traceback.format_exc()
         finally:
+            writer.stop()
             sock.close()

@@ -103,6 +103,119 @@ def test_codec_rejects_oversized_frames_before_allocating():
         codec.read_frame(io.BytesIO(wire).read, max_frame=16)
 
 
+def test_codec_rle_roundtrip_uint8():
+    """RLE request payloads decode to the identical array, and only uint8
+    frames that actually shrink carry the flag."""
+    arr = np.zeros((4, 84, 84), np.uint8)
+    arr[:, 40:44] = 255                      # Atari-ish sparse frame
+    wire = codec.encode_request(7, 9, arr, compress=True)
+    raw = codec.encode_request(7, 9, arr)
+    assert len(wire) < len(raw) // 10        # long runs compress hard
+    frame = codec.decode_frame(wire[4:])
+    assert frame.flags & codec.FLAG_RLE
+    assert frame.array.dtype == np.uint8
+    assert frame.array.shape == arr.shape
+    assert np.array_equal(frame.array, arr)
+    # incompressible payload: compress=True must fall back to raw framing
+    rng = np.random.default_rng(0)
+    noisy = rng.integers(0, 256, (3, 64), dtype=np.uint8)
+    wire_n = codec.encode_request(1, 2, noisy, compress=True)
+    frame_n = codec.decode_frame(wire_n[4:])
+    assert not frame_n.flags & codec.FLAG_RLE
+    assert np.array_equal(frame_n.array, noisy)
+    # non-uint8 payloads never compress
+    f32 = np.zeros((4, 50), np.float32)
+    assert not codec.decode_frame(
+        codec.encode_request(1, 3, f32, compress=True)[4:]).flags \
+        & codec.FLAG_RLE
+
+
+def test_codec_rle_property_roundtrip():
+    hypothesis = pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    @settings(deadline=None, max_examples=30)
+    @given(st.integers(0, 2 ** 31 - 1), st.integers(0, 4),
+           st.integers(1, 600))
+    def roundtrip(seed, runs, n):
+        rng = np.random.default_rng(seed)
+        # mix of long runs and noise, incl. runs > 255 (pair splitting)
+        arr = rng.integers(0, 2 if runs else 256, n, dtype=np.uint8)
+        out = codec.rle_decode_u8(codec.rle_encode_u8(arr), arr.size)
+        assert np.array_equal(out, arr)
+
+    roundtrip()
+
+
+def test_codec_rejects_unknown_flags_and_bad_rle():
+    wire = codec.encode_request(1, 1, np.zeros((2, 4), np.float32))
+    body = bytearray(wire[4:])
+    body[4] |= 0x80                          # unknown flag bit
+    with pytest.raises(codec.CodecError, match="unknown flag"):
+        codec.decode_frame(bytes(body))
+    # FLAG_RLE is only valid on array frames
+    err = bytearray(codec.encode_error(0, "boom")[4:])
+    err[4] |= codec.FLAG_RLE
+    with pytest.raises(codec.CodecError, match="FLAG_RLE"):
+        codec.decode_frame(bytes(err))
+    # RLE run total must match the declared shape exactly
+    with pytest.raises(codec.CodecError, match="RLE"):
+        codec.rle_decode_u8(bytes([5, 1]), expected=4)
+    with pytest.raises(codec.CodecError, match="zero-length"):
+        codec.rle_decode_u8(bytes([0, 1]), expected=0)
+    with pytest.raises(codec.CodecError, match="odd"):
+        codec.rle_decode_u8(bytes([5]), expected=5)
+
+
+def test_rle_expansion_capped_at_readers_max_frame():
+    """The RLE expansion bound follows the configured max_frame, both
+    tightened and (by default) at DEFAULT_MAX_FRAME — a tiny hostile
+    frame cannot out-expand the limit the raw path enforces."""
+    arr = np.zeros(4096, np.uint8)
+    wire = codec.encode_request(1, 1, arr, compress=True)
+    assert codec.decode_frame(wire[4:]).array.size == 4096
+    with pytest.raises(codec.CodecError, match="RLE expansion"):
+        codec.decode_frame(wire[4:], max_frame=1024)
+    with pytest.raises(codec.CodecError, match="RLE expansion"):
+        codec.read_frame(io.BytesIO(wire).read, max_frame=1024)
+
+
+def test_gateway_contains_zero_dim_request_to_its_connection():
+    """A wire REQUEST with a 0-d obs (decodable, but not lane-batched)
+    must sever only the offending connection — never `_fatal` the server
+    out from under every other peer."""
+    srv = InferenceServer(det_policy, max_batch=4, deadline_ms=2.0)
+    gw = InferenceGateway(srv)
+    srv.start()
+    addr = gw.start()
+    import socket as _s
+    evil = _s.create_connection(addr)
+    good = SyncSocketTransport.connect(addr)
+    try:
+        evil.sendall(codec.encode_request(0, 1, np.int32(7)))  # 0-d
+        obs = np.random.rand(2, 50).astype(np.float32)
+        deadline = time.perf_counter() + 5.0
+        while gw.error is None and time.perf_counter() < deadline:
+            time.sleep(0.01)
+        assert gw.error is not None and "ndim" in gw.error
+        # the server and other connections are untouched
+        assert srv.error is None
+        got = good.submit_batch(1, obs).get(timeout=5.0)
+        assert np.array_equal(got, det_policy(obs, None))
+    finally:
+        evil.close()
+        good.close()
+        gw.stop()
+        srv.stop()
+
+
+def test_codec_hello_roundtrip():
+    frame = codec.decode_frame(
+        codec.encode_hello(codec.SUPPORTED_CODECS)[4:])
+    assert frame.kind == codec.KIND_HELLO
+    assert frame.codecs == codec.SUPPORTED_CODECS
+
+
 def test_codec_rejects_garbage():
     with pytest.raises(codec.CodecError):
         codec.decode_frame(b"\x00" * 40)          # bad magic
@@ -301,6 +414,107 @@ def test_transport_poisons_pending_on_gateway_loss():
         block.set()
         tr.close()
         srv.stop()
+
+
+def test_wire_compression_is_negotiated_per_connection():
+    """A `compress=True` client HELLOs, the gateway grants RLE, and uint8
+    obs then cross the wire compressed — while a plain client on the SAME
+    gateway keeps sending raw frames (negotiation is per connection)."""
+
+    def u8_policy(obs, ids):
+        return obs.reshape(obs.shape[0], -1).astype(np.int64).sum(axis=1) % 3
+
+    srv = InferenceServer(u8_policy, max_batch=8, deadline_ms=2.0)
+    gw = InferenceGateway(srv)
+    srv.start()
+    addr = gw.start()
+    obs = np.zeros((2, 84, 84), np.uint8)
+    obs[:, 10:12] = 3
+    tr_c = SyncSocketTransport.connect(addr, compress=True)
+    tr_p = SyncSocketTransport.connect(addr)
+    try:
+        for _ in range(4):
+            got = tr_c.submit_batch(0, obs).get(timeout=5.0)
+            assert np.array_equal(got, u8_policy(obs, None))
+        assert tr_c._rle, "gateway did not grant the offered codec"
+        for _ in range(2):
+            got = tr_p.submit_batch(1, obs).get(timeout=5.0)
+            assert np.array_equal(got, u8_policy(obs, None))
+        assert not tr_p._rle
+        assert gw.stats["hello_frames"] == 1
+        # first request may race the HELLO grant (sent raw); the rest ride
+        # compressed. The plain connection contributes zero RLE frames.
+        assert gw.stats["rle_request_frames"] >= 3
+        assert gw.stats["request_frames"] == 6
+    finally:
+        tr_c.close()
+        tr_p.close()
+        gw.stop()
+        srv.stop()
+
+
+def test_wire_replies_leave_via_writer_thread_not_server_loop():
+    """Async-reply contract: a connection whose peer never reads cannot
+    stall the server's batch loop — replies to it queue (or sever that
+    one connection), while OTHER connections keep round-tripping at full
+    rate. The stalled peer is a raw socket that sends requests and never
+    recvs, so nothing drains its side of the wire."""
+    import socket as _s
+
+    from repro.transport import codec as _codec
+
+    def policy(obs, ids):
+        return np.zeros((obs.shape[0],), np.int64)
+
+    srv = InferenceServer(policy, max_batch=1, deadline_ms=0.5)
+    gw = InferenceGateway(srv)
+    srv.start()
+    addr = gw.start()
+    stalled = _s.create_connection(addr)
+    live = SyncSocketTransport.connect(addr)
+    try:
+        obs = np.zeros((1, 64), np.float32)
+        for rid in range(1, 65):
+            stalled.sendall(_codec.encode_request(0, rid, obs))
+        # the live connection must keep round-tripping promptly while the
+        # stalled connection's replies sit in its writer's queue
+        t0 = time.perf_counter()
+        for _ in range(20):
+            out = live.submit_batch(1, obs).get(timeout=5.0)
+            assert out.shape == (1,)
+        assert time.perf_counter() - t0 < 5.0
+        assert srv.error is None and gw.error is None
+    finally:
+        stalled.close()
+        live.close()
+        gw.stop()
+        srv.stop()
+
+
+def test_conn_writer_backpressure_fails_connection_not_server():
+    """A writer whose bounded queue overflows severs THAT connection
+    (fail-fast: the peer sees the drop and poisons its pending replies)
+    instead of blocking the thread that called `send`."""
+    import socket as _s
+
+    from repro.transport.socket import _ConnWriter
+
+    a, b = _s.socketpair()
+    w = _ConnWriter(a, maxsize=4)
+    try:
+        # overflow the bounded queue while nobody drains the peer: the
+        # writer must fail (not block) once the queue and buffers jam
+        payload = b"x" * (1 << 20)
+        deadline = time.perf_counter() + 10.0
+        while not w.failed and time.perf_counter() < deadline:
+            w.send(payload)
+        assert w.failed, "writer blocked instead of failing the connection"
+        # and `send` after failure is a no-op, not an error
+        w.send(payload)
+    finally:
+        w.stop()
+        a.close()
+        b.close()
 
 
 # ------------------------------------------- parity + end-to-end system

@@ -20,9 +20,16 @@ Four parts:
       bottleneck removed — plus the `with_sharded` model at paper scale
       and an engine-sharded device point (`engine_shards`).
 
+  (f) ALGORITHM AXIS (`--algo vtrace`, measured + model): the same system
+      with the on-policy training plane (`repro.onpolicy`) instead of
+      replay — frames generated vs trained vs DROPPED by the bounded
+      staleness-aware trajectory queue, and the mean behavior-param lag.
+      This is the actor-scaling knee seen from the algorithm side: past
+      the learner's consumption rate, actors buy drop rate, not learning.
+
 `--smoke` shrinks every measured window so CI can exercise the full
 measured path in seconds; `--replicas N` sets the sharded sweep's widest
-point (CI runs `--smoke --replicas 2`).
+point (CI runs `--smoke --replicas 2` and `--smoke --algo vtrace`).
 """
 
 import argparse
@@ -190,14 +197,96 @@ def model_replica_sweep(replica_counts=(1, 2, 4, 8), n_actors=40):
             for R in replica_counts]
 
 
+def measured_vtrace_sweep(actor_counts=(1, 2), envs_per_actor=4, seconds=1.2,
+                          unroll=8, learner_batch=4, max_param_lag=50):
+    """Part (f), measured: `SeedSystem(algo='vtrace')` on Catch with a
+    real (tiny MLP) sampling policy and V-trace learner. Reports the
+    conserved frame ledger per actor count — generation vs training vs
+    drops — and the staleness of what trained."""
+    import jax
+
+    from repro.onpolicy import VTraceLearner, mlp_actor_critic
+    from repro.optim import adamw
+
+    obs_dim = int(np.prod(CatchEnv().obs_shape))
+    init_fn, apply_fn = mlp_actor_critic(obs_dim, CatchEnv.num_actions)
+    vl = VTraceLearner(apply_fn, adamw(1e-3))
+    params = init_fn(jax.random.PRNGKey(0))
+    policy = vl.sampling_policy(params)
+    # pay both jit compiles outside every measured window (the batch
+    # pytree is structurally stable, so one warmup covers every run)
+    for n in actor_counts:
+        policy(np.zeros((n * envs_per_actor, obs_dim), np.float32), None)
+    vl.warmup(vl.init_state(params), batch_size=learner_batch,
+              unroll=unroll, obs_shape=(obs_dim,))
+
+    rows = []
+    for n in actor_counts:
+        state = vl.init_state(params)
+        # sweep points must be comparable: reset the behavior policy to
+        # the same initial params the learner restarts from (otherwise
+        # point n generates under point n-1's trained params)
+        policy.publish(params, 0)
+        sys_ = SeedSystem(env_factory=CatchEnv, policy_step=policy,
+                          num_actors=n, unroll=unroll,
+                          envs_per_actor=envs_per_actor, deadline_ms=1.0,
+                          algo="vtrace", train_step=vl.train_step,
+                          state=state, learner_batch=learner_batch,
+                          max_param_lag=max_param_lag,
+                          policy_publish=policy.publish)
+        sys_.warmup()
+        stats = sys_.run(seconds=seconds)
+        onp = stats["onpolicy"]
+        rows.append((n, stats["env_frames_per_s"],
+                     onp["frames_trained"] / stats["elapsed_s"],
+                     onp["drop_rate"], stats["mean_param_lag"],
+                     onp["mean_trained_lag"], stats["learner_steps"]))
+    return rows
+
+
+def model_vtrace_sweep(actor_counts=(4, 16, 40, 128, 256),
+                       learner_step_s=8.0, batch_size=8, unroll=20):
+    """Part (f), model at paper scale: `SystemModel.onpolicy_point` — the
+    drop-rate/staleness knee as a function of actor count."""
+    model, _ = fit_paper_actor_model()
+    return [(n, model.onpolicy_point(n, learner_step_s=learner_step_s,
+                                     batch_size=batch_size, unroll=unroll))
+            for n in actor_counts]
+
+
+def run_vtrace(args, sec):
+    actor_counts = (1, 2) if args.smoke else (1, 2, 4)
+    print("# fig3f: on-policy (V-trace) measured sweep — frame ledger")
+    print("name,value,derived")
+    rows = measured_vtrace_sweep(actor_counts=actor_counts,
+                                 seconds=max(sec, 0.8))
+    for n, gen, trained, drop, lag, tlag, steps in rows:
+        print(f"fig3f_vtrace_actors_{n},{gen:.1f},gen_frames_per_s "
+              f"trained_per_s={trained:.1f} drop_rate={drop:.2f} "
+              f"mean_param_lag={lag:.2f} trained_lag={tlag:.2f} "
+              f"learner_steps={steps}")
+    print("# fig3f: onpolicy_point model at paper scale (40 hw threads)")
+    for n, p in model_vtrace_sweep():
+        print(f"fig3f_model_actors_{n},{p.drop_rate:.2f},drop_rate "
+              f"trained_per_s={p.frames_trained_per_s:.1f} "
+              f"mean_param_lag={p.mean_param_lag:.1f} "
+              f"learner_bound={p.learner_bound}")
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
                     help="tiny measured windows (CI: exercise the path)")
     ap.add_argument("--replicas", type=int, default=2,
                     help="widest point of the sharded-inference sweep (e)")
+    ap.add_argument("--algo", choices=("r2d2", "vtrace"), default="r2d2",
+                    help="r2d2: parts (a-e); vtrace: the on-policy "
+                         "training-plane sweep (f)")
     args = ap.parse_args()
     sec = 0.3 if args.smoke else 1.2
+    if args.algo == "vtrace":
+        run_vtrace(args, sec)
+        return
     actor_counts = (1, 2) if args.smoke else (1, 2, 4, 8)
     env_counts = (1, 4) if args.smoke else (1, 2, 4, 8)
     print("# fig3a: measured actor sweep (scaled-down, this host)")

@@ -62,6 +62,20 @@ def main():
         print(f"     replica {r}: {threads:.0f} threads over a 1/2 "
               f"accelerator slice -> ratio {ratio:.3f}")
 
+    print("\n== the ALGORITHMIC operating point (SeedSystem algo='vtrace'):")
+    print("   on-policy drop rate vs actor count (SystemModel.onpolicy_point")
+    print("   — learner: 8-unroll x 20-step batches, 8 t_env-units/step)")
+    for n in (16, 40, 128, 256):
+        p = model.onpolicy_point(n, learner_step_s=8.0, batch_size=8,
+                                 unroll=20, queue_capacity=64)
+        knee = "LEARNER-BOUND" if p.learner_bound else "balanced"
+        print(f"   {n:4d} actors: {p.frames_generated_per_s:6.1f} gen -> "
+              f"{p.frames_trained_per_s:5.1f} trained frames/s, "
+              f"drop {p.drop_rate:4.0%}, param lag {p.mean_param_lag:4.1f} "
+              f"steps ({knee})")
+    print("   rule: past the knee, actors buy drop rate, not learning —")
+    print("   replay (r2d2) decouples the planes; on-policy re-couples them.")
+
     print("\n== accelerator derating (Fig 4), swept along E like Fig 3")
     der = fit_paper_derating()
     for sm in (80, 40, 8, 2):

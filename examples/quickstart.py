@@ -110,6 +110,67 @@ def sharded_inference_demo(E=8, seconds=0.8):
           f"({stats['scans']} sharded scans)")
 
 
+def onpolicy_demo(E=4, seconds=2.0):
+    """The on-policy training plane (`repro.onpolicy`): the same SEED
+    system with `algo="vtrace"` — actors' unrolls carry behavior logprobs
+    and a behavior-param version stamp into a bounded staleness-aware
+    `TrajectoryQueue` (NOT replay), and the learner trains V-trace batches
+    while publishing params back through the same version seam. The frame
+    ledger is conserved: generated == trained + dropped. The model twin of
+    the printed drop rate is `SystemModel.onpolicy_point` (see
+    examples/provision_system.py)."""
+    import numpy as np
+
+    from repro.onpolicy import VTraceLearner, mlp_actor_critic
+
+    obs_dim = int(np.prod(CatchEnv().obs_shape))
+    init_fn, apply_fn = mlp_actor_critic(obs_dim, CatchEnv.num_actions)
+    vl = VTraceLearner(apply_fn, adamw(1e-3))
+    params = init_fn(jax.random.PRNGKey(0))
+    state = vl.init_state(params)
+    # pay the train-step jit up front so the measured windows train
+    # instead of compiling (the first real batch would otherwise eat them)
+    vl.warmup(state, batch_size=4, unroll=8, obs_shape=(obs_dim,))
+
+    # host backend: the central inference server samples actions AND
+    # returns their logprobs; the learner's publish hook swaps its params
+    policy = vl.sampling_policy(params)
+    for lanes in (E, 2 * E):                 # server batches 1 or 2 actors
+        policy(np.zeros((lanes, obs_dim), np.float32), None)
+    sys_ = SeedSystem(env_factory=CatchEnv, policy_step=policy,
+                      num_actors=2, unroll=8, envs_per_actor=E,
+                      deadline_ms=1.0, algo="vtrace",
+                      train_step=vl.train_step, state=state,
+                      learner_batch=4, max_param_lag=50,
+                      policy_publish=policy.publish)
+    sys_.warmup()
+    stats = sys_.run(seconds=seconds)
+    onp = stats["onpolicy"]
+    print(f"  host  vtrace: {stats['env_frames_per_s']:7.0f} gen-frames/s, "
+          f"{stats['learner_steps']} learner steps, "
+          f"drop_rate={onp['drop_rate']:.2f}, "
+          f"mean_param_lag={stats['mean_param_lag']:.2f}")
+    assert onp["frames_generated"] == (onp["frames_trained"]
+                                       + onp["frames_dropped"])
+
+    # device backend: logprobs ride the fused scan; generation outruns the
+    # learner by design, so the bounded queue VISIBLY drops — the paper's
+    # actor-scaling knee from the algorithm side
+    sys_ = SeedSystem(env_factory=CatchEnv, backend="device",
+                      policy_apply=vl.device_policy_apply(),
+                      num_actors=2, unroll=8, envs_per_actor=E,
+                      algo="vtrace", train_step=vl.train_step,
+                      state=vl.init_state(params),
+                      learner_batch=4, max_param_lag=10)
+    sys_.warmup()
+    stats = sys_.run(seconds=seconds)
+    onp = stats["onpolicy"]
+    print(f"  device vtrace: {stats['env_frames_per_s']:7.0f} gen-frames/s, "
+          f"{stats['learner_steps']} learner steps, "
+          f"drop_rate={onp['drop_rate']:.2f} "
+          f"(bounded queue sheds what the learner cannot absorb)")
+
+
 def main():
     arch = sys.argv[1] if len(sys.argv) > 1 else "qwen3-14b"
     cfg = smoke_config(arch)
@@ -145,6 +206,8 @@ def main():
     vector_actor_demo()
     print("== sharded inference plane (replicas x gateways, engine shards)")
     sharded_inference_demo()
+    print("== on-policy training plane (algo='vtrace', trajectory queue)")
+    onpolicy_demo()
     print("ok")
 
 

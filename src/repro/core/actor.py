@@ -20,17 +20,27 @@ from repro.core.inference import ReplyError
 from repro.envs.vector import make_vector_env
 
 
-def flush_lane_unrolls(stacked, sink: Callable):
-    """Split a (T, E, ...) trajectory dict into E per-lane replay records —
-    the single schema BOTH rollout backends (host actors and device
-    `RolloutWorker`s) feed the trajectory sink."""
+# canonical per-lane dtypes; keys outside this map pass through unchanged
+_LANE_DTYPES = {"actions": np.int32, "rewards": np.float32,
+                "dones": np.float32, "behavior_logprobs": np.float32}
+
+
+def flush_lane_unrolls(stacked, sink: Callable, extra=None):
+    """Split a (T, E, ...) trajectory dict into E per-lane records — the
+    single schema ALL rollout backends (host actors, device
+    `RolloutWorker`s, and wire TRAJ frames) feed the trajectory sink.
+    Any key in `stacked` is split along the lane axis (on-policy rollouts
+    add ``behavior_logprobs``); ``extra`` entries (e.g. the behavior
+    ``param_version`` stamp) are copied verbatim into every lane record."""
     for lane in range(stacked["actions"].shape[1]):
-        sink({
-            "obs": stacked["obs"][:, lane],
-            "actions": stacked["actions"][:, lane].astype(np.int32),
-            "rewards": stacked["rewards"][:, lane].astype(np.float32),
-            "dones": stacked["dones"][:, lane].astype(np.float32),
-        })
+        rec = {}
+        for k, v in stacked.items():
+            lane_v = v[:, lane]
+            dtype = _LANE_DTYPES.get(k)
+            rec[k] = lane_v if dtype is None else lane_v.astype(dtype)
+        if extra:
+            rec.update(extra)
+        sink(rec)
 
 
 def account_episode_ends(rewards, dones, episode_returns, returns) -> int:
@@ -46,7 +56,24 @@ def account_episode_ends(rewards, dones, episode_returns, returns) -> int:
 
 class Actor:
     def __init__(self, actor_id: int, env, server, sink: Callable,
-                 unroll: int, num_envs: int = 1, seed: Optional[int] = None):
+                 unroll: int, num_envs: int = 1, seed: Optional[int] = None,
+                 version_source: Optional[Callable] = None,
+                 with_logprobs: bool = False, stamp_records: bool = False):
+        """``version_source() -> int`` is the learner's published param
+        version: when set, each unroll is stamped with the version current
+        at its FIRST step (the behavior version) and the actor accumulates
+        ``param_lag_total`` — the host-side analogue of the device
+        worker's on-policy lag counter. ``with_logprobs=True`` switches
+        the reply convention to the on-policy ``(E, 2) float32 [action,
+        behavior_logprob]`` rows (see `onpolicy.SamplingPolicy`);
+        ``stamp_records=True`` additionally writes the ``param_version``
+        stamp into the sink records themselves (the on-policy queue's
+        admission key — replay records stay byte-identical without it)."""
+        if stamp_records and version_source is None:
+            raise ValueError(
+                "stamp_records=True requires a version_source: unstamped "
+                "records read as lag-0 fresh, silently disabling the "
+                "on-policy queue's staleness admission")
         self.actor_id = actor_id
         self.vec = make_vector_env(
             env, num_envs, seed=actor_id if seed is None else seed)
@@ -54,6 +81,9 @@ class Actor:
         self.server = server
         self.sink = sink                     # sink(traj_dict)
         self.unroll = unroll
+        self.version_source = version_source
+        self.with_logprobs = with_logprobs
+        self.stamp_records = stamp_records
         self._stop = threading.Event()
         self._thread: Optional[threading.Thread] = None
         self.iterations = 0                  # vector steps (1 per round-trip)
@@ -61,6 +91,8 @@ class Actor:
         self.episodes = 0
         self.episode_returns = np.zeros(self.num_envs, np.float64)
         self.returns = []
+        self.unrolls = 0                     # unroll flushes (E records each)
+        self.param_lag_total = 0             # sum over unrolls of version lag
         self.error: Optional[str] = None     # server/transport death, surfaced
 
     @property
@@ -79,12 +111,24 @@ class Actor:
         if self._thread:
             self._thread.join(timeout=timeout)
 
+    def _version(self) -> int:
+        return self.version_source() if self.version_source else 0
+
+    def _fresh_buf(self):
+        buf = {"obs": [], "actions": [], "rewards": [], "dones": []}
+        if self.with_logprobs:
+            buf["behavior_logprobs"] = []
+        return buf
+
     def _loop(self):
         E = self.num_envs
         obs = self.vec.reset()                       # (E, ...)
         # lanes step in lockstep, so one batched accumulator suffices: O(1)
         # appends per iteration, split into per-lane unrolls only at flush
-        buf = {"obs": [], "actions": [], "rewards": [], "dones": []}
+        buf = self._fresh_buf()
+        # behavior version of the unroll being accumulated = version at its
+        # first step (the most stale params any of its actions used)
+        unroll_version = self._version()
         while not self._stop.is_set():
             # ONE request per iteration; on timeout keep waiting on the SAME
             # reply — resubmitting would advance the server's per-lane
@@ -110,10 +154,21 @@ class Actor:
                     if not self._stop.is_set():
                         self.error = result.message
                     break
-                actions = np.asarray(result)                      # (E,)
+                actions = np.asarray(result)         # (E,) or (E, 2)
                 break
             if actions is None:
                 break
+            logprobs = None
+            if self.with_logprobs:
+                # on-policy reply rows: [action, behavior_logprob]
+                if actions.ndim != 2 or actions.shape[-1] != 2:
+                    self.error = (
+                        f"with_logprobs=True needs (E, 2) [action, logprob] "
+                        f"replies, got shape {actions.shape} — use an "
+                        f"on-policy policy_step (onpolicy.SamplingPolicy)")
+                    break
+                logprobs = actions[:, 1].astype(np.float32)
+                actions = actions[:, 0].astype(np.int32)
             nobs, rewards, dones = self.vec.step(actions)
             self.iterations += 1
             self.frames += E
@@ -121,10 +176,20 @@ class Actor:
             buf["actions"].append(actions)
             buf["rewards"].append(rewards)
             buf["dones"].append(dones)
+            if logprobs is not None:
+                buf["behavior_logprobs"].append(logprobs)
             self.episodes += account_episode_ends(
                 rewards, dones, self.episode_returns, self.returns)
             if len(buf["actions"]) >= self.unroll:
                 stacked = {k: np.stack(v) for k, v in buf.items()}  # (T, E, ..)
-                flush_lane_unrolls(stacked, self.sink)
-                buf = {"obs": [], "actions": [], "rewards": [], "dones": []}
+                extra = None
+                if self.version_source is not None:
+                    self.param_lag_total += max(
+                        self._version() - unroll_version, 0)
+                    self.unrolls += 1
+                    if self.stamp_records:
+                        extra = {"param_version": np.int64(unroll_version)}
+                flush_lane_unrolls(stacked, self.sink, extra=extra)
+                buf = self._fresh_buf()
+                unroll_version = self._version()
             obs = nobs

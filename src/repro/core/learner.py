@@ -16,12 +16,27 @@ import jax
 import numpy as np
 
 
+class BatchSourceClosed(Exception):
+    """Raised by a batch_fn whose source was poisoned by `Learner.stop()`
+    (e.g. a closed on-policy trajectory queue); `_loop` treats it as a
+    clean shutdown, not an error."""
+
+
 class Learner:
     def __init__(self, train_step: Callable, state, batch_fn: Callable,
                  publish: Optional[Callable] = None,
                  checkpoint_manager=None, checkpoint_every: int = 0,
-                 priority_update: Optional[Callable] = None):
-        """batch_fn() -> (batch, info) blocking; publish(params, step)."""
+                 priority_update: Optional[Callable] = None,
+                 poison: Optional[Callable] = None):
+        """batch_fn() -> (batch, info) blocking; publish(params, step).
+
+        ``poison()`` is called from `stop()` to unblock a batch_fn that is
+        waiting on an empty source (the batch_fn should then raise
+        `BatchSourceClosed`); without it a blocking source would hang the
+        learner thread past `join`'s timeout forever. Polling batch_fns
+        can instead watch `stopped` and raise `BatchSourceClosed`
+        themselves.
+        """
         self.train_step = train_step
         self.state = state
         self.batch_fn = batch_fn
@@ -29,6 +44,7 @@ class Learner:
         self.ckpt = checkpoint_manager
         self.checkpoint_every = checkpoint_every
         self.priority_update = priority_update
+        self.poison = poison
         self._stop = threading.Event()
         self._thread: Optional[threading.Thread] = None
         self.steps = 0
@@ -37,12 +53,20 @@ class Learner:
         self.wait_time_s = 0.0
         self.error: Optional[str] = None     # traceback of a fatal loop error
 
+    @property
+    def stopped(self) -> bool:
+        """True once stop() was called (or the loop died); batch_fns that
+        poll-and-sleep must check this so stop() can interrupt the wait."""
+        return self._stop.is_set()
+
     def start(self):
         self._thread = threading.Thread(target=self._loop, daemon=True)
         self._thread.start()
 
     def stop(self):
         self._stop.set()
+        if self.poison is not None:
+            self.poison()
 
     def join(self, timeout=30.0):
         if self._thread:
@@ -80,6 +104,8 @@ class Learner:
                 self._one_step()
             except queue.Empty:
                 continue
+            except BatchSourceClosed:
+                break                 # poisoned batch source: clean shutdown
             except Exception:
                 self.error = traceback.format_exc()
                 self._stop.set()

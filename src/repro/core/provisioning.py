@@ -165,6 +165,74 @@ class SystemModel:
                 "device operating point has no central inference replicas")
         return replace(self, n_replicas=n_replicas)
 
+    def onpolicy_point(self, n_actors, *, learner_step_s: float,
+                       batch_size: int, unroll: int,
+                       queue_capacity: int = 64) -> "OnPolicyPoint":
+        """The ALGORITHMIC operating point (`SeedSystem(algo='vtrace')`):
+        what fraction of the frames this hardware configuration supplies
+        can an on-policy learner actually absorb, and how stale are they
+        when it does.
+
+        Replay-based R2D2 decouples supply from demand (the buffer eats
+        any imbalance), so its operating point is purely the hardware
+        curve above. On-policy V-trace re-couples them: the learner
+        consumes ``batch_size * unroll / learner_step_s`` frames/s, and
+        every generated frame beyond that is DROPPED by the bounded
+        trajectory queue — the paper's actor-scaling knee seen from the
+        algorithm side. Past the knee, adding actors buys drop rate, not
+        learning; the staleness of what does train is the queue residency
+        (a full queue at steady state) converted to learner steps — the
+        `mean_param_lag` the runtime reports.
+
+        ``learner_step_s`` is seconds per learner step in the same time
+        units as t_env; ``queue_capacity`` is in unrolls, matching
+        `TrajectoryQueue`.
+        """
+        if learner_step_s <= 0:
+            raise ValueError(
+                f"learner_step_s must be > 0, got {learner_step_s}")
+        if batch_size < 1 or unroll < 1 or queue_capacity < 1:
+            raise ValueError("batch_size, unroll and queue_capacity must "
+                             "be >= 1")
+        generated = float(self.throughput(n_actors))
+        consumable = batch_size * unroll / learner_step_s
+        trained = min(generated, consumable)
+        drop_rate = max(0.0, 1.0 - consumable / generated) \
+            if generated > 0 else 0.0
+        if generated <= consumable:
+            # learner-starved: an unroll waits one batch-fill, and the
+            # version advances once per fill -> lag ~= 1 learner step
+            residency_s = batch_size * unroll / max(generated, 1e-12)
+        else:
+            # actor-saturated: the queue sits full; an admitted unroll
+            # waits capacity/consumption-rate before training, during
+            # which the learner steps at full rate -> lag ~= capacity in
+            # batches (queue_capacity / batch_size)
+            residency_s = queue_capacity * unroll / consumable
+        # versions only advance when the learner actually steps, so the
+        # staleness conversion uses the ACHIEVED step rate, not 1/step_s
+        steps_per_s = trained / (batch_size * unroll)
+        return OnPolicyPoint(
+            frames_generated_per_s=generated,
+            frames_trained_per_s=trained,
+            drop_rate=drop_rate,
+            mean_param_lag=residency_s * steps_per_s,
+            learner_bound=generated > consumable)
+
+
+@dataclass(frozen=True)
+class OnPolicyPoint:
+    """`SystemModel.onpolicy_point` output: the on-policy frame ledger at
+    one (hardware curve, learner latency) pair. `drop_rate` rises past the
+    point where actor supply exceeds what the learner can absorb;
+    `mean_param_lag` (in learner steps) is the staleness V-trace must
+    correct — the model twin of `throughput()["onpolicy"]`."""
+    frames_generated_per_s: float
+    frames_trained_per_s: float
+    drop_rate: float
+    mean_param_lag: float
+    learner_bound: bool       # True once generation exceeds consumption
+
 
 def fit_paper_actor_model(hw_threads=40, target_5p8=5.8, target_2p0=2.0):
     """Solve (t_inf0, t_inf1)/t_env so the model reproduces the paper's

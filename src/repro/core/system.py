@@ -16,6 +16,21 @@ Backends (see `repro.rollout` for the design-point taxonomy):
     function `(params, core, obs, key) -> (actions, core)`); params refresh
     from the learner between scans via the publish/version seam.
 
+Algorithms (`algo=`): the trajectory plane the actors feed is selected
+independently of the rollout backend:
+  * `algo="r2d2"` (default): unrolls land in `PrioritizedReplay` and the
+    learner trains recurrent Q-learning — bit-identical to the pre-algo
+    behavior;
+  * `algo="vtrace"`: unrolls land in a bounded staleness-aware
+    `repro.onpolicy.TrajectoryQueue` (every unroll stamped with the
+    behavior-param version; lag > `max_param_lag` is dropped and counted)
+    and the learner trains V-trace over `(B, T)` batches. Works on all
+    three backends: host actors decode `(E, 2) [action, logprob]` replies
+    (`onpolicy.SamplingPolicy`), device scans return logprobs in the
+    trajectory pytree, and socket actor hosts negotiate CODEC_ONPOLICY so
+    logprobs + versions ride the existing wire. `throughput()["onpolicy"]`
+    reports the conserved frame ledger (generated = trained + dropped).
+
 The host backend additionally picks a transport (`repro.transport`):
   * `transport="inproc"` (default): actor threads in this process, queue
     round-trips — identical to the pre-transport behavior;
@@ -46,7 +61,7 @@ import numpy as np
 
 from repro.core.actor import Actor
 from repro.core.inference import InferenceServer
-from repro.core.learner import Learner
+from repro.core.learner import BatchSourceClosed, Learner
 from repro.core.replay import PrioritizedReplay
 
 
@@ -63,9 +78,29 @@ class SeedSystem:
                  gateway_host: str = "127.0.0.1", gateway_port: int = 0,
                  num_replicas: int = 1, num_gateways: int = 1,
                  engine_shards: int = 1, wire_compression: bool = False,
-                 checkpoint_manager=None, checkpoint_every: int = 0):
+                 checkpoint_manager=None, checkpoint_every: int = 0,
+                 algo: str = "r2d2", max_param_lag: Optional[int] = None,
+                 queue_capacity: Optional[int] = None,
+                 gamma: Optional[float] = None,
+                 policy_publish: Optional[Callable] = None):
         if backend not in ("host", "device"):
             raise ValueError(f"unknown backend {backend!r}; use 'host' or 'device'")
+        if algo not in ("r2d2", "vtrace"):
+            raise ValueError(
+                f"unknown algo {algo!r}; use 'r2d2' (replay) or 'vtrace' "
+                f"(on-policy trajectory queue)")
+        if algo != "vtrace":
+            # reject rather than silently ignore: these knobs only exist
+            # on the on-policy trajectory plane
+            for name, val in (("max_param_lag", max_param_lag),
+                              ("queue_capacity", queue_capacity),
+                              ("gamma", gamma)):
+                if val is not None:
+                    raise ValueError(
+                        f"{name}={val} applies to algo='vtrace' (replay-"
+                        f"based R2D2 has no trajectory queue to tune)")
+        queue_capacity = 64 if queue_capacity is None else queue_capacity
+        gamma = 0.99 if gamma is None else gamma
         if transport not in ("inproc", "socket"):
             raise ValueError(
                 f"unknown transport {transport!r}; use 'inproc' or 'socket'")
@@ -104,15 +139,29 @@ class SeedSystem:
                 "no wire to compress in-process)")
         self.backend = backend
         self.transport = transport
+        self.algo = algo
         self.envs_per_actor = envs_per_actor
         self.engine_shards = engine_shards
         self.replay = PrioritizedReplay(replay_capacity)
         self.min_replay = min_replay
         self.learner_batch = learner_batch
+        self._policy_publish = policy_publish
         self.server = None
         self.gateway = None
         self.gateways = []
         self.pool = None
+        onpolicy = algo == "vtrace"
+        # the publish/version seam exists for EVERY backend now: device
+        # workers pull params from it, host/socket actors read the version
+        # for staleness stamping, the on-policy queue for admission
+        self._live = {"params": init_params, "version": 0}
+        self._live_lock = threading.Lock()
+        self.onpolicy_queue = None
+        if onpolicy:
+            from repro.onpolicy import TrajectoryQueue
+            self.onpolicy_queue = TrajectoryQueue(
+                queue_capacity, max_param_lag=max_param_lag,
+                version_source=self._version)
         if backend == "host":
             if policy_step is None:
                 raise ValueError("backend='host' requires policy_step")
@@ -126,17 +175,23 @@ class SeedSystem:
                 from repro.transport.socket import InferenceGateway
                 self.gateways = [
                     InferenceGateway(self.server, sink=self._sink,
-                                     host=gateway_host, port=gateway_port)
+                                     host=gateway_host, port=gateway_port,
+                                     version_source=self._version,
+                                     onpolicy=onpolicy)
                     for _ in range(num_gateways)]
                 self.gateway = self.gateways[0]    # back-compat handle
                 self.pool = ActorHostPool(
                     env_factory, num_actors=num_actors,
                     envs_per_actor=envs_per_actor, unroll=unroll,
-                    num_hosts=num_actor_hosts, compress=wire_compression)
+                    num_hosts=num_actor_hosts, compress=wire_compression,
+                    onpolicy=onpolicy)
                 self.actors = []
             else:
                 self.actors = [Actor(i, env_factory, self.server, self._sink,
-                                     unroll, num_envs=envs_per_actor)
+                                     unroll, num_envs=envs_per_actor,
+                                     version_source=self._version,
+                                     with_logprobs=onpolicy,
+                                     stamp_records=onpolicy)
                                for i in range(num_actors)]
         else:
             if policy_apply is None:
@@ -148,47 +203,76 @@ class SeedSystem:
                 # and from the same pytree structure the first publish will
                 # have, or the fused scan recompiles mid-measurement
                 init_params = state.get("params")
-            self._live = {"params": init_params, "version": 0}
-            self._live_lock = threading.Lock()
+                self._live["params"] = init_params
 
             def make_engine(i):
                 if engine_shards == 1:
                     return DeviceRolloutEngine(env_factory, policy_apply,
                                                envs_per_actor, unroll,
-                                               init_core=init_core, seed=i)
+                                               init_core=init_core, seed=i,
+                                               with_logprobs=onpolicy)
                 # raises ValueError when shards exceed lanes / no devices
                 return ShardedRolloutEngine(env_factory, policy_apply,
                                             envs_per_actor, unroll,
                                             num_shards=engine_shards,
-                                            init_core=init_core, seed=i)
+                                            init_core=init_core, seed=i,
+                                            with_logprobs=onpolicy)
 
             self.actors = [
                 RolloutWorker(i, make_engine(i), self._sink,
-                              self._param_source)
+                              self._param_source, stamp_records=onpolicy)
                 for i in range(num_actors)]
         self.learner = None
         if train_step is not None:
+            if onpolicy:
+                from repro.onpolicy import VTraceBatcher
+                batch_fn = VTraceBatcher(self.onpolicy_queue, learner_batch,
+                                         gamma=gamma)
+                poison = self.onpolicy_queue.close
+                priority_update = None
+            else:
+                batch_fn = self._learner_batch
+                poison = None
+                priority_update = lambda idx, pri: \
+                    self.replay.update_priorities(idx, pri)
             self.learner = Learner(
-                train_step, state, self._learner_batch,
-                publish=self._publish if backend == "device" else None,
-                priority_update=lambda idx, pri: self.replay.update_priorities(idx, pri),
+                train_step, state, batch_fn,
+                publish=self._publish,
+                priority_update=priority_update,
                 checkpoint_manager=checkpoint_manager,
-                checkpoint_every=checkpoint_every)
+                checkpoint_every=checkpoint_every,
+                poison=poison)
 
     def _sink(self, traj):
+        if self.onpolicy_queue is not None:
+            self.onpolicy_queue.put(traj)
+            return
         self.replay.add(traj, priority=float(np.abs(traj["rewards"]).mean()) + 1.0)
 
     def _learner_batch(self):
         while len(self.replay) < max(self.min_replay, self.learner_batch):
+            if self.learner is not None and self.learner.stopped:
+                # stop() must not wait on replay that may never fill — the
+                # shutdown-hang fix the learner poison seam exists for
+                raise BatchSourceClosed("system stopping before min_replay")
             time.sleep(0.005)
         batch, idx, w = self.replay.sample(self.learner_batch)
         batch["is_weights"] = w
         return batch, idx
 
     def _publish(self, params, step):
-        """Learner -> rollout workers param seam (device backend)."""
+        """Learner -> actors/workers param seam: device workers pull the
+        params; every backend's staleness stamping reads the version; an
+        optional `policy_publish` hook pushes params into a host-side
+        sampling policy (`onpolicy.SamplingPolicy.publish`)."""
         with self._live_lock:
             self._live = {"params": params, "version": step}
+        if self._policy_publish is not None:
+            self._policy_publish(params, step)
+
+    def _version(self) -> int:
+        with self._live_lock:
+            return self._live["version"]
 
     def _param_source(self):
         with self._live_lock:
@@ -228,6 +312,11 @@ class SeedSystem:
             self.learner.join()
         for a in self.actors:
             a.join()
+        if self.onpolicy_queue is not None:
+            # settle the frame ledger: pending drains into the dropped
+            # count so generated == trained + dropped in throughput()
+            # (learner.stop() already closed it when a learner ran)
+            self.onpolicy_queue.close()
         return self.throughput(elapsed)
 
     def _run_socket(self, seconds: float, with_learner: bool):
@@ -259,6 +348,10 @@ class SeedSystem:
             for gw in reversed(self.gateways):
                 gw.stop()
             self.server.stop()
+            if self.onpolicy_queue is not None:
+                # after the gateways: TRAJ frames still in flight land as
+                # counted shutdown drops, not unrecorded frames
+                self.onpolicy_queue.close()
         elapsed = max((s["elapsed_s"] for s in host_stats), default=seconds)
         return self.throughput(max(elapsed, 1e-9))
 
@@ -278,6 +371,7 @@ class SeedSystem:
             "elapsed_s": elapsed,
             "backend": self.backend,
             "transport": self.transport,
+            "algo": self.algo,
             "envs_per_actor": self.envs_per_actor,
             "actor_iterations": iterations,
             "env_frames": frames,
@@ -287,6 +381,25 @@ class SeedSystem:
             "learner_error": self.learner.error if self.learner else None,
             "episode_return_mean": float(np.mean(returns or [0.0])),
         }
+        if self.server:
+            # actors stamp the behavior-param version on every unroll, so
+            # the device path's staleness metric exists here too: mean lag
+            # (in learner publishes) of the unrolls this run flushed
+            if self.pool is not None:
+                unroll_flushes = sum(s.get("unrolls", 0)
+                                     for s in self.pool.last_stats)
+                lag_total = sum(s.get("param_lag_total", 0)
+                                for s in self.pool.last_stats)
+            else:
+                unroll_flushes = sum(a.unrolls for a in self.actors)
+                lag_total = sum(a.param_lag_total for a in self.actors)
+            out["unroll_flushes"] = unroll_flushes
+            out["mean_param_lag"] = lag_total / max(unroll_flushes, 1)
+        if self.onpolicy_queue is not None:
+            # the conserved frame ledger: generated == trained + dropped
+            # (+ pending mid-run); drop_rate is the paper's actor-scaling
+            # knee seen from the algorithm side
+            out["onpolicy"] = self.onpolicy_queue.stats()
         if self.server:
             s = self.server.stats           # summed across replicas
             actor_error = next(

@@ -54,12 +54,17 @@ class ActorHostConfig:
     seed: Optional[int] = None
     connect_timeout_s: float = 15.0
     compress: bool = False       # negotiate RLE for uint8 obs payloads
+    onpolicy: bool = False       # negotiate CODEC_ONPOLICY: actors decode
+    #                              (E, 2) [action, logprob] replies and
+    #                              stamp unrolls with the REPLY-borne
+    #                              behavior-param version
 
 
 def run_actor_host(cfg: ActorHostConfig, result_q) -> None:
     """Child entry point: dial the gateway, drive actors, report stats."""
     stats = {"host_id": cfg.host_id, "elapsed_s": 0.0, "iterations": 0,
-             "frames": 0, "episodes": 0, "returns": [], "error": None}
+             "frames": 0, "episodes": 0, "returns": [], "error": None,
+             "unrolls": 0, "param_lag_total": 0}
     try:
         import sys
 
@@ -77,12 +82,27 @@ def run_actor_host(cfg: ActorHostConfig, result_q) -> None:
         transports = [
             SyncSocketTransport.connect(cfg.address,
                                         timeout_s=cfg.connect_timeout_s,
-                                        compress=cfg.compress)
+                                        compress=cfg.compress,
+                                        onpolicy=cfg.onpolicy)
             for _ in cfg.actor_ids]
+        if cfg.onpolicy:
+            # on-policy data is useless without logprobs + version stamps,
+            # so REQUIRE the grant before the first frame crosses the wire
+            # (the grant also closes the negotiation window: no unroll is
+            # ever sent stripped)
+            for tr in transports:
+                if not tr.wait_hello(cfg.connect_timeout_s) \
+                        or not tr.onpolicy_granted:
+                    raise RuntimeError(
+                        "gateway did not grant CODEC_ONPOLICY "
+                        f"(error={tr.error}); on-policy actor hosts need "
+                        "an on-policy gateway")
         actors = [
             Actor(aid, cfg.env_factory, tr, tr.send_trajectory,
                   cfg.unroll, num_envs=cfg.envs_per_actor,
-                  seed=None if cfg.seed is None else cfg.seed + aid)
+                  seed=None if cfg.seed is None else cfg.seed + aid,
+                  version_source=(lambda tr=tr: tr.param_version),
+                  with_logprobs=cfg.onpolicy, stamp_records=cfg.onpolicy)
             for aid, tr in zip(cfg.actor_ids, transports)]
         # pay jit/reset compilation before the measured window (JaxVectorEnv
         # reset is idempotent — fixed keys — so this doesn't perturb the
@@ -115,6 +135,8 @@ def run_actor_host(cfg: ActorHostConfig, result_q) -> None:
         stats["iterations"] = sum(a.iterations for a in actors)
         stats["frames"] = sum(a.frames for a in actors)
         stats["episodes"] = sum(a.episodes for a in actors)
+        stats["unrolls"] = sum(a.unrolls for a in actors)
+        stats["param_lag_total"] = sum(a.param_lag_total for a in actors)
         stats["returns"] = [r for a in actors for r in a.returns[-20:]]
         stats["error"] = next(
             (tr.error for tr in transports if tr.error), None) or next(
@@ -135,7 +157,7 @@ class ActorHostPool:
     def __init__(self, env_factory, num_actors: int, envs_per_actor: int,
                  unroll: int, num_hosts: int = 1,
                  seed: Optional[int] = None, grace_s: float = 90.0,
-                 compress: bool = False):
+                 compress: bool = False, onpolicy: bool = False):
         if not 1 <= num_hosts <= num_actors:
             raise ValueError(
                 f"num_hosts={num_hosts} must be in [1, num_actors={num_actors}]")
@@ -147,6 +169,7 @@ class ActorHostPool:
         self.seed = seed
         self.grace_s = grace_s       # spawn + jax import + jit headroom
         self.compress = compress
+        self.onpolicy = onpolicy
         self.last_stats: List[dict] = []
 
     def _partitions(self) -> List[Tuple[int, ...]]:
@@ -187,7 +210,8 @@ class ActorHostPool:
                 address=addresses[host_id % len(addresses)], host_id=host_id,
                 actor_ids=actor_ids, env_factory=self.env_factory,
                 envs_per_actor=self.envs_per_actor, unroll=self.unroll,
-                seconds=seconds, seed=self.seed, compress=self.compress)
+                seconds=seconds, seed=self.seed, compress=self.compress,
+                onpolicy=self.onpolicy)
             p = ctx.Process(target=run_actor_host, args=(cfg, result_q),
                             daemon=True)
             p.start()

@@ -58,7 +58,7 @@ class DeviceRolloutEngine:
 
     def __init__(self, env, policy_apply: Callable, num_envs: int,
                  unroll: int, *, init_core: Optional[Callable] = None,
-                 seed: int = 0, device=None):
+                 seed: int = 0, device=None, with_logprobs: bool = False):
         self.env = as_jax_env(env)
         self.num_envs = num_envs
         self.unroll = unroll
@@ -66,6 +66,10 @@ class DeviceRolloutEngine:
         self.obs_shape = tuple(getattr(self.env, "obs_shape", ()))
         self._init_core = init_core       # init_core(num_envs) -> core pytree
         self._seed = seed
+        # on-policy rollouts: policy_apply returns (actions, logprobs, core)
+        # and the trajectory pytree gains behavior_logprobs (T, E) f32 —
+        # V-trace's denominator rides the scan instead of a second forward
+        self.with_logprobs = with_logprobs
         # optional explicit placement (engine sharding): the carry is
         # committed to `device` at reset, params are committed per call,
         # and jit then executes the whole fused scan there. None keeps the
@@ -84,12 +88,18 @@ class DeviceRolloutEngine:
             def one_step(c, _):
                 env_state, core, obs, key = c
                 key, sub = jax.random.split(key)
-                actions, core = policy_apply(params, core, obs, sub)
+                if self.with_logprobs:
+                    actions, logprobs, core = policy_apply(params, core, obs,
+                                                           sub)
+                else:
+                    actions, core = policy_apply(params, core, obs, sub)
                 actions = actions.astype(jnp.int32)
                 env_state, nobs, rewards, dones = vstep(env_state, actions)
                 out = {"obs": obs, "actions": actions,
                        "rewards": rewards.astype(jnp.float32),
                        "dones": dones}
+                if self.with_logprobs:
+                    out["behavior_logprobs"] = logprobs.astype(jnp.float32)
                 return (env_state, core, nobs, key), out
 
             return jax.lax.scan(one_step, carry, None, length=T)
@@ -159,7 +169,7 @@ class ShardedRolloutEngine:
     def __init__(self, env, policy_apply: Callable, num_envs: int,
                  unroll: int, *, num_shards: int,
                  init_core: Optional[Callable] = None, seed: int = 0,
-                 devices=None):
+                 devices=None, with_logprobs: bool = False):
         if not isinstance(num_shards, int) or num_shards < 1:
             raise ValueError(
                 f"num_shards must be a positive int, got {num_shards!r}")
@@ -180,7 +190,8 @@ class ShardedRolloutEngine:
             self.engines.append(DeviceRolloutEngine(
                 env, policy_apply, lanes, unroll, init_core=init_core,
                 seed=seed * num_shards + k,
-                device=devices[k % len(devices)]))
+                device=devices[k % len(devices)],
+                with_logprobs=with_logprobs))
         self.num_actions = self.engines[0].num_actions
         self.obs_shape = self.engines[0].obs_shape
         self.devices = [e.device for e in self.engines]

@@ -20,13 +20,17 @@ from repro.core.actor import account_episode_ends, flush_lane_unrolls
 
 class RolloutWorker:
     def __init__(self, worker_id: int, engine, sink: Callable,
-                 param_source: Callable):
+                 param_source: Callable, stamp_records: bool = False):
         """param_source() -> (params, version): latest published params and
-        a monotone version counter (learner steps; 0 before any publish)."""
+        a monotone version counter (learner steps; 0 before any publish).
+        ``stamp_records=True`` writes the behavior ``param_version`` into
+        every flushed lane record — the on-policy queue's admission key
+        (replay records stay byte-identical without it)."""
         self.worker_id = worker_id
         self.engine = engine
         self.sink = sink
         self.param_source = param_source
+        self.stamp_records = stamp_records
         self._stop = threading.Event()
         self._thread: Optional[threading.Thread] = None
         self.episodes = 0
@@ -86,4 +90,6 @@ class RolloutWorker:
             for t in range(T):
                 self.episodes += account_episode_ends(
                     rewards[t], dones[t], self.episode_returns, self.returns)
-            flush_lane_unrolls(traj, self.sink)
+            extra = ({"param_version": np.int64(self.param_version)}
+                     if self.stamp_records else None)
+            flush_lane_unrolls(traj, self.sink, extra=extra)

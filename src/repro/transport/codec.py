@@ -22,6 +22,18 @@ arrays, never code execution. Four frame kinds cover the whole protocol:
     start setting ``FLAG_RLE`` — negotiation per connection, so a plain
     peer never sees a compressed frame.
 
+On-policy metadata (``CODEC_ONPOLICY``): the V-trace training plane needs
+two extras on the wire — the behavior logprob of every sampled action
+(extra named arrays in the ``TRAJ`` dict: ``behavior_logprobs`` per step,
+``param_version`` per unroll) and the learner's param version flowing back
+to actor hosts so unrolls can be staleness-stamped. The version rides the
+``REPLY`` header's otherwise-unused ``actor_id`` slot (u32, 0 =
+unversioned — old peers already ignore it there). Both directions are
+gated on the HELLO grant: a client that wasn't granted ``CODEC_ONPOLICY``
+strips the extra TRAJ keys, so an old gateway never sees them, and an old
+client reading a new gateway's replies sees only a header field it never
+inspected. Negotiation per connection, like compression.
+
 Compression (``FLAG_RLE``): uint8 observation payloads (Atari lanes) are
 run-length encoded as (count u8, value u8) pairs — still raw bytes, NO
 pickle — and only when that actually shrinks the frame; the flag records
@@ -63,7 +75,8 @@ FLAG_RLE = 0x02          # ndarray payload is RLE pairs, not raw bytes
 _KNOWN_FLAGS = FLAG_SCALAR | FLAG_RLE
 
 CODEC_RLE = 0x01         # HELLO capability bit for FLAG_RLE
-SUPPORTED_CODECS = CODEC_RLE
+CODEC_ONPOLICY = 0x02    # HELLO bit: on-policy metadata (see below)
+SUPPORTED_CODECS = CODEC_RLE | CODEC_ONPOLICY
 
 DEFAULT_MAX_FRAME = 64 << 20      # 64 MiB: > any sane lane batch or unroll
 
@@ -208,8 +221,13 @@ def encode_hello(codecs: int) -> bytes:
     return _frame(KIND_HELLO, 0, 0, 0, _U32.pack(codecs & 0xFFFFFFFF))
 
 
-def encode_reply(request_id: int, actions: np.ndarray) -> bytes:
-    return _frame(KIND_REPLY, 0, request_id, 0, _encode_ndarray(actions))
+def encode_reply(request_id: int, actions: np.ndarray,
+                 version: int = 0) -> bytes:
+    """``version`` (the behavior-param version serving this reply) rides
+    the header's actor_id slot — unused on replies since v1, so old peers
+    decode it and ignore it (see module docstring, CODEC_ONPOLICY)."""
+    return _frame(KIND_REPLY, version & 0xFFFFFFFF, request_id, 0,
+                  _encode_ndarray(actions))
 
 
 def encode_error(request_id: int, message: str) -> bytes:

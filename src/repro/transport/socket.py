@@ -41,16 +41,48 @@ from typing import Callable, Dict, Optional, Tuple
 import numpy as np
 
 from repro.core.inference import InferenceRequest, ReplyError
-from repro.transport.codec import (CODEC_RLE, DEFAULT_MAX_FRAME, FLAG_RLE,
-                                   KIND_ERROR, KIND_HELLO, KIND_REPLY,
-                                   KIND_REQUEST, KIND_TRAJ, SUPPORTED_CODECS,
-                                   CodecError, decode_frame, encode_error,
-                                   encode_hello, encode_reply,
-                                   encode_request, encode_trajectory,
-                                   read_frame, recv_exact)
+from repro.transport.codec import (CODEC_ONPOLICY, CODEC_RLE,
+                                   DEFAULT_MAX_FRAME, FLAG_RLE, KIND_ERROR,
+                                   KIND_HELLO, KIND_REPLY, KIND_REQUEST,
+                                   KIND_TRAJ, SUPPORTED_CODECS, CodecError,
+                                   decode_frame, encode_error, encode_hello,
+                                   encode_reply, encode_request,
+                                   encode_trajectory, read_frame, recv_exact)
 from repro.transport.local import Transport
 
 Address = Tuple[str, int]
+
+# TRAJ keys only sent once the gateway granted CODEC_ONPOLICY (an old
+# gateway would forward them into a replay sink that never asked for them)
+_ONPOLICY_TRAJ_KEYS = ("behavior_logprobs", "param_version")
+
+
+def _offer_mask(compress: bool, onpolicy: bool) -> int:
+    """HELLO capability offer: only the codecs the caller actually wants —
+    offering everything we support would silently enable features the
+    deployment didn't opt into."""
+    return ((CODEC_RLE if compress else 0)
+            | (CODEC_ONPOLICY if onpolicy else 0))
+
+
+def _apply_hello_grant(transport, frame) -> None:
+    """Apply a gateway HELLO grant to a client transport — ONE definition
+    for every read path (async recv loop, sync wait_hello, sync reply
+    read), so a future capability bit cannot be granted on one path and
+    missed on another."""
+    transport._rle = bool(frame.codecs & CODEC_RLE)
+    transport._onpolicy = bool(frame.codecs & CODEC_ONPOLICY)
+
+
+def _strip_onpolicy_keys(arrays: Dict[str, np.ndarray]
+                         ) -> Dict[str, np.ndarray]:
+    """Drop on-policy metadata before sending TRAJ to a peer that did not
+    grant CODEC_ONPOLICY (interop: the frame stays decodable AND
+    semantically what an old gateway expects)."""
+    if any(k in arrays for k in _ONPOLICY_TRAJ_KEYS):
+        return {k: v for k, v in arrays.items()
+                if k not in _ONPOLICY_TRAJ_KEYS}
+    return arrays
 
 
 class _ScalarReply:
@@ -70,7 +102,7 @@ class SocketTransport(Transport):
 
     def __init__(self, sock: _socket.socket,
                  max_frame: int = DEFAULT_MAX_FRAME,
-                 compress: bool = False):
+                 compress: bool = False, onpolicy: bool = False):
         sock.setsockopt(_socket.IPPROTO_TCP, _socket.TCP_NODELAY, 1)
         self._sock = sock
         self.max_frame = max_frame
@@ -80,15 +112,22 @@ class SocketTransport(Transport):
         self._next_id = 1          # 0 is the broadcast id — never assigned
         self._closed = threading.Event()
         self.error: Optional[str] = None
-        # compression starts OFF and only turns on when the gateway's HELLO
-        # grants it (requests sent in the negotiation window go raw — a
+        # capabilities start OFF and only turn on when the gateway's HELLO
+        # grants them (requests sent in the negotiation window go raw — a
         # correct, just unoptimized, encoding)
         self._rle = False
-        if compress:
+        self._onpolicy = False
+        self._hello = threading.Event()
+        self.param_version = 0     # latest behavior version seen on replies
+        offer = _offer_mask(compress, onpolicy)
+        self._onpolicy_offered = bool(offer & CODEC_ONPOLICY)
+        if offer:
             try:
-                sock.sendall(encode_hello(SUPPORTED_CODECS))
+                sock.sendall(encode_hello(offer))
             except OSError as e:
                 self.error = f"send failed: {e}"
+        else:
+            self._hello.set()      # nothing to negotiate
         self._recv_thread = threading.Thread(target=self._recv_loop,
                                              daemon=True)
         self._recv_thread.start()
@@ -96,7 +135,8 @@ class SocketTransport(Transport):
     @classmethod
     def connect(cls, address: Address, timeout_s: float = 10.0,
                 max_frame: int = DEFAULT_MAX_FRAME,
-                compress: bool = False) -> "SocketTransport":
+                compress: bool = False, onpolicy: bool = False
+                ) -> "SocketTransport":
         """Dial the gateway, retrying while it binds (actor hosts and the
         learner box start concurrently)."""
         deadline = time.perf_counter() + timeout_s
@@ -104,11 +144,23 @@ class SocketTransport(Transport):
             try:
                 sock = _socket.create_connection(address, timeout=2.0)
                 sock.settimeout(None)
-                return cls(sock, max_frame=max_frame, compress=compress)
+                return cls(sock, max_frame=max_frame, compress=compress,
+                           onpolicy=onpolicy)
             except OSError:
                 if time.perf_counter() >= deadline:
                     raise
                 time.sleep(0.05)
+
+    @property
+    def onpolicy_granted(self) -> bool:
+        """True once the gateway's HELLO granted CODEC_ONPOLICY."""
+        return self._onpolicy
+
+    def wait_hello(self, timeout_s: float = 5.0) -> bool:
+        """Block until the gateway answered our HELLO (or no offer was
+        made). Returns False on timeout/error — callers that REQUIRE a
+        capability should fail fast rather than stream stripped frames."""
+        return self._hello.wait(timeout=timeout_s) and self.error is None
 
     # ------------------------------------------------------- actor surface
 
@@ -140,6 +192,13 @@ class SocketTransport(Transport):
         is already being torn down on `error`."""
         if self.error is not None or self._closed.is_set():
             return
+        if self._onpolicy_offered and not self._hello.is_set():
+            # an offered grant races the first unroll only at connect
+            # time (the gateway answers HELLO immediately): wait it out
+            # rather than strip metadata the deployment asked for
+            self._hello.wait(timeout=5.0)
+        if not self._onpolicy:
+            arrays = _strip_onpolicy_keys(arrays)
         try:
             self._send(encode_trajectory(actor_id, arrays))
         except OSError as e:
@@ -181,12 +240,16 @@ class SocketTransport(Transport):
                 if frame is None:                      # clean peer close
                     break
                 if frame.kind == KIND_REPLY:
+                    if frame.actor_id > self.param_version:
+                        # behavior-param version rides the actor_id slot
+                        self.param_version = frame.actor_id
                     reply = self._pop(frame.request_id)
                     if reply is not None:
                         reply.put(frame.array)
                 elif frame.kind == KIND_HELLO:
                     # the gateway granted (or refused) our codec offer
-                    self._rle = bool(frame.codecs & CODEC_RLE)
+                    _apply_hello_grant(self, frame)
+                    self._hello.set()
                 elif frame.kind == KIND_ERROR:
                     if frame.request_id == 0:          # broadcast: all fail
                         self._fail(frame.message)
@@ -297,7 +360,8 @@ class _WireReply:
             frame = encode_error(self._request_id, result.message)
         else:
             self._gateway._bump("reply_frames")
-            frame = encode_reply(self._request_id, np.asarray(result))
+            frame = encode_reply(self._request_id, np.asarray(result),
+                                 version=self._gateway._version())
         self._writer.send(frame)
 
 
@@ -331,21 +395,53 @@ class SyncSocketTransport(Transport):
 
     def __init__(self, sock: _socket.socket,
                  max_frame: int = DEFAULT_MAX_FRAME,
-                 compress: bool = False):
+                 compress: bool = False, onpolicy: bool = False):
         sock.setsockopt(_socket.IPPROTO_TCP, _socket.TCP_NODELAY, 1)
         self._sock = sock
         self.max_frame = max_frame
         self._buf = bytearray()
         self._next_id = 1
         self._rle = False        # enabled by the gateway's HELLO grant
+        self._onpolicy = False
+        self._hello_seen = False
+        self.param_version = 0   # latest behavior version seen on replies
         self.error: Optional[str] = None
-        if compress:
+        offer = _offer_mask(compress, onpolicy)
+        if not offer:
+            self._hello_seen = True          # nothing to negotiate
+        else:
             try:
-                sock.sendall(encode_hello(SUPPORTED_CODECS))
+                sock.sendall(encode_hello(offer))
             except OSError as e:
                 self.error = f"send failed: {e}"
 
     connect = classmethod(SocketTransport.connect.__func__)
+
+    @property
+    def onpolicy_granted(self) -> bool:
+        """True once the gateway's HELLO granted CODEC_ONPOLICY."""
+        return self._onpolicy
+
+    def wait_hello(self, timeout_s: float = 5.0) -> bool:
+        """Drain frames in the calling thread until the gateway's HELLO
+        answer lands (only HELLO/ERROR can precede our first request).
+        Returns False on timeout/error — a caller that REQUIRES a
+        capability should fail fast rather than stream stripped frames."""
+        deadline = time.perf_counter() + timeout_s
+        while not self._hello_seen and self.error is None:
+            try:
+                frame = self._next_frame(deadline)
+            except queue.Empty:
+                return False
+            except (ConnectionError, CodecError) as e:
+                self.error = str(e)
+                return False
+            if frame.kind == KIND_HELLO:
+                _apply_hello_grant(self, frame)
+                self._hello_seen = True
+            elif frame.kind == KIND_ERROR:
+                self.error = frame.message
+        return self._hello_seen and self.error is None
 
     def submit_batch(self, actor_id: int, obs: np.ndarray) -> _SyncReply:
         request_id = self._next_id
@@ -371,6 +467,8 @@ class SyncSocketTransport(Transport):
                         actor_id: int = 0):
         if self.error is not None:
             return
+        if not self._onpolicy:
+            arrays = _strip_onpolicy_keys(arrays)
         try:
             self._sock.settimeout(None)      # see submit_batch
             self._sock.sendall(encode_trajectory(actor_id, arrays))
@@ -427,11 +525,15 @@ class SyncSocketTransport(Transport):
             while True:
                 frame = self._next_frame(deadline)
                 if frame.kind == KIND_REPLY:
+                    if frame.actor_id > self.param_version:
+                        # behavior-param version rides the actor_id slot
+                        self.param_version = frame.actor_id
                     if frame.request_id == request_id:
                         return frame.array
                     continue            # stale reply from an abandoned rid
                 if frame.kind == KIND_HELLO:
-                    self._rle = bool(frame.codecs & CODEC_RLE)
+                    _apply_hello_grant(self, frame)
+                    self._hello_seen = True
                     continue
                 if frame.kind == KIND_ERROR:
                     if frame.request_id in (0, request_id):
@@ -461,11 +563,22 @@ class InferenceGateway:
     def __init__(self, server, sink: Optional[Callable] = None,
                  host: str = "127.0.0.1", port: int = 0,
                  max_frame: int = DEFAULT_MAX_FRAME,
-                 gil_switch_interval_s: Optional[float] = 1e-3):
+                 gil_switch_interval_s: Optional[float] = 1e-3,
+                 version_source: Optional[Callable] = None,
+                 onpolicy: bool = False):
         self.server = server
         self.sink = sink
         self._bind = (host, port)
         self.max_frame = max_frame
+        # learner's published param version, stamped onto every REPLY so
+        # remote actor hosts can staleness-stamp their unrolls (on-policy
+        # plane); None keeps replies at version 0 (unversioned)
+        self.version_source = version_source
+        # deployment policy, not codec capability: only an on-policy
+        # gateway GRANTS CODEC_ONPOLICY — granting it from a replay-based
+        # system would invite TRAJ metadata its sink never asked for
+        # (mirror of the client-side _offer_mask principle)
+        self.onpolicy = onpolicy
         # every wire reply crosses two thread wakeups in this process
         # (reader -> server loop -> send); under CPython's default 5 ms GIL
         # slice a compute-bound peer thread turns each wakeup into a
@@ -489,6 +602,9 @@ class InferenceGateway:
         # N reader threads + the server loop all count; += is not atomic
         with self._lock:
             self.stats[key] += 1
+
+    def _version(self) -> int:
+        return self.version_source() if self.version_source else 0
 
     def start(self) -> Address:
         if self._gil_interval is not None:
@@ -565,10 +681,12 @@ class InferenceGateway:
                         self.sink(frame.arrays)
                 elif frame.kind == KIND_HELLO:
                     # negotiate per connection: grant the intersection of
-                    # the client's offer and what this codec supports
+                    # the client's offer, what this codec supports, and
+                    # what this gateway's deployment opted into
                     self._bump("hello_frames")
-                    writer.send(encode_hello(
-                        frame.codecs & SUPPORTED_CODECS))
+                    grant = SUPPORTED_CODECS if self.onpolicy \
+                        else SUPPORTED_CODECS & ~CODEC_ONPOLICY
+                    writer.send(encode_hello(frame.codecs & grant))
                 else:
                     raise CodecError(
                         f"unexpected frame kind {frame.kind} on gateway")

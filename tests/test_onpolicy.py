@@ -1,0 +1,391 @@
+"""On-policy training plane: queue admission/accounting, batcher, learner
+shutdown, V-trace learning, and `SeedSystem(algo="vtrace")` across all
+three backends — plus the r2d2-default parity contract.
+"""
+
+import queue as _queue
+import threading
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.actor import Actor, flush_lane_unrolls
+from repro.core.inference import InferenceServer
+from repro.core.learner import BatchSourceClosed, Learner
+from repro.core.system import SeedSystem
+from repro.envs.catch import CatchEnv
+from repro.onpolicy import (Closed, TrajectoryQueue, VTraceBatcher,
+                            VTraceLearner, assemble_vtrace_batch,
+                            make_device_sampling_policy,
+                            make_vtrace_train_step, mlp_actor_critic)
+from repro.optim import adamw
+
+OBS_DIM = 50          # CatchEnv() default 10x5
+
+
+def _unroll(t=4, version=None, value=1.0):
+    u = {"obs": np.full((t, 3), value, np.float32),
+         "actions": np.zeros((t,), np.int32),
+         "rewards": np.ones((t,), np.float32),
+         "dones": np.zeros((t,), np.float32),
+         "behavior_logprobs": np.full((t,), -0.5, np.float32)}
+    if version is not None:
+        u["param_version"] = np.int64(version)
+    return u
+
+
+def _ledger_conserved(s):
+    return s["frames_generated"] == (s["frames_trained"] + s["frames_dropped"]
+                                     + s["frames_pending"])
+
+
+def _make_state(params, opt):
+    return {"params": params, "opt_state": opt.init(params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+# --------------------------------------------------------- TrajectoryQueue
+
+def test_queue_admission_and_conservation():
+    version = {"v": 0}
+    q = TrajectoryQueue(capacity=4, max_param_lag=2,
+                        version_source=lambda: version["v"])
+    for i in range(3):
+        q.put(_unroll(t=5, version=0))
+    assert q.stats()["frames_pending"] == 15
+    version["v"] = 10                       # everything pending is now stale
+    q.put(_unroll(t=5, version=9))          # lag 1: admitted
+    q.put(_unroll(t=5, version=3))          # lag 7: dropped at admission
+    out = q.pop_batch(1, timeout=1.0)       # stale heads purged at pop
+    assert len(out) == 1
+    s = q.stats()
+    assert s["frames_trained"] == 5
+    assert s["frames_dropped_stale"] == 20  # 3 aged in queue + 1 at the door
+    assert s["frames_pending"] == 0
+    assert _ledger_conserved(s), s
+    q.close()
+    assert _ledger_conserved(q.stats())
+
+
+def test_queue_overflow_evicts_oldest():
+    q = TrajectoryQueue(capacity=2)
+    for i in range(4):
+        q.put(_unroll(t=3, version=i))
+    s = q.stats()
+    assert s["frames_dropped_overflow"] == 6
+    assert _ledger_conserved(s)
+    kept = q.pop_batch(2, timeout=1.0)
+    # the two FRESHEST unrolls survived (on-policy keeps fresh data)
+    assert [int(u["param_version"]) for u in kept] == [2, 3]
+
+
+def test_queue_close_drains_pending_and_wakes_consumers():
+    q = TrajectoryQueue(capacity=8)
+    q.put(_unroll(t=4))
+    got = []
+
+    def consumer():
+        try:
+            q.pop_batch(5)                  # more than will ever arrive
+        except Closed:
+            got.append("closed")
+
+    t = threading.Thread(target=consumer, daemon=True)
+    t.start()
+    time.sleep(0.1)
+    q.close()
+    t.join(timeout=2.0)
+    assert not t.is_alive()
+    assert got == ["closed"]
+    s = q.stats()
+    assert s["frames_dropped_shutdown"] == 4
+    assert s["frames_pending"] == 0
+    assert _ledger_conserved(s)
+    q.put(_unroll(t=4))                     # post-close puts are counted too
+    assert _ledger_conserved(q.stats())
+
+
+def test_queue_validation():
+    with pytest.raises(ValueError):
+        TrajectoryQueue(capacity=0)
+    with pytest.raises(ValueError):
+        TrajectoryQueue(capacity=4, max_param_lag=-1)
+    q = TrajectoryQueue(capacity=4)
+    with pytest.raises(ValueError):
+        q.pop_batch(0)
+    with pytest.raises(TimeoutError):
+        q.pop_batch(1, timeout=0.05)
+
+
+# ---------------------------------------------------------------- batcher
+
+def test_assemble_vtrace_batch_shapes_and_discounts():
+    unrolls = [_unroll(t=6, version=i) for i in range(3)]
+    unrolls[1]["dones"][2] = 1.0
+    batch = assemble_vtrace_batch(unrolls, gamma=0.9)
+    assert batch["obs"].shape == (3, 6, 3)
+    assert batch["actions"].dtype == np.int32
+    assert batch["behavior_logprobs"].shape == (3, 6)
+    assert batch["discounts"][1, 2] == 0.0          # terminal cuts
+    assert batch["discounts"][0, 0] == pytest.approx(0.9)
+    assert batch["param_version"].tolist() == [0, 1, 2]
+    with pytest.raises(KeyError):
+        bad = _unroll(t=6)
+        del bad["behavior_logprobs"]
+        assemble_vtrace_batch([bad], gamma=0.9)
+    with pytest.raises(ValueError):
+        assemble_vtrace_batch([], gamma=0.9)
+
+
+def test_batcher_raises_batch_source_closed():
+    q = TrajectoryQueue(capacity=8)
+    b = VTraceBatcher(q, batch_size=2, gamma=0.99, poll_timeout_s=0.05)
+    q.close()
+    with pytest.raises(BatchSourceClosed):
+        b()
+
+
+# ------------------------------------------------- learner shutdown (fix)
+
+def test_learner_stop_poisons_blocking_batch_source():
+    """Regression: a batch_fn blocking on an empty on-policy queue used to
+    hang stop()/join() forever; the poison seam closes the queue and the
+    thread exits promptly and cleanly."""
+    q = TrajectoryQueue(capacity=8)
+    batcher = VTraceBatcher(q, batch_size=4, poll_timeout_s=None)
+
+    def train_step(state, batch):            # never reached
+        return state, {}
+
+    lr = Learner(train_step, {"step": np.zeros(())}, batcher, poison=q.close)
+    lr.start()
+    time.sleep(0.2)                          # let it block inside pop_batch
+    t0 = time.perf_counter()
+    lr.stop()
+    lr.join(timeout=5.0)
+    assert time.perf_counter() - t0 < 2.0, "learner did not stop promptly"
+    assert not lr._thread.is_alive()
+    assert lr.error is None                  # clean shutdown, not a crash
+
+
+def test_seed_system_learner_stops_with_empty_replay():
+    """Same regression on the replay path: min_replay never reached, the
+    polling batch_fn must observe learner.stopped and bail."""
+
+    def policy_step(obs, ids):
+        return np.zeros((obs.shape[0],), np.int32)
+
+    def train_step(state, batch):
+        return state, {}
+
+    sys_ = SeedSystem(env_factory=CatchEnv, policy_step=policy_step,
+                      num_actors=1, unroll=4, train_step=train_step,
+                      state={"step": np.zeros(())}, min_replay=10 ** 9)
+    sys_.learner.start()
+    time.sleep(0.2)
+    t0 = time.perf_counter()
+    sys_.learner.stop()
+    sys_.learner.join(timeout=5.0)
+    assert time.perf_counter() - t0 < 2.0
+    assert not sys_.learner._thread.is_alive()
+    assert sys_.learner.error is None
+
+
+# --------------------------------------------------- V-trace learner math
+
+def test_vtrace_train_step_learns_catch():
+    """Direct (threadless) loop: device-engine rollouts with behavior
+    logprobs -> assemble -> train_step; average episode reward on Catch
+    must clearly improve. This is the e2e anchor for the on-policy math
+    without scheduler noise."""
+    from repro.rollout import DeviceRolloutEngine
+
+    def env_factory():
+        return CatchEnv(rows=6, cols=4)
+
+    init_fn, apply_fn = mlp_actor_critic(24, 3, hidden=32)
+    opt = adamw(3e-3)
+    state = _make_state(init_fn(jax.random.PRNGKey(0)), opt)
+    step = jax.jit(make_vtrace_train_step(apply_fn, opt, entropy_coef=0.003))
+    engine = DeviceRolloutEngine(env_factory,
+                                 make_device_sampling_policy(apply_fn),
+                                 num_envs=16, unroll=12, with_logprobs=True)
+
+    def avg_return(params, seed):
+        ev = DeviceRolloutEngine(env_factory,
+                                 make_device_sampling_policy(apply_fn),
+                                 num_envs=16, unroll=30, seed=seed,
+                                 with_logprobs=True)
+        traj = ev.rollout(params)
+        return float(traj["rewards"].sum() / max(traj["dones"].sum(), 1.0))
+
+    before = avg_return(state["params"], seed=101)
+    for i in range(150):
+        traj = engine.rollout(state["params"])
+        unrolls = []
+        flush_lane_unrolls(traj, unrolls.append)
+        batch = assemble_vtrace_batch(unrolls, gamma=0.95)
+        state, metrics = step(state, batch)
+    assert np.isfinite(float(metrics["loss"]))
+    after = avg_return(state["params"], seed=101)
+    assert after > before + 0.3, (before, after)
+    assert after > 0.2, (before, after)
+
+
+# ------------------------------------- SeedSystem(algo="vtrace") backends
+
+def _vtrace_host_system(transport="inproc", **kw):
+    init_fn, apply_fn = mlp_actor_critic(OBS_DIM, 3)
+    vl = VTraceLearner(apply_fn, adamw(1e-3))
+    params = init_fn(jax.random.PRNGKey(0))
+    state = vl.init_state(params)
+    policy = vl.sampling_policy(params)
+    for lanes in (4, 8):                                   # pre-compile
+        policy(np.zeros((lanes, OBS_DIM), np.float32), None)
+    vl.warmup(state, batch_size=4, unroll=8, obs_shape=(OBS_DIM,))
+    return SeedSystem(env_factory=CatchEnv, policy_step=policy,
+                      num_actors=2, unroll=8, envs_per_actor=4,
+                      deadline_ms=1.0, transport=transport,
+                      algo="vtrace", train_step=vl.train_step, state=state,
+                      learner_batch=4, policy_publish=policy.publish, **kw)
+
+
+def _assert_trained_and_conserved(stats):
+    assert stats["learner_error"] is None, stats["learner_error"]
+    assert stats["inference_error"] is None, stats["inference_error"]
+    assert stats["learner_steps"] > 0, stats
+    onp = stats["onpolicy"]
+    assert _ledger_conserved(onp), onp
+    assert onp["frames_pending"] == 0, onp
+    assert onp["frames_trained"] > 0, onp
+    assert stats["mean_param_lag"] >= 0.0
+
+
+def test_vtrace_trains_inproc_host_backend():
+    sys_ = _vtrace_host_system(max_param_lag=50)
+    sys_.warmup()
+    stats = sys_.run(seconds=1.5)
+    _assert_trained_and_conserved(stats)
+    assert stats["algo"] == "vtrace"
+    assert stats["unroll_flushes"] > 0
+
+
+def test_vtrace_trains_device_backend():
+    init_fn, apply_fn = mlp_actor_critic(OBS_DIM, 3)
+    vl = VTraceLearner(apply_fn, adamw(1e-3))
+    state = vl.init_state(init_fn(jax.random.PRNGKey(0)))
+    vl.warmup(state, batch_size=4, unroll=8, obs_shape=(OBS_DIM,))
+    sys_ = SeedSystem(env_factory=CatchEnv, backend="device",
+                      policy_apply=vl.device_policy_apply(),
+                      num_actors=2, unroll=8, envs_per_actor=4,
+                      algo="vtrace", train_step=vl.train_step, state=state,
+                      learner_batch=4, queue_capacity=32)
+    sys_.warmup()
+    stats = sys_.run(seconds=1.5)
+    _assert_trained_and_conserved(stats)
+    # the device engine outruns a real learner: the bounded queue must
+    # have dropped (this is the algorithmic knee, measured)
+    assert stats["onpolicy"]["frames_dropped"] > 0, stats["onpolicy"]
+
+
+def test_vtrace_trains_socket_backend():
+    sys_ = _vtrace_host_system(transport="socket", num_actor_hosts=1,
+                               max_param_lag=100)
+    stats = sys_.run(seconds=2.0)
+    assert stats["host_errors"] == [], stats["host_errors"]
+    _assert_trained_and_conserved(stats)
+    assert stats["gateway_traj_frames"] > 0
+
+
+# ----------------------------------------------------- r2d2 default parity
+
+def det_policy(obs, ids):
+    return (np.abs(obs.reshape(obs.shape[0], -1)).sum(axis=1) * 31.0
+            ).astype(np.int64) % 3
+
+
+def _collect_records(version_source):
+    srv = InferenceServer(det_policy, max_batch=8, deadline_ms=2.0)
+    srv.start()
+    records = []
+    a = Actor(0, CatchEnv, srv, records.append, unroll=4, num_envs=2,
+              version_source=version_source)
+    a.vec.reset()
+    a.start()
+    while len(records) < 8:
+        time.sleep(0.01)
+    a.stop()
+    a.join()
+    srv.stop()
+    return records[:8]
+
+
+def test_r2d2_actor_records_bit_identical_with_version_source():
+    """The satellite metric must be free: wiring a version_source into the
+    default (r2d2) actors changes NOTHING about the records they sink —
+    same keys, same dtypes, same bytes."""
+    base = _collect_records(version_source=None)
+    wired = _collect_records(version_source=lambda: 123)
+    for ra, rb in zip(base, wired):
+        assert sorted(ra) == sorted(rb) == \
+            ["actions", "dones", "obs", "rewards"]
+        for k in ra:
+            assert ra[k].dtype == rb[k].dtype, k
+            assert np.array_equal(ra[k], rb[k]), k
+
+
+def test_r2d2_default_throughput_and_replay_schema_unchanged():
+    sys_ = SeedSystem(env_factory=CatchEnv, policy_step=det_policy,
+                      num_actors=2, unroll=4, envs_per_actor=2,
+                      deadline_ms=1.0)
+    sys_.warmup()
+    stats = sys_.run(seconds=0.5, with_learner=False)
+    assert stats["algo"] == "r2d2"
+    assert "onpolicy" not in stats
+    assert stats["mean_param_lag"] == 0.0           # no learner published
+    batch, idx, w = sys_.replay.sample(2)
+    assert sorted(batch) == ["actions", "dones", "obs", "rewards"]
+
+
+def test_algo_validation():
+    with pytest.raises(ValueError, match="algo"):
+        SeedSystem(env_factory=CatchEnv, policy_step=det_policy,
+                   num_actors=1, unroll=4, algo="ppo")
+    # every vtrace-only knob is rejected (not silently ignored) on r2d2
+    with pytest.raises(ValueError, match="max_param_lag"):
+        SeedSystem(env_factory=CatchEnv, policy_step=det_policy,
+                   num_actors=1, unroll=4, max_param_lag=3)
+    with pytest.raises(ValueError, match="queue_capacity"):
+        SeedSystem(env_factory=CatchEnv, policy_step=det_policy,
+                   num_actors=1, unroll=4, queue_capacity=8)
+    with pytest.raises(ValueError, match="gamma"):
+        SeedSystem(env_factory=CatchEnv, policy_step=det_policy,
+                   num_actors=1, unroll=4, gamma=0.9)
+
+
+# ------------------------------------------------------------ model point
+
+def test_system_model_onpolicy_operating_point():
+    from repro.core.provisioning import fit_paper_actor_model
+
+    model, _ = fit_paper_actor_model()
+    kw = dict(learner_step_s=8.0, batch_size=8, unroll=20,
+              queue_capacity=64)
+    below = model.onpolicy_point(16, **kw)
+    at = model.onpolicy_point(40, **kw)
+    above = model.onpolicy_point(256, **kw)
+    # below the knee nothing drops and staleness is ~one learner step
+    assert below.drop_rate == 0.0 and not below.learner_bound
+    assert below.mean_param_lag == pytest.approx(1.0)
+    # past the knee: drop rate rises, staleness is the queue depth in
+    # batches, and trained frames stop growing (the algorithmic ceiling)
+    assert above.learner_bound and above.drop_rate > 0.3
+    assert above.mean_param_lag == pytest.approx(64 / 8)
+    assert above.frames_trained_per_s == pytest.approx(
+        at.frames_trained_per_s, rel=0.2)
+    assert above.frames_generated_per_s > at.frames_trained_per_s
+    with pytest.raises(ValueError):
+        model.onpolicy_point(4, learner_step_s=0.0, batch_size=8, unroll=20)

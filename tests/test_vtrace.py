@@ -1,0 +1,129 @@
+"""V-trace math property tests (satellite of the on-policy plane).
+
+The correction in `core.vtrace` is now load-bearing (the `algo="vtrace"`
+learner trains from it), so its limiting cases are pinned down
+independently of the naive-recursion check in test_rl_core:
+
+  1. agreement with a slow pure-Python reference on random shapes
+     (scalar triple loop — independent of the vectorized numpy reference
+     test_rl_core uses);
+  2. on-policy data with untruncated weights (rho_bar = c_bar = inf)
+     reduces to the discounted bootstrapped return, INDEPENDENT of the
+     value estimates (the correction telescopes them away);
+  3. zero truncation (rho_bar = c_bar = 0) collapses to the value
+     baseline: vs == values, zero advantages;
+  4. truncation monotonicity: rhos are elementwise monotone in rho_bar
+     and capped by it, and with uniformly non-negative deltas the
+     correction magnitude is monotone in c_bar.
+
+Seed-parametrized rather than hypothesis-driven so the whole file runs
+even where hypothesis is absent (test_rl_core covers the hypothesis
+variant of the recursion check when it is installed).
+"""
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core.vtrace import vtrace
+
+SEEDS = [0, 1, 2, 3, 17, 40964096]
+SHAPES = [(1, 1), (1, 2), (2, 5), (3, 8), (5, 12)]
+
+
+def _slow_vtrace(tlp, blp, r, d, v, boot, rho_bar, c_bar):
+    """Scalar, per-element transcription of Espeholt et al. eq. (1)."""
+    b, t = r.shape
+    vs = np.zeros((b, t))
+    for bi in range(b):
+        acc = 0.0
+        for ti in reversed(range(t)):
+            iw = np.exp(tlp[bi, ti] - blp[bi, ti])
+            rho = min(rho_bar, iw)
+            c = min(c_bar, iw)
+            v_next = v[bi, ti + 1] if ti + 1 < t else boot[bi]
+            delta = rho * (r[bi, ti] + d[bi, ti] * v_next - v[bi, ti])
+            acc = delta + d[bi, ti] * c * acc
+            vs[bi, ti] = v[bi, ti] + acc
+    return vs
+
+
+def _random_inputs(rng, b, t):
+    tlp = rng.normal(size=(b, t)) * 0.4
+    blp = rng.normal(size=(b, t)) * 0.4
+    r = rng.normal(size=(b, t))
+    d = rng.uniform(0.7, 1.0, size=(b, t)) * (rng.random((b, t)) > 0.15)
+    v = rng.normal(size=(b, t))
+    boot = rng.normal(size=(b,))
+    return tlp, blp, r, d, v, boot
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+@pytest.mark.parametrize("rho_bar,c_bar",
+                         [(0.7, 0.5), (1.0, 1.0), (2.5, 3.0)])
+def test_vtrace_matches_slow_python_reference(shape, rho_bar, c_bar):
+    b, t = shape
+    rng = np.random.default_rng(1000 * b + t)
+    tlp, blp, r, d, v, boot = _random_inputs(rng, b, t)
+    out = vtrace(*map(jnp.asarray, (tlp, blp, r, d, v, boot)),
+                 rho_bar=rho_bar, c_bar=c_bar)
+    expected = _slow_vtrace(tlp, blp, r, d, v, boot, rho_bar, c_bar)
+    np.testing.assert_allclose(np.asarray(out.vs), expected, atol=1e-4)
+
+
+@pytest.mark.parametrize("seed", SEEDS)
+def test_onpolicy_untruncated_vtrace_is_nstep_discounted_return(seed):
+    """Behavior == target and rho_bar = c_bar = inf: every importance
+    weight is exactly 1, the recursion telescopes, and vs_t is the
+    discounted return bootstrapped at the horizon — regardless of the
+    value estimates plugged in."""
+    rng = np.random.default_rng(seed)
+    b, t = int(rng.integers(1, 5)), int(rng.integers(2, 11))
+    lp = rng.normal(size=(b, t)) * 0.5           # SAME for target/behavior
+    r = rng.normal(size=(b, t))
+    d = rng.uniform(0.5, 1.0, size=(b, t)) * (rng.random((b, t)) > 0.2)
+    v = rng.normal(size=(b, t)) * 10.0           # wild values: must cancel
+    boot = rng.normal(size=(b,))
+    out = vtrace(jnp.asarray(lp), jnp.asarray(lp), jnp.asarray(r),
+                 jnp.asarray(d), jnp.asarray(v), jnp.asarray(boot),
+                 rho_bar=np.inf, c_bar=np.inf)
+    expected = np.zeros((b, t))
+    acc = boot.copy()
+    for ti in reversed(range(t)):
+        acc = r[:, ti] + d[:, ti] * acc
+        expected[:, ti] = acc
+    np.testing.assert_allclose(np.asarray(out.vs), expected, atol=1e-4)
+
+
+def test_zero_truncation_collapses_to_value_baseline():
+    rng = np.random.default_rng(7)
+    tlp, blp, r, d, v, boot = _random_inputs(rng, 3, 8)
+    out = vtrace(*map(jnp.asarray, (tlp, blp, r, d, v, boot)),
+                 rho_bar=0.0, c_bar=0.0)
+    np.testing.assert_allclose(np.asarray(out.vs), v, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(out.pg_advantages),
+                               np.zeros_like(r), atol=1e-6)
+
+
+@pytest.mark.parametrize("seed", SEEDS)
+def test_truncation_monotonicity(seed):
+    rng = np.random.default_rng(seed)
+    b, t = int(rng.integers(1, 5)), int(rng.integers(2, 9))
+    tlp, blp, r, d, v, boot = _random_inputs(rng, b, t)
+    args = tuple(map(jnp.asarray, (tlp, blp, r, d, v, boot)))
+    # rhos: elementwise monotone in rho_bar, capped by it
+    lo = vtrace(*args, rho_bar=0.5, c_bar=1.0)
+    hi = vtrace(*args, rho_bar=2.0, c_bar=1.0)
+    assert np.all(np.asarray(lo.rhos) <= np.asarray(hi.rhos) + 1e-7)
+    assert np.all(np.asarray(lo.rhos) <= 0.5 + 1e-7)
+    assert np.all(np.asarray(hi.rhos) <= 2.0 + 1e-7)
+    # with uniformly non-negative deltas (positive rewards, zero values)
+    # the accumulated correction grows with c_bar
+    r_pos = np.abs(r)
+    zeros = np.zeros_like(v)
+    a2 = tuple(map(jnp.asarray, (tlp, blp, r_pos, d, zeros,
+                                 np.zeros_like(boot))))
+    small = vtrace(*a2, rho_bar=1.0, c_bar=0.2)
+    big = vtrace(*a2, rho_bar=1.0, c_bar=1.5)
+    assert np.all(np.asarray(small.vs) <= np.asarray(big.vs) + 1e-6)

@@ -605,3 +605,102 @@ def test_seed_system_socket_transport_end_to_end():
             break
     assert best_rel >= 0.25, \
         f"socket transport {best_rel:.2f}x in-proc: wire path regressed"
+
+
+def test_codec_reply_version_rides_actor_id_slot():
+    """CODEC_ONPOLICY wire shape: the behavior-param version travels in
+    the REPLY header's (otherwise unused) actor_id field — old decoders
+    see a field they never inspected, new ones read the version."""
+    wire = codec.encode_reply(9, np.arange(4, dtype=np.int32), version=17)
+    frame = codec.read_frame(io.BytesIO(wire).read)
+    assert frame.kind == codec.KIND_REPLY
+    assert frame.request_id == 9
+    assert frame.actor_id == 17
+    assert np.array_equal(frame.array, np.arange(4, dtype=np.int32))
+    # default stays 0 = unversioned (byte-identical to the pre-onpolicy
+    # encoding, which the loopback parity test also pins)
+    legacy = codec.read_frame(io.BytesIO(
+        codec.encode_reply(9, np.arange(4, dtype=np.int32))).read)
+    assert legacy.actor_id == 0
+
+
+def test_onpolicy_negotiation_version_flow_and_traj_stripping():
+    """Per-connection CODEC_ONPOLICY: a granted client sees the learner's
+    param version on every reply and its TRAJ metadata reaches the sink;
+    an un-negotiated client on the SAME gateway strips the on-policy keys
+    before they cross the wire (old-gateway interop, exercised from the
+    client side)."""
+    version = {"v": 3}
+    srv = InferenceServer(det_policy, max_batch=8, deadline_ms=2.0)
+    sunk = []
+    gw = InferenceGateway(srv, sink=sunk.append,
+                          version_source=lambda: version["v"],
+                          onpolicy=True)
+    srv.start()
+    addr = gw.start()
+    traj = {"obs": np.zeros((4, 5), np.float32),
+            "actions": np.zeros((4,), np.int32),
+            "rewards": np.ones((4,), np.float32),
+            "dones": np.zeros((4,), np.float32),
+            "behavior_logprobs": np.full((4,), -0.7, np.float32),
+            "param_version": np.int64(3)}
+    tr_on = SyncSocketTransport.connect(addr, onpolicy=True)
+    tr_off = SyncSocketTransport.connect(addr)
+    try:
+        assert tr_on.wait_hello(5.0) and tr_on.onpolicy_granted
+        obs = np.zeros((2, 50), np.float32)
+        tr_on.submit_batch(0, obs).get(timeout=5.0)
+        assert tr_on.param_version == 3
+        version["v"] = 8                       # learner "published"
+        tr_on.submit_batch(0, obs).get(timeout=5.0)
+        assert tr_on.param_version == 8        # monotone, reply-borne
+        tr_on.send_trajectory(traj)
+        tr_off.send_trajectory(traj)           # not granted: must strip
+        deadline = time.perf_counter() + 5.0
+        while len(sunk) < 2 and time.perf_counter() < deadline:
+            time.sleep(0.01)
+        assert len(sunk) == 2, "trajectories did not reach the sink"
+        by_keys = sorted((sorted(t) for t in sunk), key=len)
+        assert by_keys[0] == ["actions", "dones", "obs", "rewards"]
+        assert by_keys[1] == ["actions", "behavior_logprobs", "dones",
+                              "obs", "param_version", "rewards"]
+        full = next(t for t in sunk if "param_version" in t)
+        assert int(np.asarray(full["param_version"]).reshape(())) == 3
+        np.testing.assert_array_equal(full["behavior_logprobs"],
+                                      traj["behavior_logprobs"])
+    finally:
+        tr_on.close()
+        tr_off.close()
+        gw.stop()
+        srv.stop()
+
+
+def test_replay_gateway_refuses_onpolicy_grant():
+    """A gateway fronting a replay-based system (the default) must NOT
+    grant CODEC_ONPOLICY even to a client that offers it — otherwise
+    on-policy TRAJ metadata would flow into a replay sink that never
+    asked for it (schema drift inside PrioritizedReplay)."""
+    srv = InferenceServer(det_policy, max_batch=4, deadline_ms=2.0)
+    sunk = []
+    gw = InferenceGateway(srv, sink=sunk.append)       # onpolicy=False
+    srv.start()
+    addr = gw.start()
+    tr = SyncSocketTransport.connect(addr, onpolicy=True)
+    try:
+        assert tr.wait_hello(5.0)
+        assert not tr.onpolicy_granted
+        tr.send_trajectory({"obs": np.zeros((2, 4), np.float32),
+                            "actions": np.zeros((2,), np.int32),
+                            "rewards": np.zeros((2,), np.float32),
+                            "dones": np.zeros((2,), np.float32),
+                            "behavior_logprobs": np.zeros((2,), np.float32),
+                            "param_version": np.int64(5)})
+        deadline = time.perf_counter() + 5.0
+        while not sunk and time.perf_counter() < deadline:
+            time.sleep(0.01)
+        assert sunk and sorted(sunk[0]) == \
+            ["actions", "dones", "obs", "rewards"]
+    finally:
+        tr.close()
+        gw.stop()
+        srv.stop()

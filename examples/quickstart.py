@@ -74,6 +74,19 @@ def vector_actor_demo(env_counts=(1, 8), seconds=0.6):
           f"env-frames/s ({stats['gateway_connections']} actor-host conns, "
           f"{stats['gateway_traj_frames']} unrolls over the wire)")
 
+    # co-located hosts can skip the TCP hot path entirely: transport="shm"
+    # negotiates CODEC_SHM in HELLO and each connection rides a
+    # shared-memory ring pair (request/reply memcpys, no per-frame
+    # syscalls), with the TCP socket kept as spill + liveness channel
+    sys_ = SeedSystem(env_factory=CatchEnv, policy_step=_quickstart_policy,
+                      num_actors=2, unroll=8, envs_per_actor=E,
+                      deadline_ms=1.0, transport="shm", num_actor_hosts=1)
+    stats = sys_.run(seconds=max(seconds, 0.8), with_learner=False)
+    print(f"  E={E} shm-transport:    {stats['env_frames_per_s']:8.0f} "
+          f"env-frames/s ({stats['host_shm_frames']} ring frames, "
+          f"{stats['host_spill_frames']} TCP spills, "
+          f"{stats['gateway_shm_conns']} ring conns)")
+
 
 def sharded_inference_demo(E=8, seconds=0.8):
     """Sharding the inference plane: the same disaggregated system with

@@ -51,6 +51,11 @@ class SystemModel:
     t_net: float = 0.0    # network: wire RTT added per inference round-trip
     n_actor_hosts: int = 1    # network: CPU hosts supplying actor threads
     n_replicas: int = 1   # data-parallel inference replicas (lane sharding)
+    wire: str = "tcp"     # network: which wire carries the frames —
+    #                       "tcp" (loopback/remote sockets) or "shm"
+    #                       (co-located shared-memory rings). A label for
+    #                       the operating point: the calibrated t_net IS
+    #                       the difference (fig4's measured RTT sweep).
 
     def throughput(self, n_actors):
         """Env frames/s at n actor threads, each stepping E lanes.
@@ -121,22 +126,32 @@ class SystemModel:
         """
         return replace(self, backend="device", t_dev0=t_dev0, t_dev1=t_dev1)
 
-    def with_network(self, t_rtt: float,
-                     n_hosts: int = 1) -> "SystemModel":
-        """The networked operating point (`repro.transport` socket path):
+    def with_network(self, t_rtt: float, n_hosts: int = 1,
+                     wire: str = "tcp") -> "SystemModel":
+        """The networked operating point (`repro.transport` wire path):
         actors live on `n_hosts` remote CPU hosts and every inference
         round-trip pays the wire RTT `t_rtt` (same units as t_inf0) on top
         of the batching latency. Throughput at fixed n can only drop
         (latency regime), but the capacity ceiling becomes
         n_hosts * hw_threads / t_env — the CPU/GPU-ratio knob turned by
         adding hosts instead of swapping chips.
+
+        `wire` labels which data plane the calibration came from: "tcp"
+        (the socket transport; loopback or a real network) or "shm"
+        (co-located shared-memory rings — `transport="shm"`). The shm
+        operating point is the SAME model at a smaller measured t_rtt:
+        fig4's `measure_wire_ping()` best-of-N probe supplies both, and
+        the tcp-vs-shm gap is precisely the per-round-trip syscall +
+        wakeup tax the ring removes.
         """
         if t_rtt < 0:
             raise ValueError(f"t_rtt must be >= 0, got {t_rtt}")
         if n_hosts < 1:
             raise ValueError(f"n_hosts must be >= 1, got {n_hosts}")
+        if wire not in ("tcp", "shm"):
+            raise ValueError(f"wire={wire!r}; expected 'tcp' or 'shm'")
         return replace(self, backend="network", t_net=float(t_rtt),
-                       n_actor_hosts=int(n_hosts))
+                       n_actor_hosts=int(n_hosts), wire=wire)
 
     def with_sharded(self, n_replicas: int) -> "SystemModel":
         """The sharded-inference operating point (`num_replicas` in

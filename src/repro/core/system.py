@@ -38,7 +38,17 @@ The host backend additionally picks a transport (`repro.transport`):
     processes (stand-ins for remote CPU hosts) that dial a TCP
     `InferenceGateway` in front of the same `InferenceServer`; trajectory
     unrolls return over the wire into the same replay sink. Requires a
-    picklable `env_factory` (class or module-level factory, not a lambda).
+    picklable `env_factory` (class or module-level factory, not a lambda);
+  * `transport="shm"`: same disaggregated layout, but each connection
+    negotiates CODEC_SHM and upgrades to a shared-memory ring pair
+    (`repro.transport.shm`) — frames become memcpys instead of syscalls,
+    with the TCP connection retained for spill and liveness. Identical
+    frame semantics, so a run is bit-identical to "socket" (and to
+    in-proc under a deterministic policy) when quantization is off.
+
+`wire_quant` ('f16' or 'q8', wire transports only) opts observation
+payloads into quantized float framing (CODEC_QUANT) — lossy, so leave it
+None when bit-parity matters.
 
 Sharding the inference plane (all three knobs default to 1 = the
 historical single-path behavior, bit-for-bit):
@@ -78,6 +88,7 @@ class SeedSystem:
                  gateway_host: str = "127.0.0.1", gateway_port: int = 0,
                  num_replicas: int = 1, num_gateways: int = 1,
                  engine_shards: int = 1, wire_compression: bool = False,
+                 wire_quant: Optional[str] = None,
                  checkpoint_manager=None, checkpoint_every: int = 0,
                  algo: str = "r2d2", max_param_lag: Optional[int] = None,
                  queue_capacity: Optional[int] = None,
@@ -101,20 +112,23 @@ class SeedSystem:
                         f"based R2D2 has no trajectory queue to tune)")
         queue_capacity = 64 if queue_capacity is None else queue_capacity
         gamma = 0.99 if gamma is None else gamma
-        if transport not in ("inproc", "socket"):
+        if transport not in ("inproc", "socket", "shm"):
             raise ValueError(
-                f"unknown transport {transport!r}; use 'inproc' or 'socket'")
-        if transport == "socket" and backend != "host":
-            raise ValueError("transport='socket' applies to backend='host' "
-                             "(the device backend has no inference wire)")
+                f"unknown transport {transport!r}; use 'inproc', 'socket' "
+                f"or 'shm'")
+        wire = transport in ("socket", "shm")    # disaggregated layouts
+        if wire and backend != "host":
+            raise ValueError(f"transport={transport!r} applies to "
+                             "backend='host' (the device backend has no "
+                             "inference wire)")
         if not isinstance(num_gateways, int) or num_gateways < 1:
             raise ValueError(
                 f"num_gateways must be a positive int, got {num_gateways!r}")
-        if num_gateways > 1 and transport != "socket":
+        if num_gateways > 1 and not wire:
             raise ValueError(
-                f"num_gateways={num_gateways} applies to transport='socket' "
+                f"num_gateways={num_gateways} applies to wire transports "
                 f"(the in-process path has no gateways to shard)")
-        if num_gateways > num_actor_hosts and transport == "socket":
+        if num_gateways > num_actor_hosts and wire:
             raise ValueError(
                 f"num_gateways={num_gateways} exceeds num_actor_hosts="
                 f"{num_actor_hosts}: hosts hash across gateways, so extra "
@@ -133,10 +147,17 @@ class SeedSystem:
             raise ValueError(
                 f"num_replicas={num_replicas} applies to backend='host' "
                 f"(the device backend has no central inference server)")
-        if wire_compression and transport != "socket":
+        if wire_compression and not wire:
             raise ValueError(
-                "wire_compression applies to transport='socket' (there is "
+                "wire_compression applies to wire transports (there is "
                 "no wire to compress in-process)")
+        if wire_quant is not None and not wire:
+            raise ValueError(
+                "wire_quant applies to wire transports (there is no wire "
+                "to quantize in-process)")
+        if wire_quant not in (None, "f16", "q8"):
+            raise ValueError(
+                f"wire_quant={wire_quant!r}; expected None, 'f16' or 'q8'")
         self.backend = backend
         self.transport = transport
         self.algo = algo
@@ -170,21 +191,27 @@ class SeedSystem:
                 policy_step,
                 max_batch=inference_batch or max(num_actors * envs_per_actor, 1),
                 deadline_ms=deadline_ms, num_replicas=num_replicas)
-            if transport == "socket":
+            if wire:
                 from repro.launch.actor_host import ActorHostPool
                 from repro.transport.socket import InferenceGateway
+                use_shm = transport == "shm"
                 self.gateways = [
                     InferenceGateway(self.server, sink=self._sink,
                                      host=gateway_host, port=gateway_port,
                                      version_source=self._version,
-                                     onpolicy=onpolicy)
+                                     onpolicy=onpolicy,
+                                     # grant CODEC_SHM only when the
+                                     # deployment asked for the shm plane,
+                                     # so transport='socket' measures the
+                                     # honest TCP path
+                                     allow_shm=use_shm)
                     for _ in range(num_gateways)]
                 self.gateway = self.gateways[0]    # back-compat handle
                 self.pool = ActorHostPool(
                     env_factory, num_actors=num_actors,
                     envs_per_actor=envs_per_actor, unroll=unroll,
                     num_hosts=num_actor_hosts, compress=wire_compression,
-                    onpolicy=onpolicy)
+                    onpolicy=onpolicy, use_shm=use_shm, quant=wire_quant)
                 self.actors = []
             else:
                 self.actors = [Actor(i, env_factory, self.server, self._sink,
@@ -435,6 +462,14 @@ class SeedSystem:
                     "gateway_request_frames": sum(g["request_frames"]
                                                   for g in gs),
                     "gateway_traj_frames": sum(g["traj_frames"] for g in gs),
+                    "gateway_traj_batch_frames": sum(g["traj_batch_frames"]
+                                                     for g in gs),
+                    "gateway_shm_conns": sum(g["shm_conns"] for g in gs),
+                    "gateway_shm_frames": sum(g["shm_frames"] for g in gs),
+                    "host_shm_frames": sum(s_.get("shm_frames", 0)
+                                           for s_ in self.pool.last_stats),
+                    "host_spill_frames": sum(s_.get("spill_frames", 0)
+                                             for s_ in self.pool.last_stats),
                     "per_gateway_connections": [g["connections"] for g in gs],
                     "host_errors": [s_["error"] for s_ in self.pool.last_stats
                                     if s_["error"]],

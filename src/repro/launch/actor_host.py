@@ -58,6 +58,14 @@ class ActorHostConfig:
     #                              (E, 2) [action, logprob] replies and
     #                              stamp unrolls with the REPLY-borne
     #                              behavior-param version
+    use_shm: bool = False        # dial with ShmTransport: co-located hosts
+    #                              negotiate CODEC_SHM and ride a
+    #                              shared-memory ring pair, TCP as spill
+    quant: Optional[str] = None  # negotiate CODEC_QUANT: 'f16' or 'q8'
+    #                              float32 obs framing (lossy; leave None
+    #                              for bit-parity with in-proc)
+    coalesce: bool = True        # negotiate CODEC_TRAJBATCH: one frame
+    #                              per unroll flush instead of per record
 
 
 def run_actor_host(cfg: ActorHostConfig, result_q) -> None:
@@ -71,19 +79,25 @@ def run_actor_host(cfg: ActorHostConfig, result_q) -> None:
         import numpy as np
 
         from repro.core.actor import Actor
-        from repro.transport.socket import SyncSocketTransport
+        from repro.transport.socket import ShmTransport, SyncSocketTransport
 
         # compute-bound sibling actors convoy thread wakeups under
         # CPython's default 5 ms GIL slice; this process exists only to
         # run actors, so a finer slice is safe and worth real latency.
         sys.setswitchinterval(1e-3)
         # SEED's per-actor streaming-RPC shape: one connection per actor,
-        # replies parsed in the actor thread itself (no recv-thread hop)
+        # replies parsed in the actor thread itself (no recv-thread hop).
+        # use_shm upgrades each connection to a shared-memory ring pair
+        # when the gateway grants CODEC_SHM (loopback peers only; a remote
+        # gateway just leaves these as plain TCP connections).
+        transport_cls = ShmTransport if cfg.use_shm else SyncSocketTransport
         transports = [
-            SyncSocketTransport.connect(cfg.address,
-                                        timeout_s=cfg.connect_timeout_s,
-                                        compress=cfg.compress,
-                                        onpolicy=cfg.onpolicy)
+            transport_cls.connect(cfg.address,
+                                  timeout_s=cfg.connect_timeout_s,
+                                  compress=cfg.compress,
+                                  onpolicy=cfg.onpolicy,
+                                  quant=cfg.quant,
+                                  coalesce=cfg.coalesce)
             for _ in cfg.actor_ids]
         if cfg.onpolicy:
             # on-policy data is useless without logprobs + version stamps,
@@ -137,6 +151,10 @@ def run_actor_host(cfg: ActorHostConfig, result_q) -> None:
         stats["episodes"] = sum(a.episodes for a in actors)
         stats["unrolls"] = sum(a.unrolls for a in actors)
         stats["param_lag_total"] = sum(a.param_lag_total for a in actors)
+        stats["shm_frames"] = sum(
+            getattr(tr, "shm_frames", 0) for tr in transports)
+        stats["spill_frames"] = sum(
+            getattr(tr, "spill_frames", 0) for tr in transports)
         stats["returns"] = [r for a in actors for r in a.returns[-20:]]
         stats["error"] = next(
             (tr.error for tr in transports if tr.error), None) or next(
@@ -157,7 +175,9 @@ class ActorHostPool:
     def __init__(self, env_factory, num_actors: int, envs_per_actor: int,
                  unroll: int, num_hosts: int = 1,
                  seed: Optional[int] = None, grace_s: float = 90.0,
-                 compress: bool = False, onpolicy: bool = False):
+                 compress: bool = False, onpolicy: bool = False,
+                 use_shm: bool = False, quant: Optional[str] = None,
+                 coalesce: bool = True):
         if not 1 <= num_hosts <= num_actors:
             raise ValueError(
                 f"num_hosts={num_hosts} must be in [1, num_actors={num_actors}]")
@@ -170,6 +190,9 @@ class ActorHostPool:
         self.grace_s = grace_s       # spawn + jax import + jit headroom
         self.compress = compress
         self.onpolicy = onpolicy
+        self.use_shm = use_shm
+        self.quant = quant
+        self.coalesce = coalesce
         self.last_stats: List[dict] = []
 
     def _partitions(self) -> List[Tuple[int, ...]]:
@@ -211,7 +234,8 @@ class ActorHostPool:
                 actor_ids=actor_ids, env_factory=self.env_factory,
                 envs_per_actor=self.envs_per_actor, unroll=self.unroll,
                 seconds=seconds, seed=self.seed, compress=self.compress,
-                onpolicy=self.onpolicy)
+                onpolicy=self.onpolicy, use_shm=self.use_shm,
+                quant=self.quant, coalesce=self.coalesce)
             p = ctx.Process(target=run_actor_host, args=(cfg, result_q),
                             daemon=True)
             p.start()

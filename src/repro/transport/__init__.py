@@ -1,38 +1,84 @@
 """Wire-level inference transport — the gRPC-shaped seam, realized.
 
 `core.inference` promised that its queue API was "the only seam a
-networked transport would replace"; this package replaces it. Three
+networked transport would replace"; this package replaces it. Four
 layers:
 
   * `repro.transport.codec` — length-prefixed binary frames (no pickle on
-    the hot path): requests, replies, errors, trajectory unrolls;
+    the hot path): requests, replies, errors, trajectory unrolls, batched
+    unrolls, and the HELLO/SHM negotiation frames. Encoders come in two
+    shapes: `encode_*` (one joined `bytes`) and `encode_*_parts`
+    (zero-copy buffer-view lists for `socket.sendmsg` scatter-gather);
   * `repro.transport.local.InProcTransport` — the identity transport over
     a local `InferenceServer` (the default; bit-for-bit today's behavior);
-  * `repro.transport.socket` — `SocketTransport` (actor-host client) and
-    `InferenceGateway` (learner-side acceptor) over TCP, preserving the
-    batching deadline and per-(actor, lane) recurrent-slot semantics
-    across the wire.
+  * `repro.transport.shm.ShmRing` — a fixed-capacity single-producer /
+    single-consumer ring over `multiprocessing.shared_memory`, carrying
+    whole wire frames between co-located processes without a syscall;
+  * `repro.transport.socket` — `SocketTransport` / `SyncSocketTransport`
+    (actor-host clients) and `InferenceGateway` (learner-side acceptor)
+    over TCP, preserving the batching deadline and per-(actor, lane)
+    recurrent-slot semantics across the wire. `ShmTransport` extends the
+    sync client: after HELLO grants CODEC_SHM (loopback peers only) it
+    rides a ring pair and keeps TCP as the spill/control/liveness channel.
+
+Transport decision matrix — which plane, which codec:
+
+  placement               transport        why
+  ----------------------  ---------------  --------------------------------
+  actors in-process       "inproc"         no wire at all; the baseline
+  co-located processes    "shm"            ring memcpy beats loopback TCP:
+                                           no per-frame syscalls or reader
+                                           wakeups; TCP remains for spill
+  separate hosts          "socket" (tcp)   the only option once frames
+                                           cross a NIC
+
+  payload                 codec flag       discipline
+  ----------------------  ---------------  --------------------------------
+  uint8 observations      CODEC_RLE        lossless; only-when-smaller
+  float32 observations    CODEC_QUANT f16  lossy 2x; skipped on overflow
+  float32 observations    CODEC_QUANT q8   lossy 4x (affine int8 + scale/
+                                           offset); only-when-smaller
+  many small unrolls      CODEC_TRAJBATCH  one frame (and one syscall) per
+                                           flush instead of per record
+
+Everything is negotiated per-connection in HELLO: a client offers, the
+gateway grants the intersection it supports, and un-granted codecs simply
+never appear on the wire — so heterogeneous fleets mix freely.
 
 `repro.launch.actor_host` spawns OS-process actor hosts against a gateway
-address; `SeedSystem(transport="socket")` wires the whole thing together.
+address; `SeedSystem(transport="socket")` or `SeedSystem(transport="shm")`
+wires the whole thing together.
 """
 
-from repro.transport.codec import (CODEC_RLE, SUPPORTED_CODECS, CodecError,
-                                   Frame, FrameTooLarge, TruncatedFrame,
+from repro.transport.codec import (CODEC_ONPOLICY, CODEC_QUANT, CODEC_RLE,
+                                   CODEC_SHM, CODEC_TRAJBATCH,
+                                   SUPPORTED_CODECS, CodecError, Frame,
+                                   FrameTooLarge, TruncatedFrame,
                                    decode_frame, encode_error, encode_hello,
-                                   encode_reply, encode_request,
-                                   encode_trajectory, read_frame,
-                                   rle_decode_u8, rle_encode_u8)
+                                   encode_reply, encode_reply_parts,
+                                   encode_request, encode_request_parts,
+                                   encode_shm, encode_traj_batch,
+                                   encode_traj_batch_parts,
+                                   encode_trajectory,
+                                   encode_trajectory_parts, parts_len,
+                                   read_frame, rle_decode_u8, rle_encode_u8)
 from repro.transport.local import InProcTransport, Transport
-from repro.transport.socket import (InferenceGateway, SocketTransport,
-                                    SyncSocketTransport)
+from repro.transport.shm import ShmRing, ShmRingError
+from repro.transport.socket import (InferenceGateway, ShmTransport,
+                                    SocketTransport, SyncSocketTransport,
+                                    sendmsg_all)
 
 __all__ = [
-    "CODEC_RLE", "SUPPORTED_CODECS",
+    "CODEC_ONPOLICY", "CODEC_QUANT", "CODEC_RLE", "CODEC_SHM",
+    "CODEC_TRAJBATCH", "SUPPORTED_CODECS",
     "CodecError", "Frame", "FrameTooLarge", "TruncatedFrame",
     "decode_frame", "encode_error", "encode_hello", "encode_reply",
-    "encode_request", "encode_trajectory", "read_frame",
-    "rle_decode_u8", "rle_encode_u8",
+    "encode_reply_parts", "encode_request", "encode_request_parts",
+    "encode_shm", "encode_traj_batch", "encode_traj_batch_parts",
+    "encode_trajectory", "encode_trajectory_parts", "parts_len",
+    "read_frame", "rle_decode_u8", "rle_encode_u8",
     "InProcTransport", "Transport",
-    "InferenceGateway", "SocketTransport", "SyncSocketTransport",
+    "ShmRing", "ShmRingError",
+    "InferenceGateway", "ShmTransport", "SocketTransport",
+    "SyncSocketTransport", "sendmsg_all",
 ]

@@ -2,53 +2,88 @@
 
 The hot path of a disaggregated SEED deployment is (obs -> action) at env
 frame rate, so the codec is deliberately dumb and fast: a fixed header,
-raw C-contiguous ndarray bytes with an explicit dtype/shape prologue, and
+C-contiguous ndarray bytes with an explicit dtype/shape prologue, and
 NO pickle anywhere — a malicious or corrupted peer can produce garbage
-arrays, never code execution. Four frame kinds cover the whole protocol:
+arrays, never code execution. Frame kinds cover the whole protocol:
 
-  * ``REQUEST``  actor -> gateway: one lane-batched ``obs[E, ...]`` plus the
-    ``actor_id`` that keys the server's per-(actor, lane) recurrent slots
-    and a per-connection ``request_id`` for reply demultiplexing;
-  * ``REPLY``    gateway -> actor: the ``(E,)`` action array for a request;
-  * ``ERROR``    gateway -> actor (or broadcast with ``request_id == 0``):
+  * ``REQUEST``     actor -> gateway: one lane-batched ``obs[E, ...]`` plus
+    the ``actor_id`` that keys the server's per-(actor, lane) recurrent
+    slots and a per-connection ``request_id`` for reply demultiplexing;
+  * ``REPLY``       gateway -> actor: the ``(E,)`` action array for a
+    request; the learner's published ``param_version`` rides the header's
+    dedicated version field so remote actors can staleness-stamp unrolls;
+  * ``ERROR``       gateway -> actor (or broadcast with ``request_id == 0``):
     a UTF-8 message — the wire form of the poison ``ReplyError`` that
     fail-fast shutdown puts on in-process reply queues;
-  * ``TRAJ``     actor -> gateway: a dict of named arrays (one per-lane
+  * ``TRAJ``        actor -> gateway: a dict of named arrays (one per-lane
     unroll in the ``flush_lane_unrolls`` schema) feeding the learner-side
     trajectory sink, so trajectories ride the same connection;
-  * ``HELLO``    both ways: a u32 codec capability bitmask. A client that
-    wants payload compression sends one at connect; the gateway answers
-    with the intersection of the two masks, and only then does the client
-    start setting ``FLAG_RLE`` — negotiation per connection, so a plain
-    peer never sees a compressed frame.
+  * ``TRAJ_BATCH``  actor -> gateway: SEVERAL such unroll dicts coalesced
+    into one frame, so one syscall (or one shm-ring slot) carries a whole
+    actor flush — an actor with E lanes emits E unroll records per flush,
+    and without coalescing each was its own frame + syscall;
+  * ``HELLO``       both ways: a u32 codec capability bitmask. A client
+    that wants an optional encoding sends one at connect; the gateway
+    answers with the intersection of the two masks, and only then does
+    the client start using the granted encodings — negotiation per
+    connection, so a plain peer never sees a frame it cannot decode;
+  * ``SHM``         actor -> gateway: shared-memory ring attachment — the
+    names + geometry of a (c2s, s2c) `repro.transport.shm.ShmRing` pair
+    the client created. Only sent after the gateway granted ``CODEC_SHM``
+    (co-located peers); subsequent frames ride the rings with the TCP
+    connection kept as spill + liveness channel.
 
-On-policy metadata (``CODEC_ONPOLICY``): the V-trace training plane needs
-two extras on the wire — the behavior logprob of every sampled action
-(extra named arrays in the ``TRAJ`` dict: ``behavior_logprobs`` per step,
-``param_version`` per unroll) and the learner's param version flowing back
-to actor hosts so unrolls can be staleness-stamped. The version rides the
-``REPLY`` header's otherwise-unused ``actor_id`` slot (u32, 0 =
-unversioned — old peers already ignore it there). Both directions are
-gated on the HELLO grant: a client that wasn't granted ``CODEC_ONPOLICY``
-strips the extra TRAJ keys, so an old gateway never sees them, and an old
-client reading a new gateway's replies sees only a header field it never
-inspected. Negotiation per connection, like compression.
+Header ``param_version`` (wire v2): the REPLY header carries the learner's
+published param version in a dedicated u32 field. (v1 smuggled it through
+the unused ``actor_id`` slot; v2 gives it a real field and rejects
+mismatched version bytes outright — feature interop WITHIN v2 is what the
+HELLO grant negotiates.) On-policy metadata (``CODEC_ONPOLICY``): TRAJ
+dicts additionally carry ``behavior_logprobs`` per step and a
+``param_version`` stamp per unroll, gated on the HELLO grant exactly like
+compression — an un-granted client strips the keys.
 
-Compression (``FLAG_RLE``): uint8 observation payloads (Atari lanes) are
-run-length encoded as (count u8, value u8) pairs — still raw bytes, NO
-pickle — and only when that actually shrinks the frame; the flag records
-the choice per frame. Decoding checks the run-total against the shape
-BEFORE expanding, and unknown flag bits are rejected before any payload
-allocation, so a hostile stream cannot balloon memory through the codec.
+Per-array encodings (the ``enc`` byte in every ndarray prologue):
+
+  * ``ENC_RAW``  raw C-order bytes — always valid, the fallback;
+  * ``ENC_RLE``  (``CODEC_RLE``): uint8 payloads run-length encoded as
+    (count u8, value u8) pairs — Atari frame lanes shrink well;
+  * ``ENC_F16``  (``CODEC_QUANT``): float32 payloads stored as float16 —
+    2x smaller, error bounded by f16 rounding (~2^-11 relative);
+  * ``ENC_Q8``   (``CODEC_QUANT``): float32 payloads stored as affine
+    uint8 with per-array (scale, offset) in the prologue — 4x smaller,
+    max abs error scale/2 where scale = (max - min) / 255.
+
+Every optional encoding obeys the same only-when-smaller discipline: it is
+used per array only when the encoded payload is strictly smaller than raw,
+and the array's ``enc`` byte records what was actually done (frame-level
+``FLAG_*`` bits mirror the choice for cheap stats). Decoding checks the
+expansion target against the shape BEFORE allocating — bounded by the same
+``max_frame`` the stream reader enforces — and unknown enc bytes or flag
+bits are rejected before any payload allocation, so a hostile stream
+cannot balloon memory through the codec.
+
+Zero-copy: ``encode_*_parts`` variants return a list of buffer views
+(header/prologue bytes interleaved with memoryviews over the source
+arrays) for scatter-gather sends (``socket.sendmsg`` / shm-ring writes) —
+no concatenation copy; the plain ``encode_*`` functions join the parts for
+callers that want one bytes object. ``decode_frame(..., zero_copy=True)``
+returns ndarrays as read-only views over the frame body where alignment
+permits (the views keep the body alive) instead of copying each array out.
 
 Framing::
 
     frame   := u32 body_len | body                      (big-endian)
     body    := u16 magic | u8 ver | u8 kind | u8 flags
-               | u32 actor_id | u64 request_id | payload
-    ndarray := u8 dtype_len | dtype_str | u8 ndim | ndim * u32 dim
-               | u64 nbytes | raw bytes          (rle pairs if FLAG_RLE)
+               | u32 actor_id | u64 request_id | u32 param_version
+               | payload
+    ndarray := u8 enc | u8 dtype_len | dtype_str | u8 ndim | ndim * u32 dim
+               | [enc==Q8: f4 scale | f4 offset]
+               | u64 nbytes | payload bytes
+    traj    := u16 count | count * (u8 key_len | key | ndarray)
+    batch   := u16 n_trajs | n_trajs * traj
     hello   := u32 codec_mask
+    shm     := u8 len | c2s_name | u8 len | s2c_name
+               | u32 slot_size | u32 num_slots
 
 Truncated frames (EOF or short buffer mid-frame) raise ``TruncatedFrame``;
 a length prefix beyond ``max_frame`` raises ``FrameTooLarge`` before any
@@ -57,39 +92,60 @@ allocation, so a desynchronized or hostile stream cannot balloon memory.
 
 import struct
 from dataclasses import dataclass, field
-from typing import Callable, Dict, Optional
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
 MAGIC = 0x5254           # "RT" — repro transport
-VERSION = 1
+VERSION = 2              # v2: param_version header field + per-array enc
 
 KIND_REQUEST = 1
 KIND_REPLY = 2
 KIND_ERROR = 3
 KIND_TRAJ = 4
 KIND_HELLO = 5
+KIND_TRAJ_BATCH = 6
+KIND_SHM = 7
 
 FLAG_SCALAR = 0x01       # legacy single-obs submit: reply unwraps to obs[0]
-FLAG_RLE = 0x02          # ndarray payload is RLE pairs, not raw bytes
-_KNOWN_FLAGS = FLAG_SCALAR | FLAG_RLE
+FLAG_RLE = 0x02          # >=1 ndarray payload in this frame is ENC_RLE
+FLAG_F16 = 0x04          # >=1 ndarray payload in this frame is ENC_F16
+FLAG_Q8 = 0x08           # >=1 ndarray payload in this frame is ENC_Q8
+_KNOWN_FLAGS = FLAG_SCALAR | FLAG_RLE | FLAG_F16 | FLAG_Q8
+_ARRAY_FLAGS = FLAG_RLE | FLAG_F16 | FLAG_Q8
 
-CODEC_RLE = 0x01         # HELLO capability bit for FLAG_RLE
-CODEC_ONPOLICY = 0x02    # HELLO bit: on-policy metadata (see below)
-SUPPORTED_CODECS = CODEC_RLE | CODEC_ONPOLICY
+# per-array encoding byte (the payload truth; frame flags are the record)
+ENC_RAW = 0
+ENC_RLE = 1
+ENC_F16 = 2
+ENC_Q8 = 3
+_ENC_FLAG = {ENC_RLE: FLAG_RLE, ENC_F16: FLAG_F16, ENC_Q8: FLAG_Q8}
+
+CODEC_RLE = 0x01         # HELLO bit: ENC_RLE for uint8 payloads
+CODEC_ONPOLICY = 0x02    # HELLO bit: on-policy TRAJ metadata + versions
+CODEC_QUANT = 0x04       # HELLO bit: ENC_F16 / ENC_Q8 float framing
+CODEC_TRAJBATCH = 0x08   # HELLO bit: KIND_TRAJ_BATCH coalescing
+CODEC_SHM = 0x10         # HELLO bit: shared-memory ring transport
+SUPPORTED_CODECS = (CODEC_RLE | CODEC_ONPOLICY | CODEC_QUANT
+                    | CODEC_TRAJBATCH | CODEC_SHM)
 
 DEFAULT_MAX_FRAME = 64 << 20      # 64 MiB: > any sane lane batch or unroll
 
+_F16_MAX = 65504.0       # largest finite float16
+
 _LEN = struct.Struct(">I")
-_HEADER = struct.Struct(">HBBBIQ")   # magic, ver, kind, flags, actor, request
+# magic, ver, kind, flags, actor_id, request_id, param_version
+_HEADER = struct.Struct(">HBBBIQI")
 _U8 = struct.Struct(">B")
 _U16 = struct.Struct(">H")
 _U32 = struct.Struct(">I")
 _U64 = struct.Struct(">Q")
+_F32 = struct.Struct(">f")
+_Q8PARAMS = struct.Struct(">ff")   # scale, offset
 
 
 class CodecError(ValueError):
-    """Malformed frame (bad magic/kind/dtype, trailing bytes, ...)."""
+    """Malformed frame (bad magic/version/kind/dtype, trailing bytes...)."""
 
 
 class TruncatedFrame(CodecError):
@@ -106,14 +162,23 @@ class Frame:
     actor_id: int = 0
     request_id: int = 0
     flags: int = 0
+    param_version: int = 0                   # REPLY: learner's published v
     array: Optional[np.ndarray] = None       # REQUEST / REPLY payload
     message: str = ""                        # ERROR payload
     arrays: Optional[Dict[str, np.ndarray]] = field(default=None)  # TRAJ
+    traj_batch: Optional[List[Dict[str, np.ndarray]]] = None  # TRAJ_BATCH
     codecs: int = 0                          # HELLO capability bitmask
+    shm: Optional[dict] = None               # SHM ring names + geometry
 
     @property
     def scalar(self) -> bool:
         return bool(self.flags & FLAG_SCALAR)
+
+
+def parts_len(parts: Sequence) -> int:
+    """Total byte length of a scatter-gather parts list."""
+    return sum(p.nbytes if isinstance(p, memoryview) else len(p)
+               for p in parts)
 
 
 # ------------------------------------------------------------------- RLE
@@ -138,7 +203,7 @@ def rle_encode_u8(data: np.ndarray) -> bytes:
     return pairs.tobytes()
 
 
-def rle_decode_u8(buf: bytes, expected: int) -> np.ndarray:
+def rle_decode_u8(buf, expected: int) -> np.ndarray:
     """Inverse of `rle_encode_u8`; `expected` is the element count the
     frame's shape prologue promises. The run total is checked BEFORE
     `np.repeat`, so a hostile stream cannot expand past the shape it
@@ -158,62 +223,127 @@ def rle_decode_u8(buf: bytes, expected: int) -> np.ndarray:
 
 # ---------------------------------------------------------------- encoding
 
-def _ndarray_prologue(arr: np.ndarray, data: bytes) -> bytes:
-    """Shared dtype/shape/length framing for raw and RLE payloads — one
-    definition, so the two encodings cannot desynchronize."""
-    dt = arr.dtype.str.encode("ascii")
-    parts = [_U8.pack(len(dt)), dt, _U8.pack(arr.ndim)]
-    parts.extend(_U32.pack(d) for d in arr.shape)
-    parts.append(_U64.pack(len(data)))
-    parts.append(data)
-    return b"".join(parts)
+def _byte_view(arr: np.ndarray) -> memoryview:
+    """Flat byte view over a C-contiguous array — NO copy (the view keeps
+    the array alive for the duration of the scatter-gather send). This is
+    the fix for the old ``arr.tobytes()`` copy; 0-d arrays cast cleanly
+    (the old ``ascontiguousarray`` 0-d promotion hazard stays regression-
+    tested in test_transport)."""
+    if arr.nbytes == 0:
+        return memoryview(b"")     # 0-in-shape views cannot be cast
+    return memoryview(arr).cast("B")
 
 
-def _encode_ndarray(arr: np.ndarray) -> bytes:
+def _quantize_f32(arr: np.ndarray, quant: str):
+    """Quantized payload for a float32 array under the only-when-smaller
+    (and only-when-representable) discipline. Returns (enc, payload_bytes,
+    prologue_extra) or None when quantization does not apply: non-finite
+    values, f16 overflow, or no size win."""
+    if arr.dtype != np.float32 or arr.size == 0:
+        return None
+    finite = np.isfinite(arr)
+    if not finite.all():
+        return None                    # inf/nan: raw keeps them exact
+    if quant == "f16":
+        if float(np.abs(arr).max()) > _F16_MAX:
+            return None                # would overflow to inf
+        data = arr.astype(np.float16)
+        if data.nbytes >= arr.nbytes:  # size 0 handled above; always true
+            return None
+        return ENC_F16, _byte_view(data), b""
+    if quant == "q8":
+        lo = float(arr.min())
+        hi = float(arr.max())
+        scale = (hi - lo) / 255.0
+        extra = _Q8PARAMS.pack(scale, lo)
+        if arr.size + len(extra) >= arr.nbytes:
+            return None                # tiny arrays: prologue eats the win
+        if scale == 0.0:
+            q = np.zeros(arr.shape, np.uint8)
+        else:
+            q = np.clip(np.rint((arr - lo) / scale), 0, 255).astype(np.uint8)
+        return ENC_Q8, _byte_view(q), extra
+    raise CodecError(f"unknown quant mode {quant!r}; use 'f16' or 'q8'")
+
+
+def _encode_ndarray_parts(arr: np.ndarray, compress: bool = False,
+                          quant: Optional[str] = None
+                          ) -> Tuple[int, List]:
+    """Scatter-gather ndarray framing: (flag_bits, [prologue, payload]).
+
+    The payload is a memoryview over the source (or quantized/RLE temp)
+    buffer — callers hand the parts straight to ``sendmsg`` or a shm-ring
+    write; nothing is concatenated here. ``compress``/``quant`` opt the
+    array into ENC_RLE / ENC_F16 / ENC_Q8 under the only-when-smaller
+    rule; the returned flag bits record what was chosen."""
     arr = np.asarray(arr)
-    if not arr.flags["C_CONTIGUOUS"]:
-        # ascontiguousarray would also promote 0-d to 1-d, so only call it
-        # when a copy is actually needed
-        arr = np.ascontiguousarray(arr)
     if arr.dtype.hasobject:
         raise CodecError(
             f"dtype {arr.dtype} is not wire-safe (object arrays would need "
             f"pickle, which the hot path forbids)")
-    return _ndarray_prologue(arr, arr.tobytes())
+    if not arr.flags["C_CONTIGUOUS"]:
+        # ascontiguousarray would also promote 0-d to 1-d, so only call it
+        # when a copy is actually needed
+        arr = np.ascontiguousarray(arr)
+    enc, data, extra = ENC_RAW, None, b""
+    if quant is not None:
+        out = _quantize_f32(arr, quant)
+        if out is not None:
+            enc, data, extra = out
+    if enc == ENC_RAW and compress and arr.dtype == np.uint8 and arr.size:
+        rle = rle_encode_u8(arr)
+        if len(rle) < arr.nbytes:
+            enc, data = ENC_RLE, rle
+    if data is None:
+        data = _byte_view(arr)
+    nbytes = data.nbytes if isinstance(data, memoryview) else len(data)
+    dt = arr.dtype.str.encode("ascii")
+    prologue = b"".join(
+        [_U8.pack(enc), _U8.pack(len(dt)), dt, _U8.pack(arr.ndim)]
+        + [_U32.pack(d) for d in arr.shape]
+        + [extra, _U64.pack(nbytes)])
+    return _ENC_FLAG.get(enc, 0), [prologue, data]
+
+
+def _encode_ndarray(arr: np.ndarray) -> bytes:
+    _, parts = _encode_ndarray_parts(arr)
+    return b"".join(parts)
+
+
+def _frame_parts(kind: int, actor_id: int, request_id: int, flags: int,
+                 payload_parts: List, param_version: int = 0) -> List:
+    body_len = _HEADER.size + parts_len(payload_parts)
+    head = _LEN.pack(body_len) + _HEADER.pack(
+        MAGIC, VERSION, kind, flags, actor_id, request_id,
+        param_version & 0xFFFFFFFF)
+    return [head] + payload_parts
 
 
 def _frame(kind: int, actor_id: int, request_id: int, flags: int,
-           payload: bytes) -> bytes:
-    body = _HEADER.pack(MAGIC, VERSION, kind, flags,
-                        actor_id, request_id) + payload
-    return _LEN.pack(len(body)) + body
+           payload: bytes, param_version: int = 0) -> bytes:
+    return b"".join(_frame_parts(kind, actor_id, request_id, flags,
+                                 [payload], param_version))
 
 
-def _encode_ndarray_rle(arr: np.ndarray) -> Optional[bytes]:
-    """RLE-framed ndarray payload, or None when compression wouldn't
-    shrink it (the caller then sends raw, without FLAG_RLE — the flag is a
-    per-frame record of what was actually done)."""
-    arr = np.asarray(arr)
-    if arr.dtype != np.uint8 or arr.size == 0:
-        return None
-    data = rle_encode_u8(arr)
-    if len(data) >= arr.nbytes:
-        return None
-    return _ndarray_prologue(np.ascontiguousarray(arr), data)
+def encode_request_parts(actor_id: int, request_id: int, obs: np.ndarray,
+                         scalar: bool = False, compress: bool = False,
+                         quant: Optional[str] = None) -> List:
+    """``compress``/``quant`` opt this frame into RLE / F16 / Q8 payloads —
+    callers must only pass them after a HELLO negotiation granted
+    ``CODEC_RLE`` / ``CODEC_QUANT`` (see `repro.transport.socket`)."""
+    flags = FLAG_SCALAR if scalar else 0
+    enc_flags, parts = _encode_ndarray_parts(obs, compress=compress,
+                                             quant=quant)
+    return _frame_parts(KIND_REQUEST, actor_id, request_id,
+                        flags | enc_flags, parts)
 
 
 def encode_request(actor_id: int, request_id: int, obs: np.ndarray,
-                   scalar: bool = False, compress: bool = False) -> bytes:
-    """``compress=True`` opts this frame into RLE for uint8 payloads —
-    callers must only pass it after a HELLO negotiation granted
-    ``CODEC_RLE`` (see `repro.transport.socket`)."""
-    flags = FLAG_SCALAR if scalar else 0
-    payload = _encode_ndarray_rle(obs) if compress else None
-    if payload is not None:
-        flags |= FLAG_RLE
-    else:
-        payload = _encode_ndarray(obs)
-    return _frame(KIND_REQUEST, actor_id, request_id, flags, payload)
+                   scalar: bool = False, compress: bool = False,
+                   quant: Optional[str] = None) -> bytes:
+    return b"".join(encode_request_parts(actor_id, request_id, obs,
+                                         scalar=scalar, compress=compress,
+                                         quant=quant))
 
 
 def encode_hello(codecs: int) -> bytes:
@@ -221,13 +351,36 @@ def encode_hello(codecs: int) -> bytes:
     return _frame(KIND_HELLO, 0, 0, 0, _U32.pack(codecs & 0xFFFFFFFF))
 
 
+def encode_shm(c2s_name: str, s2c_name: str, slot_size: int,
+               num_slots: int) -> bytes:
+    """Ring attachment: the client-created shared-memory segment names and
+    their (identical) slot geometry. Strictly client -> gateway, after a
+    ``CODEC_SHM`` grant."""
+    parts = []
+    for name in (c2s_name, s2c_name):
+        nb = name.encode("utf-8")
+        if not 1 <= len(nb) <= 255:
+            raise CodecError(f"bad shm segment name {name!r}")
+        parts.append(_U8.pack(len(nb)))
+        parts.append(nb)
+    parts.append(_U32.pack(slot_size))
+    parts.append(_U32.pack(num_slots))
+    return _frame(KIND_SHM, 0, 0, 0, b"".join(parts))
+
+
+def encode_reply_parts(request_id: int, actions: np.ndarray,
+                       version: int = 0) -> List:
+    """``version`` (the behavior-param version serving this reply) rides
+    the header's dedicated ``param_version`` field (wire v2; v1 smuggled
+    it through the unused actor_id slot)."""
+    _, parts = _encode_ndarray_parts(actions)
+    return _frame_parts(KIND_REPLY, 0, request_id, 0, parts,
+                        param_version=version)
+
+
 def encode_reply(request_id: int, actions: np.ndarray,
                  version: int = 0) -> bytes:
-    """``version`` (the behavior-param version serving this reply) rides
-    the header's actor_id slot — unused on replies since v1, so old peers
-    decode it and ignore it (see module docstring, CODEC_ONPOLICY)."""
-    return _frame(KIND_REPLY, version & 0xFFFFFFFF, request_id, 0,
-                  _encode_ndarray(actions))
+    return b"".join(encode_reply_parts(request_id, actions, version=version))
 
 
 def encode_error(request_id: int, message: str) -> bytes:
@@ -236,7 +389,12 @@ def encode_error(request_id: int, message: str) -> bytes:
     return _frame(KIND_ERROR, 0, request_id, 0, message.encode("utf-8"))
 
 
-def encode_trajectory(actor_id: int, arrays: Dict[str, np.ndarray]) -> bytes:
+def _traj_payload_parts(arrays: Dict[str, np.ndarray], compress: bool,
+                        quant: Optional[str]) -> Tuple[int, List]:
+    """(flag_bits, parts) for one trajectory dict. Quantization applies
+    only to the observation tensor: rewards / logprobs / versions feed the
+    loss directly, so they stay exact even under CODEC_QUANT."""
+    flags = 0
     parts = [_U16.pack(len(arrays))]
     for name, arr in arrays.items():
         nb = name.encode("utf-8")
@@ -244,27 +402,87 @@ def encode_trajectory(actor_id: int, arrays: Dict[str, np.ndarray]) -> bytes:
             raise CodecError(f"trajectory key too long: {name!r}")
         parts.append(_U8.pack(len(nb)))
         parts.append(nb)
-        parts.append(_encode_ndarray(np.asarray(arr)))
-    return _frame(KIND_TRAJ, actor_id, 0, 0, b"".join(parts))
+        f, aparts = _encode_ndarray_parts(
+            np.asarray(arr), compress=compress,
+            quant=quant if name == "obs" else None)
+        flags |= f
+        parts.extend(aparts)
+    return flags, parts
+
+
+def encode_trajectory_parts(actor_id: int, arrays: Dict[str, np.ndarray],
+                            compress: bool = False,
+                            quant: Optional[str] = None) -> List:
+    flags, parts = _traj_payload_parts(arrays, compress, quant)
+    return _frame_parts(KIND_TRAJ, actor_id, 0, flags, parts)
+
+
+def encode_trajectory(actor_id: int, arrays: Dict[str, np.ndarray],
+                      compress: bool = False,
+                      quant: Optional[str] = None) -> bytes:
+    return b"".join(encode_trajectory_parts(actor_id, arrays,
+                                            compress=compress, quant=quant))
+
+
+def encode_traj_batch_parts(actor_id: int,
+                            trajs: Sequence[Dict[str, np.ndarray]],
+                            compress: bool = False,
+                            quant: Optional[str] = None) -> List:
+    """Coalesce several unroll dicts into ONE ``KIND_TRAJ_BATCH`` frame —
+    one syscall / ring slot per actor flush instead of one per lane record.
+    Only sent after a ``CODEC_TRAJBATCH`` HELLO grant."""
+    if not 1 <= len(trajs) <= 0xFFFF:
+        raise CodecError(f"trajectory batch of {len(trajs)} records")
+    flags = 0
+    parts = [_U16.pack(len(trajs))]
+    for arrays in trajs:
+        f, tparts = _traj_payload_parts(arrays, compress, quant)
+        flags |= f
+        parts.extend(tparts)
+    return _frame_parts(KIND_TRAJ_BATCH, actor_id, 0, flags, parts)
+
+
+def encode_traj_batch(actor_id: int, trajs: Sequence[Dict[str, np.ndarray]],
+                      compress: bool = False,
+                      quant: Optional[str] = None) -> bytes:
+    return b"".join(encode_traj_batch_parts(actor_id, trajs,
+                                            compress=compress, quant=quant))
 
 
 # ---------------------------------------------------------------- decoding
 
-def _need(body: bytes, offset: int, n: int) -> int:
+def _need(body, offset: int, n: int) -> int:
     if offset + n > len(body):
         raise TruncatedFrame(
             f"frame body ended at {len(body)} bytes; needed {offset + n}")
     return offset + n
 
 
-def _decode_ndarray(body: bytes, offset: int, rle: bool = False,
-                    max_frame: int = DEFAULT_MAX_FRAME):
-    end = _need(body, offset, 1)
-    (dlen,) = _U8.unpack_from(body, offset)
+def _view_or_copy(body, offset: int, nbytes: int, dtype, shape,
+                  zero_copy: bool) -> np.ndarray:
+    """Raw payload -> ndarray. With ``zero_copy`` the result is a read-only
+    view over ``body`` when the element alignment works out (the view
+    keeps the body alive); otherwise — and always without ``zero_copy`` —
+    a detached copy."""
+    if zero_copy:
+        raw = np.frombuffer(body, np.uint8, count=nbytes, offset=offset)
+        if raw.__array_interface__["data"][0] % dtype.alignment == 0:
+            return raw.view(dtype).reshape(shape)
+        return raw.view(np.uint8).copy().view(dtype).reshape(shape)
+    return np.frombuffer(body, dtype=dtype, count=nbytes // dtype.itemsize
+                         if dtype.itemsize else 0,
+                         offset=offset).reshape(shape).copy()
+
+
+def _decode_ndarray(body, offset: int, max_frame: int = DEFAULT_MAX_FRAME,
+                    zero_copy: bool = False):
+    end = _need(body, offset, 2)
+    (enc,) = _U8.unpack_from(body, offset)
+    (dlen,) = _U8.unpack_from(body, offset + 1)
     offset = end
     end = _need(body, offset, dlen)
     try:
-        dtype = np.dtype(body[offset:end].decode("ascii"))
+        dtype = np.dtype(bytes(body[offset:end]).decode("ascii"))
     except (TypeError, UnicodeDecodeError) as e:
         raise CodecError(f"bad dtype string: {e}") from None
     if dtype.hasobject:
@@ -278,90 +496,167 @@ def _decode_ndarray(body: bytes, offset: int, rle: bool = False,
         end = _need(body, offset, 4)
         shape.append(_U32.unpack_from(body, offset)[0])
         offset = end
+    scale = offset_val = 0.0
+    if enc == ENC_Q8:
+        end = _need(body, offset, _Q8PARAMS.size)
+        scale, offset_val = _Q8PARAMS.unpack_from(body, offset)
+        offset = end
     end = _need(body, offset, 8)
     (nbytes,) = _U64.unpack_from(body, offset)
     offset = end
     # arbitrary-precision product: a hostile shape like (2^31, 2^31, 4)
     # must not wrap to a small number and slip past the length check
-    expected = dtype.itemsize
+    count = 1
     for d in shape:
-        expected *= d
-    if rle:
-        # compressed payload: nbytes is the RLE pair-stream length; the
-        # expansion target comes from the shape and is capped BEFORE any
-        # allocation (at the same max_frame bound the raw path enforces
-        # via its length prefix) so a tiny frame cannot decompress into
-        # gigabytes
-        if dtype != np.dtype(np.uint8):
-            raise CodecError(f"FLAG_RLE only covers uint8, got {dtype}")
-        if expected > max_frame:
+        count *= d
+    expected = dtype.itemsize * count
+    if enc == ENC_RAW:
+        if nbytes != expected:
             raise CodecError(
-                f"RLE expansion to {expected} bytes exceeds "
-                f"max_frame={max_frame}")
+                f"ndarray length mismatch: header says {nbytes} bytes, "
+                f"shape {tuple(shape)} x {dtype} needs {expected}")
         end = _need(body, offset, nbytes)
-        arr = rle_decode_u8(body[offset:end], expected).reshape(shape)
-        return arr, end          # np.repeat already owns fresh memory
-    if nbytes != expected:
+        return _view_or_copy(body, offset, nbytes, dtype, shape,
+                             zero_copy), end
+    # every compressed/quantized encoding expands: cap the expansion target
+    # (from the declared shape) at the same max_frame bound the raw path
+    # enforces via its length prefix, BEFORE any allocation
+    if expected > max_frame:
+        name = {ENC_RLE: "RLE", ENC_F16: "F16", ENC_Q8: "Q8"}.get(
+            enc, f"enc={enc}")
         raise CodecError(
-            f"ndarray length mismatch: header says {nbytes} bytes, "
-            f"shape {tuple(shape)} x {dtype} needs {expected}")
-    end = _need(body, offset, nbytes)
-    arr = np.frombuffer(body[offset:end], dtype=dtype).reshape(shape)
-    return arr.copy(), end       # copy: detach from the recv buffer
+            f"{name} expansion to {expected} bytes exceeds "
+            f"max_frame={max_frame}")
+    if enc == ENC_RLE:
+        if dtype != np.dtype(np.uint8):
+            raise CodecError(f"ENC_RLE only covers uint8, got {dtype}")
+        end = _need(body, offset, nbytes)
+        arr = rle_decode_u8(body[offset:end], count).reshape(shape)
+        return arr, end          # np.repeat already owns fresh memory
+    if enc == ENC_F16:
+        if dtype != np.dtype(np.float32):
+            raise CodecError(f"ENC_F16 only covers float32, got {dtype}")
+        if nbytes != 2 * count:
+            raise CodecError(
+                f"ENC_F16 length mismatch: {nbytes} bytes for {count} "
+                f"elements")
+        end = _need(body, offset, nbytes)
+        half = np.frombuffer(body, np.uint8, count=nbytes,
+                             offset=offset).view(np.uint8).copy()
+        return half.view(np.float16).astype(np.float32).reshape(shape), end
+    if enc == ENC_Q8:
+        if dtype != np.dtype(np.float32):
+            raise CodecError(f"ENC_Q8 only covers float32, got {dtype}")
+        if nbytes != count:
+            raise CodecError(
+                f"ENC_Q8 length mismatch: {nbytes} bytes for {count} "
+                f"elements")
+        if not (np.isfinite(scale) and np.isfinite(offset_val)):
+            raise CodecError("non-finite Q8 scale/offset")
+        end = _need(body, offset, nbytes)
+        q = np.frombuffer(body, np.uint8, count=nbytes, offset=offset)
+        arr = (q.astype(np.float32) * np.float32(scale)
+               + np.float32(offset_val)).reshape(shape)
+        return arr, end
+    raise CodecError(f"unknown ndarray encoding {enc}")
 
 
-def decode_frame(body: bytes,
-                 max_frame: int = DEFAULT_MAX_FRAME) -> Frame:
+def _decode_traj(body, offset: int, max_frame: int, zero_copy: bool):
+    end = _need(body, offset, 2)
+    (count,) = _U16.unpack_from(body, offset)
+    offset = end
+    arrays = {}
+    for _ in range(count):
+        end = _need(body, offset, 1)
+        (nlen,) = _U8.unpack_from(body, offset)
+        offset = end
+        end = _need(body, offset, nlen)
+        try:
+            name = bytes(body[offset:end]).decode("utf-8")
+        except UnicodeDecodeError as e:
+            # must surface as CodecError: the gateway reader only
+            # treats (OSError, CodecError) as connection failures
+            raise CodecError(f"bad trajectory key: {e}") from None
+        offset = end
+        arrays[name], offset = _decode_ndarray(body, offset,
+                                               max_frame=max_frame,
+                                               zero_copy=zero_copy)
+    return arrays, offset
+
+
+def decode_frame(body, max_frame: int = DEFAULT_MAX_FRAME,
+                 zero_copy: bool = False) -> Frame:
     """Decode one frame body (length prefix already stripped).
-    `max_frame` bounds RLE expansion — pass the same limit the stream
-    reader enforces on raw frames."""
+    `max_frame` bounds compressed-payload expansion — pass the same limit
+    the stream reader enforces on raw frames. With ``zero_copy`` the
+    returned arrays may be read-only views over ``body`` (which they keep
+    alive); only pass it for buffers that are never mutated afterwards."""
     if len(body) < _HEADER.size:
         raise TruncatedFrame(f"frame body of {len(body)} bytes < header")
-    magic, ver, kind, flags, actor_id, request_id = _HEADER.unpack_from(body)
+    (magic, ver, kind, flags, actor_id, request_id,
+     param_version) = _HEADER.unpack_from(body)
     if magic != MAGIC:
         raise CodecError(f"bad magic 0x{magic:04x} (stream desynchronized?)")
     if ver != VERSION:
-        raise CodecError(f"unsupported wire version {ver}")
+        raise CodecError(
+            f"wire version {ver} peer, this end speaks {VERSION} — "
+            f"upgrade both ends (capability interop WITHIN a version is "
+            f"negotiated by HELLO, across versions is not)")
     if flags & ~_KNOWN_FLAGS:
         # reject BEFORE touching the payload: an unknown flag means we
         # cannot know how the bytes are encoded, so allocating from them
         # would be garbage at best and a decompression bomb at worst
         raise CodecError(f"unknown flag bits 0x{flags & ~_KNOWN_FLAGS:02x}")
-    if flags & FLAG_RLE and kind not in (KIND_REQUEST, KIND_REPLY):
-        raise CodecError(f"FLAG_RLE is invalid on frame kind {kind}")
+    if flags & _ARRAY_FLAGS and kind in (KIND_ERROR, KIND_HELLO, KIND_SHM):
+        raise CodecError(
+            f"array-encoding flags 0x{flags & _ARRAY_FLAGS:02x} are "
+            f"invalid on frame kind {kind}")
     offset = _HEADER.size
     frame = Frame(kind=kind, actor_id=actor_id, request_id=request_id,
-                  flags=flags)
+                  flags=flags, param_version=param_version)
     if kind in (KIND_REQUEST, KIND_REPLY):
         frame.array, offset = _decode_ndarray(body, offset,
-                                              rle=bool(flags & FLAG_RLE),
-                                              max_frame=max_frame)
+                                              max_frame=max_frame,
+                                              zero_copy=zero_copy)
     elif kind == KIND_HELLO:
         end = _need(body, offset, 4)
         (frame.codecs,) = _U32.unpack_from(body, offset)
         offset = end
     elif kind == KIND_ERROR:
-        frame.message = body[offset:].decode("utf-8", errors="replace")
+        frame.message = bytes(body[offset:]).decode("utf-8",
+                                                    errors="replace")
         offset = len(body)
     elif kind == KIND_TRAJ:
+        frame.arrays, offset = _decode_traj(body, offset, max_frame,
+                                            zero_copy)
+    elif kind == KIND_TRAJ_BATCH:
         end = _need(body, offset, 2)
-        (count,) = _U16.unpack_from(body, offset)
+        (n,) = _U16.unpack_from(body, offset)
         offset = end
-        arrays = {}
-        for _ in range(count):
+        batch = []
+        for _ in range(n):
+            arrays, offset = _decode_traj(body, offset, max_frame,
+                                          zero_copy)
+            batch.append(arrays)
+        frame.traj_batch = batch
+    elif kind == KIND_SHM:
+        names = []
+        for _ in range(2):
             end = _need(body, offset, 1)
             (nlen,) = _U8.unpack_from(body, offset)
             offset = end
             end = _need(body, offset, nlen)
             try:
-                name = body[offset:end].decode("utf-8")
+                names.append(bytes(body[offset:end]).decode("utf-8"))
             except UnicodeDecodeError as e:
-                # must surface as CodecError: the gateway reader only
-                # treats (OSError, CodecError) as connection failures
-                raise CodecError(f"bad trajectory key: {e}") from None
+                raise CodecError(f"bad shm segment name: {e}") from None
             offset = end
-            arrays[name], offset = _decode_ndarray(body, offset)
-        frame.arrays = arrays
+        end = _need(body, offset, 8)
+        (slot_size,) = _U32.unpack_from(body, offset)
+        (num_slots,) = _U32.unpack_from(body, offset + 4)
+        offset = end
+        frame.shm = {"c2s": names[0], "s2c": names[1],
+                     "slot_size": slot_size, "num_slots": num_slots}
     else:
         raise CodecError(f"unknown frame kind {kind}")
     if offset != len(body):
@@ -371,7 +666,8 @@ def decode_frame(body: bytes,
 
 
 def read_frame(read_exact: Callable[[int], bytes],
-               max_frame: int = DEFAULT_MAX_FRAME) -> Optional[Frame]:
+               max_frame: int = DEFAULT_MAX_FRAME,
+               zero_copy: bool = False) -> Optional[Frame]:
     """Read one frame from a stream.
 
     ``read_exact(n)`` must return exactly n bytes, b"" on clean EOF, and may
@@ -392,7 +688,7 @@ def read_frame(read_exact: Callable[[int], bytes],
     if len(body) < body_len:
         raise TruncatedFrame(
             f"EOF after {len(body)}/{body_len} body bytes")
-    return decode_frame(body, max_frame=max_frame)
+    return decode_frame(body, max_frame=max_frame, zero_copy=zero_copy)
 
 
 def recv_exact(sock, n: int) -> bytes:

@@ -1,13 +1,27 @@
-"""TCP transport: disaggregated CPU actor hosts behind a wire.
+"""TCP + shared-memory transport: disaggregated actor hosts behind a wire.
 
 Client side — `SocketTransport`: all actor threads on one host share ONE
 TCP connection; a per-connection ``request_id`` demultiplexes replies back
 to the right actor's reply queue (gRPC-stream-shaped, like SEED RL's
 inference RPC). Trajectory unrolls ride the same connection as ``TRAJ``
 frames, so an actor host needs exactly one socket to the learner box.
-``compress=True`` sends a ``HELLO`` capability frame at connect; once the
-gateway grants ``CODEC_RLE``, uint8 observation payloads go RLE-compressed
-(Atari lanes shrink well; the no-pickle guarantee holds — see codec).
+`SyncSocketTransport` is the per-actor variant (SEED's streaming-RPC
+shape): the submitting thread reads its own reply — zero wakeups.
+`ShmTransport` extends it for co-located hosts: after a ``CODEC_SHM``
+HELLO grant the client creates a pair of `repro.transport.shm.ShmRing`
+segments and frames ride shared memory — zero syscalls — with the TCP
+connection retained for spill (ring full / frame too big), control, and
+liveness.
+
+Sends are scatter-gather: the codec's ``encode_*_parts`` emit header
+bytes + memoryviews over the source arrays, and `sendmsg_all` hands the
+list to ``socket.sendmsg`` — no concatenation copy on the hot path.
+Optional encodings ride the per-connection HELLO negotiation:
+``compress=True`` offers ``CODEC_RLE`` (uint8 payloads), ``quant=``16'/
+'q8'`` offers ``CODEC_QUANT`` (float32 observation payloads), and
+``coalesce=True`` offers ``CODEC_TRAJBATCH`` so a whole actor flush of
+unroll records leaves as ONE ``TRAJ_BATCH`` frame (one syscall / ring
+slot) instead of one frame per lane record.
 
 Server side — `InferenceGateway`: accepts N actor-host connections and
 demultiplexes request frames into the central `InferenceServer`'s request
@@ -15,63 +29,147 @@ queues — the SAME routing the in-process actors use, so remote and local
 actors batch together and the batching deadline + per-(actor, lane)
 recurrent-slot semantics hold unchanged across the wire. Each request
 carries a `_WireReply` whose ``put`` encodes the reply and hands it to the
-connection's dedicated `_ConnWriter` thread (bounded queue), so ONE slow
-actor-host TCP buffer blocks only its own writer — never the server's
-batch loop. A writer whose queue fills is failed and its connection
-closed: the client's pending replies poison, which is the fail-fast
-contract, not a silent stall. To shard the accept loop itself, run several
-gateways in front of one server (`SeedSystem(num_gateways=G)`) and hash
-actor hosts across their addresses (`launch.actor_host`).
+connection's reply channel: a dedicated `_ConnWriter` thread (bounded
+queue) for TCP peers, or a direct s2c ring write for shm peers — the
+latter runs on the server's batch-loop thread itself, saving two thread
+wakeups and two syscalls per frame, which on an oversubscribed host is
+most of the loopback reply latency. A writer whose queue fills is failed
+and its connection closed: the client's pending replies poison, which is
+the fail-fast contract, not a silent stall. To shard the accept loop
+itself, run several gateways in front of one server
+(`SeedSystem(num_gateways=G)`) and hash actor hosts across their
+addresses (`launch.actor_host`).
 
 Fail-fast: a dead server drains its queues with poison `ReplyError`s which
 the writers forward as ``ERROR`` frames before exiting; a dropped
-connection poisons every pending reply client-side. Either way actors
-surface an error instead of blocking forever.
+connection poisons every pending reply client-side. The shm rings carry
+NO liveness state — peer death is always detected on the TCP socket, so a
+dead reader severs the connection exactly like the plain socket path.
 """
 
+import os
 import queue
+import select as _select
 import socket as _socket
 import struct
 import sys
 import threading
 import time
 import traceback
-from typing import Callable, Dict, Optional, Tuple
+from typing import Callable, Dict, List, Optional, Tuple
 
 import numpy as np
 
 from repro.core.inference import InferenceRequest, ReplyError
-from repro.transport.codec import (CODEC_ONPOLICY, CODEC_RLE,
-                                   DEFAULT_MAX_FRAME, FLAG_RLE, KIND_ERROR,
-                                   KIND_HELLO, KIND_REPLY, KIND_REQUEST,
-                                   KIND_TRAJ, SUPPORTED_CODECS, CodecError,
-                                   decode_frame, encode_error, encode_hello,
-                                   encode_reply, encode_request,
-                                   encode_trajectory, read_frame, recv_exact)
+from repro.transport.codec import (CODEC_ONPOLICY, CODEC_QUANT, CODEC_RLE,
+                                   CODEC_SHM, CODEC_TRAJBATCH,
+                                   DEFAULT_MAX_FRAME, FLAG_F16, FLAG_Q8,
+                                   FLAG_RLE, KIND_ERROR, KIND_HELLO,
+                                   KIND_REPLY, KIND_REQUEST, KIND_SHM,
+                                   KIND_TRAJ, KIND_TRAJ_BATCH,
+                                   SUPPORTED_CODECS, CodecError, decode_frame,
+                                   encode_error, encode_hello, encode_reply,
+                                   encode_reply_parts, encode_request,
+                                   encode_request_parts, encode_shm,
+                                   encode_traj_batch_parts,
+                                   encode_trajectory,
+                                   encode_trajectory_parts, read_frame,
+                                   recv_exact)
 from repro.transport.local import Transport
+from repro.transport.shm import (DEFAULT_NUM_SLOTS, DEFAULT_SLOT_SIZE,
+                                 ShmRing, ShmRingError)
 
 Address = Tuple[str, int]
+
+_LEN = struct.Struct(">I")
 
 # TRAJ keys only sent once the gateway granted CODEC_ONPOLICY (an old
 # gateway would forward them into a replay sink that never asked for them)
 _ONPOLICY_TRAJ_KEYS = ("behavior_logprobs", "param_version")
 
+# buffered unroll records before a TRAJ_BATCH flush is forced even without
+# an intervening request (an actor flushes E records then submits, so the
+# cap only matters for pathological callers)
+_TRAJ_COALESCE_CAP = 256
 
-def _offer_mask(compress: bool, onpolicy: bool) -> int:
+_IOV_MAX = 1024        # POSIX minimum for sendmsg iovec count
+
+
+def _is_loopback(host: str) -> bool:
+    return host.startswith("127.") or host in ("::1", "localhost")
+
+
+def sendmsg_all(sock: _socket.socket, parts: List) -> None:
+    """Scatter-gather ``sendall``: one ``sendmsg`` syscall carries the
+    whole header+payload parts list in the common case; partial sends
+    resume by slicing memoryviews, never by copying."""
+    views = []
+    for p in parts:
+        v = p if isinstance(p, memoryview) else memoryview(p)
+        if v.format != "B" or v.ndim != 1:
+            v = v.cast("B")
+        if v.nbytes:
+            views.append(v)
+    while views:
+        sent = sock.sendmsg(views[:_IOV_MAX])
+        while views and sent:
+            if sent >= views[0].nbytes:
+                sent -= views[0].nbytes
+                views.pop(0)
+            else:
+                views[0] = views[0][sent:]
+                sent = 0
+
+
+class _SpinBackoff:
+    """Ring-poll wait strategy: a few ``sched_yield`` passes first (on an
+    oversubscribed host the peer is probably runnable RIGHT NOW and just
+    needs the core), then exponential sleep up to 1 ms so an idle
+    connection costs ~nothing."""
+
+    def __init__(self, yields: int = 32, max_sleep: float = 1e-3):
+        self._yields = yields
+        self._max = max_sleep
+        self._n = 0
+        self._sleep = 1e-5
+
+    def reset(self):
+        self._n = 0
+        self._sleep = 1e-5
+
+    def wait(self):
+        if self._n < self._yields:
+            self._n += 1
+            os.sched_yield()
+            return
+        time.sleep(self._sleep)
+        self._sleep = min(self._sleep * 2.0, self._max)
+
+
+def _offer_mask(compress: bool, onpolicy: bool, quant: Optional[str] = None,
+                coalesce: bool = False, shm: bool = False) -> int:
     """HELLO capability offer: only the codecs the caller actually wants —
     offering everything we support would silently enable features the
     deployment didn't opt into."""
     return ((CODEC_RLE if compress else 0)
-            | (CODEC_ONPOLICY if onpolicy else 0))
+            | (CODEC_ONPOLICY if onpolicy else 0)
+            | (CODEC_QUANT if quant else 0)
+            | (CODEC_TRAJBATCH if coalesce else 0)
+            | (CODEC_SHM if shm else 0))
 
 
 def _apply_hello_grant(transport, frame) -> None:
     """Apply a gateway HELLO grant to a client transport — ONE definition
     for every read path (async recv loop, sync wait_hello, sync reply
     read), so a future capability bit cannot be granted on one path and
-    missed on another."""
+    missed on another. `_post_hello` is the subclass hook that runs AFTER
+    the grant lands (the shm transport creates its rings there)."""
     transport._rle = bool(frame.codecs & CODEC_RLE)
     transport._onpolicy = bool(frame.codecs & CODEC_ONPOLICY)
+    transport._quant = bool(frame.codecs & CODEC_QUANT)
+    transport._trajbatch = bool(frame.codecs & CODEC_TRAJBATCH)
+    transport._shm_granted = bool(frame.codecs & CODEC_SHM)
+    transport._post_hello()
 
 
 def _strip_onpolicy_keys(arrays: Dict[str, np.ndarray]
@@ -83,6 +181,12 @@ def _strip_onpolicy_keys(arrays: Dict[str, np.ndarray]
         return {k: v for k, v in arrays.items()
                 if k not in _ONPOLICY_TRAJ_KEYS}
     return arrays
+
+
+def _check_quant(quant: Optional[str]) -> Optional[str]:
+    if quant not in (None, "f16", "q8"):
+        raise ValueError(f"quant={quant!r}; expected None, 'f16' or 'q8'")
+    return quant
 
 
 class _ScalarReply:
@@ -102,7 +206,8 @@ class SocketTransport(Transport):
 
     def __init__(self, sock: _socket.socket,
                  max_frame: int = DEFAULT_MAX_FRAME,
-                 compress: bool = False, onpolicy: bool = False):
+                 compress: bool = False, onpolicy: bool = False,
+                 quant: Optional[str] = None):
         sock.setsockopt(_socket.IPPROTO_TCP, _socket.TCP_NODELAY, 1)
         self._sock = sock
         self.max_frame = max_frame
@@ -117,9 +222,13 @@ class SocketTransport(Transport):
         # correct, just unoptimized, encoding)
         self._rle = False
         self._onpolicy = False
+        self._quant = False
+        self._trajbatch = False
+        self._shm_granted = False
+        self._quant_mode = _check_quant(quant)
         self._hello = threading.Event()
         self.param_version = 0     # latest behavior version seen on replies
-        offer = _offer_mask(compress, onpolicy)
+        offer = _offer_mask(compress, onpolicy, quant=quant)
         self._onpolicy_offered = bool(offer & CODEC_ONPOLICY)
         if offer:
             try:
@@ -135,17 +244,18 @@ class SocketTransport(Transport):
     @classmethod
     def connect(cls, address: Address, timeout_s: float = 10.0,
                 max_frame: int = DEFAULT_MAX_FRAME,
-                compress: bool = False, onpolicy: bool = False
-                ) -> "SocketTransport":
+                compress: bool = False, onpolicy: bool = False,
+                **kwargs) -> "SocketTransport":
         """Dial the gateway, retrying while it binds (actor hosts and the
-        learner box start concurrently)."""
+        learner box start concurrently). Extra kwargs reach the
+        constructor, so subclasses (sync / shm) share this dialer."""
         deadline = time.perf_counter() + timeout_s
         while True:
             try:
                 sock = _socket.create_connection(address, timeout=2.0)
                 sock.settimeout(None)
                 return cls(sock, max_frame=max_frame, compress=compress,
-                           onpolicy=onpolicy)
+                           onpolicy=onpolicy, **kwargs)
             except OSError:
                 if time.perf_counter() >= deadline:
                     raise
@@ -155,6 +265,15 @@ class SocketTransport(Transport):
     def onpolicy_granted(self) -> bool:
         """True once the gateway's HELLO granted CODEC_ONPOLICY."""
         return self._onpolicy
+
+    @property
+    def _quant_eff(self) -> Optional[str]:
+        """Quantization mode actually on the wire: the requested mode once
+        (and only once) the gateway granted CODEC_QUANT."""
+        return self._quant_mode if self._quant else None
+
+    def _post_hello(self):
+        """Subclass hook: runs after every HELLO grant is applied."""
 
     def wait_hello(self, timeout_s: float = 5.0) -> bool:
         """Block until the gateway answered our HELLO (or no offer was
@@ -175,8 +294,9 @@ class SocketTransport(Transport):
             self._next_id += 1
             self._pending[request_id] = reply
         try:
-            self._send(encode_request(actor_id, request_id, obs,
-                                      compress=self._rle))
+            self._send_parts(encode_request_parts(
+                actor_id, request_id, obs, compress=self._rle,
+                quant=self._quant_eff))
         except OSError as e:
             self._fail(f"send failed: {e}")
         return reply
@@ -189,7 +309,9 @@ class SocketTransport(Transport):
                         actor_id: int = 0):
         """Trajectory sink over the same wire (``flush_lane_unrolls``
         schema); drops silently once the transport has failed — the actor
-        is already being torn down on `error`."""
+        is already being torn down on `error`. (This multiplexed client
+        sends one TRAJ frame per record; the per-actor sync client is the
+        one that coalesces, since its flush boundary is unambiguous.)"""
         if self.error is not None or self._closed.is_set():
             return
         if self._onpolicy_offered and not self._hello.is_set():
@@ -200,7 +322,9 @@ class SocketTransport(Transport):
         if not self._onpolicy:
             arrays = _strip_onpolicy_keys(arrays)
         try:
-            self._send(encode_trajectory(actor_id, arrays))
+            self._send_parts(encode_trajectory_parts(
+                actor_id, arrays, compress=self._rle,
+                quant=self._quant_eff))
         except OSError as e:
             self._fail(f"send failed: {e}")
 
@@ -218,6 +342,10 @@ class SocketTransport(Transport):
     def _send(self, frame: bytes):
         with self._send_lock:
             self._sock.sendall(frame)
+
+    def _send_parts(self, parts: List):
+        with self._send_lock:
+            sendmsg_all(self._sock, parts)
 
     def _fail(self, message: str):
         """Poison every pending reply so no actor blocks on a dead wire."""
@@ -240,9 +368,8 @@ class SocketTransport(Transport):
                 if frame is None:                      # clean peer close
                     break
                 if frame.kind == KIND_REPLY:
-                    if frame.actor_id > self.param_version:
-                        # behavior-param version rides the actor_id slot
-                        self.param_version = frame.actor_id
+                    if frame.param_version > self.param_version:
+                        self.param_version = frame.param_version
                     reply = self._pop(frame.request_id)
                     if reply is not None:
                         reply.put(frame.array)
@@ -275,12 +402,13 @@ class SocketTransport(Transport):
 
 class _ConnWriter:
     """Per-connection reply writer: the server's batch loop hands encoded
-    frames to a bounded queue and returns immediately; this thread does
-    the blocking ``sendall``. One actor host with a full TCP buffer can
-    therefore stall only its own writer — every other connection (and the
-    batch loop itself) keeps moving. A queue that fills means the peer has
-    stopped reading: the writer FAILS the connection (shutdown), which
-    poisons the client's pending replies — fail-fast, not a hidden stall.
+    frames (bytes, or scatter-gather parts lists) to a bounded queue and
+    returns immediately; this thread does the blocking send. One actor
+    host with a full TCP buffer can therefore stall only its own writer —
+    every other connection (and the batch loop itself) keeps moving. A
+    queue that fills means the peer has stopped reading: the writer FAILS
+    the connection (shutdown), which poisons the client's pending replies
+    — fail-fast, not a hidden stall.
 
     `stop()` poisons the queue with a sentinel; frames already enqueued
     (including the ``ERROR`` drain of a dying server) are flushed first,
@@ -301,6 +429,14 @@ class _ConnWriter:
             return
         try:
             self._q.put_nowait(frame)
+        except queue.Full:
+            self.fail()
+
+    def send_parts(self, parts: List):
+        if self.failed or self._stop.is_set():
+            return
+        try:
+            self._q.put_nowait(list(parts))
         except queue.Full:
             self.fail()
 
@@ -335,34 +471,63 @@ class _ConnWriter:
             if self.failed:
                 continue         # drain without sending
             try:
-                self._sock.sendall(frame)
+                if isinstance(frame, list):
+                    sendmsg_all(self._sock, frame)
+                else:
+                    self._sock.sendall(frame)
             except OSError:
                 self.failed = True
+
+
+class _ShmReplyChannel:
+    """Reply channel for an shm-attached connection: frames go straight
+    into the s2c ring FROM THE CALLING THREAD (the server's batch loop) —
+    a memcpy instead of a queue hand-off + writer wakeup + sendall. Falls
+    back to the TCP writer when the ring is full or the frame exceeds a
+    slot (the client polls both paths, so spill preserves delivery)."""
+
+    def __init__(self, ring: ShmRing, writer: _ConnWriter,
+                 gateway: "InferenceGateway"):
+        self._ring = ring
+        self._writer = writer
+        self._gateway = gateway
+
+    def send(self, frame: bytes):
+        if not self._ring.try_put([frame]):
+            self._gateway._bump("shm_spill_frames")
+            self._writer.send(frame)
+
+    def send_parts(self, parts: List):
+        if not self._ring.try_put(parts):
+            self._gateway._bump("shm_spill_frames")
+            self._writer.send_parts(parts)
 
 
 class _WireReply:
     """Queue-shaped reply proxy: ``put(result)`` encodes the action array
     (or poison `ReplyError`) on the caller's thread — cheap; actions are a
-    few dozen bytes — and hands the frame to the connection's `_ConnWriter`
-    for the blocking send. Writer failures are contained: a vanished actor
-    host must not take the server (and every other connection's actors)
-    down with it."""
+    few dozen bytes — and hands the parts to the connection's reply
+    channel: the `_ConnWriter` thread for TCP peers, a direct ring write
+    for shm peers. Writer failures are contained: a vanished actor host
+    must not take the server (and every other connection's actors) down
+    with it."""
 
-    def __init__(self, gateway: "InferenceGateway", writer: _ConnWriter,
+    def __init__(self, gateway: "InferenceGateway", channel,
                  request_id: int):
         self._gateway = gateway
-        self._writer = writer
+        self._channel = channel
         self._request_id = request_id
 
     def put(self, result):
         if isinstance(result, ReplyError):
             self._gateway._bump("error_frames")
-            frame = encode_error(self._request_id, result.message)
+            self._channel.send(encode_error(self._request_id,
+                                            result.message))
         else:
             self._gateway._bump("reply_frames")
-            frame = encode_reply(self._request_id, np.asarray(result),
-                                 version=self._gateway._version())
-        self._writer.send(frame)
+            self._channel.send_parts(encode_reply_parts(
+                self._request_id, np.asarray(result),
+                version=self._gateway._version()))
 
 
 class _SyncReply:
@@ -391,11 +556,19 @@ class SyncSocketTransport(Transport):
     interleave safely because TRAJ frames are strictly client -> gateway.
     A mid-frame timeout keeps partial bytes buffered, so retrying `get` on
     the same reply never desynchronizes the stream.
+
+    ``coalesce=True`` offers ``CODEC_TRAJBATCH``: unroll records buffer
+    client-side and leave as ONE ``TRAJ_BATCH`` frame at the next request
+    submit (the actor's flush-then-submit cadence makes that boundary
+    tight: at most one request of extra latency) or on `close()` — so the
+    trajectory ledger is conserved, just batched.
     """
 
     def __init__(self, sock: _socket.socket,
                  max_frame: int = DEFAULT_MAX_FRAME,
-                 compress: bool = False, onpolicy: bool = False):
+                 compress: bool = False, onpolicy: bool = False,
+                 quant: Optional[str] = None, coalesce: bool = False,
+                 _offer_shm: bool = False):
         sock.setsockopt(_socket.IPPROTO_TCP, _socket.TCP_NODELAY, 1)
         self._sock = sock
         self.max_frame = max_frame
@@ -403,10 +576,17 @@ class SyncSocketTransport(Transport):
         self._next_id = 1
         self._rle = False        # enabled by the gateway's HELLO grant
         self._onpolicy = False
+        self._quant = False
+        self._trajbatch = False
+        self._shm_granted = False
+        self._quant_mode = _check_quant(quant)
+        self._coalesce = coalesce
+        self._traj_buf: List[Tuple[int, Dict[str, np.ndarray]]] = []
         self._hello_seen = False
         self.param_version = 0   # latest behavior version seen on replies
         self.error: Optional[str] = None
-        offer = _offer_mask(compress, onpolicy)
+        offer = _offer_mask(compress, onpolicy, quant=quant,
+                            coalesce=coalesce, shm=_offer_shm)
         if not offer:
             self._hello_seen = True          # nothing to negotiate
         else:
@@ -421,6 +601,13 @@ class SyncSocketTransport(Transport):
     def onpolicy_granted(self) -> bool:
         """True once the gateway's HELLO granted CODEC_ONPOLICY."""
         return self._onpolicy
+
+    @property
+    def _quant_eff(self) -> Optional[str]:
+        return self._quant_mode if self._quant else None
+
+    def _post_hello(self):
+        """Subclass hook: runs after every HELLO grant is applied."""
 
     def wait_hello(self, timeout_s: float = 5.0) -> bool:
         """Drain frames in the calling thread until the gateway's HELLO
@@ -444,19 +631,13 @@ class SyncSocketTransport(Transport):
         return self._hello_seen and self.error is None
 
     def submit_batch(self, actor_id: int, obs: np.ndarray) -> _SyncReply:
+        self._flush_traj()
         request_id = self._next_id
         self._next_id += 1
         if self.error is None:
-            try:
-                # clear any sub-second timeout a previous timed get() left
-                # on the socket: a partially-sent frame on a send timeout
-                # would desynchronize the whole stream
-                self._sock.settimeout(None)
-                self._sock.sendall(
-                    encode_request(actor_id, request_id, np.asarray(obs),
-                                   compress=self._rle))
-            except OSError as e:
-                self.error = f"send failed: {e}"
+            self._send_parts(encode_request_parts(
+                actor_id, request_id, np.asarray(obs),
+                compress=self._rle, quant=self._quant_eff))
         return _SyncReply(self, request_id)
 
     def submit(self, actor_id: int, obs: np.ndarray):
@@ -469,18 +650,48 @@ class SyncSocketTransport(Transport):
             return
         if not self._onpolicy:
             arrays = _strip_onpolicy_keys(arrays)
-        try:
-            self._sock.settimeout(None)      # see submit_batch
-            self._sock.sendall(encode_trajectory(actor_id, arrays))
-        except OSError as e:
-            self.error = f"send failed: {e}"
+        if self._coalesce and self._trajbatch:
+            # records are freshly-stacked copies (flush_lane_unrolls), so
+            # holding them until the next request boundary is safe
+            self._traj_buf.append((actor_id, arrays))
+            if len(self._traj_buf) >= _TRAJ_COALESCE_CAP:
+                self._flush_traj()
+            return
+        self._send_parts(encode_trajectory_parts(
+            actor_id, arrays, compress=self._rle, quant=self._quant_eff))
+
+    def _flush_traj(self):
+        if not self._traj_buf:
+            return
+        buf, self._traj_buf = self._traj_buf, []
+        if self.error is not None:
+            return
+        by_actor: Dict[int, List[Dict[str, np.ndarray]]] = {}
+        for aid, arrays in buf:
+            by_actor.setdefault(aid, []).append(arrays)
+        for aid, trajs in by_actor.items():
+            self._send_parts(encode_traj_batch_parts(
+                aid, trajs, compress=self._rle, quant=self._quant_eff))
 
     def close(self):
+        self._flush_traj()       # conserve the trajectory ledger
         try:
             self._sock.shutdown(_socket.SHUT_RDWR)
         except OSError:
             pass
         self._sock.close()
+
+    # ------------------------------------------------------------ sending
+
+    def _send_parts(self, parts: List):
+        try:
+            # clear any sub-second timeout a previous timed get() left on
+            # the socket: a partially-sent frame on a send timeout would
+            # desynchronize the whole stream
+            self._sock.settimeout(None)
+            sendmsg_all(self._sock, parts)
+        except OSError as e:
+            self.error = f"send failed: {e}"
 
     # ------------------------------------------------------------ reading
 
@@ -525,9 +736,8 @@ class SyncSocketTransport(Transport):
             while True:
                 frame = self._next_frame(deadline)
                 if frame.kind == KIND_REPLY:
-                    if frame.actor_id > self.param_version:
-                        # behavior-param version rides the actor_id slot
-                        self.param_version = frame.actor_id
+                    if frame.param_version > self.param_version:
+                        self.param_version = frame.param_version
                     if frame.request_id == request_id:
                         return frame.array
                     continue            # stale reply from an abandoned rid
@@ -551,6 +761,124 @@ class SyncSocketTransport(Transport):
             return ReplyError(self.error)
 
 
+class ShmTransport(SyncSocketTransport):
+    """Co-located client: frames ride a shared-memory ring pair, TCP
+    stays as the spill + control + liveness channel.
+
+    The handshake is all client-driven: ``CODEC_SHM`` is offered only
+    when dialing a loopback address; once the gateway grants it the
+    client CREATES a (c2s, s2c) `ShmRing` pair and announces names +
+    geometry in one ``KIND_SHM`` frame over TCP. Ring slots persist until
+    the reader consumes them, so the client may start writing c2s
+    immediately — the attach frame is ordered before any spilled TCP
+    frame on the same stream, and ring frames are only read after it.
+
+    Sends: a frame goes into the ring as one slot (a memcpy, no syscall);
+    if the ring is full or the frame exceeds the slot payload it spills
+    to TCP via the normal ``sendmsg`` path. Receives: the reply wait
+    polls the s2c ring, then the socket (spill / HELLO / ERROR / EOF),
+    then backs off (`_SpinBackoff`). Gateway death is therefore noticed
+    exactly like the plain socket transport — TCP EOF — and poisons the
+    pending reply; the rings never hold liveness state.
+    """
+
+    def __init__(self, sock: _socket.socket,
+                 max_frame: int = DEFAULT_MAX_FRAME,
+                 compress: bool = False, onpolicy: bool = False,
+                 quant: Optional[str] = None, coalesce: bool = False,
+                 slot_size: int = DEFAULT_SLOT_SIZE,
+                 num_slots: int = DEFAULT_NUM_SLOTS):
+        self._c2s: Optional[ShmRing] = None
+        self._s2c: Optional[ShmRing] = None
+        self._slot_size = slot_size
+        self._num_slots = num_slots
+        self._backoff = _SpinBackoff()
+        self.shm_frames = 0      # frames that rode the ring (sent)
+        self.shm_replies = 0     # frames that arrived via the ring
+        self.spill_frames = 0    # frames that fell back to TCP
+        peer = sock.getpeername()[0]
+        super().__init__(sock, max_frame=max_frame, compress=compress,
+                         onpolicy=onpolicy, quant=quant, coalesce=coalesce,
+                         _offer_shm=_is_loopback(peer))
+
+    @property
+    def shm_active(self) -> bool:
+        return self._c2s is not None
+
+    def _post_hello(self):
+        if not self._shm_granted or self._c2s is not None \
+                or self.error is not None:
+            return
+        c2s = ShmRing.create(self._slot_size, self._num_slots)
+        s2c = ShmRing.create(self._slot_size, self._num_slots)
+        try:
+            self._sock.settimeout(None)
+            self._sock.sendall(encode_shm(c2s.name, s2c.name,
+                                          self._slot_size,
+                                          self._num_slots))
+        except OSError as e:
+            self.error = f"send failed: {e}"
+            c2s.unlink()
+            s2c.unlink()
+            return
+        self._c2s, self._s2c = c2s, s2c
+
+    # ------------------------------------------------------------ sending
+
+    def _send_parts(self, parts: List):
+        if self._c2s is not None and self.error is None:
+            if self._c2s.try_put(parts):
+                self.shm_frames += 1
+                return
+            self.spill_frames += 1
+        super()._send_parts(parts)
+
+    # ------------------------------------------------------------ reading
+
+    def _next_frame(self, deadline):
+        if self._s2c is None:
+            return super()._next_frame(deadline)
+        while True:
+            payload = self._s2c.try_get()
+            if payload is not None:
+                self._backoff.reset()
+                self.shm_replies += 1
+                return _decode_ring_frame(payload, self.max_frame)
+            if self._buf:
+                # mid-frame on the TCP path: finish it (the rest of the
+                # bytes are already in flight on loopback)
+                return super()._next_frame(deadline)
+            readable, _, _ = _select.select([self._sock], [], [], 0)
+            if readable:
+                self._backoff.reset()
+                return super()._next_frame(deadline)
+            if deadline is not None and time.perf_counter() >= deadline:
+                raise queue.Empty
+            self._backoff.wait()
+
+    def close(self):
+        super().close()          # flush trajectories, sever TCP
+        for ring in (self._c2s, self._s2c):
+            if ring is not None:
+                ring.unlink()    # client created them, client unlinks
+        self._c2s = self._s2c = None
+
+
+def _decode_ring_frame(payload: bytes, max_frame: int):
+    """Ring slots carry whole wire frames (length prefix included) so the
+    shm and TCP paths share one codec; cross-check the prefix against the
+    slot length before decoding."""
+    if len(payload) < 4:
+        raise CodecError(f"ring frame of {len(payload)} bytes")
+    (body_len,) = _LEN.unpack_from(payload)
+    if body_len != len(payload) - 4:
+        raise CodecError(
+            f"ring frame length prefix {body_len} != payload "
+            f"{len(payload) - 4}: ring corrupt")
+    return decode_frame(memoryview(payload)[4:], max_frame=max_frame,
+                        zero_copy=True)
+
+
 class InferenceGateway:
     """Server half of the wire: N connections -> one `InferenceServer`.
 
@@ -558,6 +886,12 @@ class InferenceGateway:
     server's queue (each carrying a `_WireReply` that writes the response
     back from the server thread), trajectories into ``sink``. ``port=0``
     binds an ephemeral loopback port; read ``address`` after `start()`.
+
+    Co-located peers that negotiated ``CODEC_SHM`` attach a ring pair via
+    one ``KIND_SHM`` frame; from then on the reader polls ring + socket
+    and replies go straight into the s2c ring from the server's batch
+    loop. ``allow_shm=False`` refuses the grant (deployment policy);
+    non-loopback peers are refused unconditionally.
     """
 
     def __init__(self, server, sink: Optional[Callable] = None,
@@ -565,7 +899,7 @@ class InferenceGateway:
                  max_frame: int = DEFAULT_MAX_FRAME,
                  gil_switch_interval_s: Optional[float] = 1e-3,
                  version_source: Optional[Callable] = None,
-                 onpolicy: bool = False):
+                 onpolicy: bool = False, allow_shm: bool = True):
         self.server = server
         self.sink = sink
         self._bind = (host, port)
@@ -579,6 +913,7 @@ class InferenceGateway:
         # system would invite TRAJ metadata its sink never asked for
         # (mirror of the client-side _offer_mask principle)
         self.onpolicy = onpolicy
+        self.allow_shm = allow_shm
         # every wire reply crosses two thread wakeups in this process
         # (reader -> server loop -> send); under CPython's default 5 ms GIL
         # slice a compute-bound peer thread turns each wakeup into a
@@ -593,15 +928,20 @@ class InferenceGateway:
         self._threads = []
         self._conns = []
         self._lock = threading.Lock()
+        # traj_frames counts trajectory RECORDS delivered to the sink (a
+        # TRAJ_BATCH frame counts each coalesced record), so the ledger is
+        # conserved whether or not the client coalesces
         self.stats = {"connections": 0, "request_frames": 0,
                       "reply_frames": 0, "error_frames": 0, "traj_frames": 0,
-                      "hello_frames": 0, "rle_request_frames": 0}
+                      "hello_frames": 0, "rle_request_frames": 0,
+                      "quant_request_frames": 0, "traj_batch_frames": 0,
+                      "shm_conns": 0, "shm_frames": 0, "shm_spill_frames": 0}
         self.error: Optional[str] = None
 
-    def _bump(self, key: str):
+    def _bump(self, key: str, n: int = 1):
         # N reader threads + the server loop all count; += is not atomic
         with self._lock:
-            self.stats[key] += 1
+            self.stats[key] += n
 
     def _version(self) -> int:
         return self.version_source() if self.version_source else 0
@@ -653,46 +993,114 @@ class InferenceGateway:
             t.start()
             self._threads.append(t)
 
+    # ------------------------------------------------------- per-connection
+
+    def _next_conn_frame(self, sock, state):
+        """One frame from this connection: blocking TCP read until a ring
+        is attached; afterwards poll ring first (the hot path), then the
+        socket (spill / control / EOF), then back off. Returns
+        (frame, via_shm); frame None means clean EOF or gateway stop."""
+        c2s = state["c2s"]
+        if c2s is None:
+            return read_frame(lambda n: recv_exact(sock, n),
+                              self.max_frame, zero_copy=True), False
+        backoff = state["backoff"]
+        while not self._stop.is_set():
+            payload = c2s.try_get()
+            if payload is not None:
+                backoff.reset()
+                return _decode_ring_frame(payload, self.max_frame), True
+            readable, _, _ = _select.select([sock], [], [], 0)
+            if readable:
+                backoff.reset()
+                return read_frame(lambda n: recv_exact(sock, n),
+                                  self.max_frame, zero_copy=True), False
+            backoff.wait()
+        return None, False
+
+    def _handle_frame(self, frame, sock, writer, state) -> None:
+        if frame.kind == KIND_REQUEST:
+            self._bump("request_frames")
+            if frame.flags & FLAG_RLE:
+                self._bump("rle_request_frames")
+            if frame.flags & (FLAG_F16 | FLAG_Q8):
+                self._bump("quant_request_frames")
+            if frame.array.ndim < 1:
+                # contain malformed requests to THIS connection: a 0-d obs
+                # would blow up inside the server's batch loop and
+                # _fatal() the whole plane for every peer
+                raise CodecError(
+                    "REQUEST obs must be lane-batched (ndim >= 1), "
+                    f"got a {frame.array.ndim}-d array")
+            self.server.submit_request(InferenceRequest(
+                frame.actor_id, frame.array,
+                _WireReply(self, state["reply_channel"],
+                           frame.request_id)))
+        elif frame.kind == KIND_TRAJ:
+            self._bump("traj_frames")
+            if self.sink is not None:
+                self.sink(frame.arrays)
+        elif frame.kind == KIND_TRAJ_BATCH:
+            self._bump("traj_batch_frames")
+            self._bump("traj_frames", len(frame.traj_batch))
+            if self.sink is not None:
+                for arrays in frame.traj_batch:
+                    self.sink(arrays)
+        elif frame.kind == KIND_HELLO:
+            # negotiate per connection: grant the intersection of the
+            # client's offer, what this codec supports, and what this
+            # gateway's deployment opted into
+            self._bump("hello_frames")
+            grant = SUPPORTED_CODECS
+            if not self.onpolicy:
+                grant &= ~CODEC_ONPOLICY
+            if not (self.allow_shm and state["loopback"]):
+                grant &= ~CODEC_SHM       # shm only for co-located peers
+            writer.send(encode_hello(frame.codecs & grant))
+        elif frame.kind == KIND_SHM:
+            if not (self.allow_shm and state["loopback"]):
+                raise CodecError("SHM attach without a CODEC_SHM grant")
+            if state["c2s"] is not None:
+                raise CodecError("duplicate SHM attach on one connection")
+            c2s = ShmRing.attach(frame.shm["c2s"], frame.shm["slot_size"],
+                                 frame.shm["num_slots"])
+            try:
+                s2c = ShmRing.attach(frame.shm["s2c"],
+                                     frame.shm["slot_size"],
+                                     frame.shm["num_slots"])
+            except Exception:
+                c2s.close()
+                raise
+            state["c2s"], state["s2c"] = c2s, s2c
+            state["reply_channel"] = _ShmReplyChannel(s2c, writer, self)
+            self._bump("shm_conns")
+        else:
+            raise CodecError(
+                f"unexpected frame kind {frame.kind} on gateway")
+
     def _read_conn(self, sock):
         writer = _ConnWriter(sock)           # replies leave via this thread
         try:
+            peer = sock.getpeername()[0]
+        except OSError:
+            peer = ""
+        state = {"c2s": None, "s2c": None, "reply_channel": writer,
+                 "loopback": _is_loopback(peer),
+                 "backoff": _SpinBackoff()}
+        try:
             while not self._stop.is_set():
-                frame = read_frame(lambda n: recv_exact(sock, n),
-                                   self.max_frame)
+                frame, via_shm = self._next_conn_frame(sock, state)
                 if frame is None:
                     break
-                if frame.kind == KIND_REQUEST:
-                    self._bump("request_frames")
-                    if frame.flags & FLAG_RLE:
-                        self._bump("rle_request_frames")
-                    if frame.array.ndim < 1:
-                        # contain malformed requests to THIS connection: a
-                        # 0-d obs would blow up inside the server's batch
-                        # loop and _fatal() the whole plane for every peer
-                        raise CodecError(
-                            "REQUEST obs must be lane-batched (ndim >= 1), "
-                            f"got a {frame.array.ndim}-d array")
-                    self.server.submit_request(InferenceRequest(
-                        frame.actor_id, frame.array,
-                        _WireReply(self, writer, frame.request_id)))
-                elif frame.kind == KIND_TRAJ:
-                    self._bump("traj_frames")
-                    if self.sink is not None:
-                        self.sink(frame.arrays)
-                elif frame.kind == KIND_HELLO:
-                    # negotiate per connection: grant the intersection of
-                    # the client's offer, what this codec supports, and
-                    # what this gateway's deployment opted into
-                    self._bump("hello_frames")
-                    grant = SUPPORTED_CODECS if self.onpolicy \
-                        else SUPPORTED_CODECS & ~CODEC_ONPOLICY
-                    writer.send(encode_hello(frame.codecs & grant))
-                else:
-                    raise CodecError(
-                        f"unexpected frame kind {frame.kind} on gateway")
-        except (OSError, CodecError):
+                if via_shm:
+                    self._bump("shm_frames")
+                self._handle_frame(frame, sock, writer, state)
+        except (OSError, CodecError, ShmRingError):
             if not self._stop.is_set():
                 self.error = traceback.format_exc()
         finally:
             writer.stop()
             sock.close()
+            for ring in (state["c2s"], state["s2c"]):
+                if ring is not None:
+                    ring.close()         # client owns unlink

@@ -1,0 +1,550 @@
+"""Wire hot-path tests: quantized float framing (F16/Q8), zero-copy
+scatter-gather encoding, TRAJ batching, the shared-memory ring, and the
+ShmTransport end-to-end contracts.
+
+The load-bearing ones mirror `test_transport.py`'s philosophy: a shm
+rollout with quantization OFF must be BIT-identical to the in-process
+backend (the ring replaces only the byte carriage), and the best-of-N
+ping probe must show the ring no slower than loopback TCP — the whole
+reason the transport exists.
+"""
+
+import io
+import time
+
+import numpy as np
+import pytest
+
+from repro.core.inference import InferenceServer, ReplyError
+from repro.envs.catch import CatchEnv
+from repro.launch.actor_host import ActorHostPool
+from repro.transport import codec
+from repro.transport.shm import (DEFAULT_NUM_SLOTS, DEFAULT_SLOT_SIZE,
+                                 ShmRing, ShmRingError)
+from repro.transport.socket import (InferenceGateway, ShmTransport,
+                                    SyncSocketTransport)
+
+
+def det_policy(obs, ids):
+    flat = np.abs(obs.reshape(obs.shape[0], -1))
+    return (flat.sum(axis=1) * 997.0).astype(np.int64) % CatchEnv.num_actions
+
+
+# ----------------------------------------------------- quantized framing
+
+def test_f16_roundtrip_equals_float16_cast():
+    """ENC_F16 is exactly the float16 cast: decode == arr.astype(f16)
+    back in f32, and the frame advertises FLAG_F16 at half the raw size."""
+    rng = np.random.default_rng(0)
+    arr = (rng.standard_normal((8, 50)) * 10).astype(np.float32)
+    wire = codec.encode_request(1, 2, arr, quant="f16")
+    raw = codec.encode_request(1, 2, arr)
+    assert len(wire) < len(raw) - arr.nbytes // 4    # ~2x on the payload
+    frame = codec.decode_frame(wire[4:])
+    assert frame.flags & codec.FLAG_F16
+    assert frame.array.dtype == np.float32
+    np.testing.assert_array_equal(
+        frame.array, arr.astype(np.float16).astype(np.float32))
+
+
+def test_f16_skipped_on_overflow_and_nonfinite():
+    """Values outside float16 range (or inf/nan anywhere) must ship raw —
+    a lossy codec that minted infs would corrupt the policy input."""
+    big = np.array([[1e6, 1.0]], np.float32)         # > 65504
+    frame = codec.decode_frame(
+        codec.encode_request(1, 2, big, quant="f16")[4:])
+    assert not frame.flags & codec.FLAG_F16
+    np.testing.assert_array_equal(frame.array, big)
+    naughty = np.array([[np.inf, 0.5]], np.float32)
+    frame = codec.decode_frame(
+        codec.encode_request(1, 2, naughty, quant="f16")[4:])
+    assert not frame.flags & codec.FLAG_F16
+    np.testing.assert_array_equal(frame.array, naughty)
+
+
+def test_q8_roundtrip_error_bound_and_constant_exactness():
+    """ENC_Q8 affine int8: max abs error <= scale/2 where
+    scale = (max-min)/255; a constant array decodes EXACTLY (scale 0
+    means offset carries the value)."""
+    rng = np.random.default_rng(1)
+    arr = (rng.random((16, 50)) * 7 - 3).astype(np.float32)
+    wire = codec.encode_request(3, 4, arr, quant="q8")
+    raw = codec.encode_request(3, 4, arr)
+    assert len(wire) < len(raw) // 3                 # ~4x on the payload
+    frame = codec.decode_frame(wire[4:])
+    assert frame.flags & codec.FLAG_Q8
+    assert frame.array.dtype == np.float32
+    scale = (float(arr.max()) - float(arr.min())) / 255.0
+    assert np.abs(frame.array - arr).max() <= scale / 2 + 1e-6
+    const = np.full((4, 50), 2.5, np.float32)
+    out = codec.decode_frame(
+        codec.encode_request(1, 1, const, quant="q8")[4:])
+    assert out.flags & codec.FLAG_Q8
+    np.testing.assert_array_equal(out.array, const)
+
+
+def test_quant_only_when_smaller_and_only_f32():
+    # tiny f32 arrays: the 8-byte q8 prologue eats the win -> raw
+    tiny = np.zeros(2, np.float32)
+    assert not codec.decode_frame(
+        codec.encode_request(1, 1, tiny, quant="q8")[4:]).flags \
+        & codec.FLAG_Q8
+    # non-f32 payloads never quantize, whatever was requested
+    for a in (np.zeros((4, 50), np.float64), np.zeros((4, 50), np.uint8),
+              np.zeros((4, 50), np.int32)):
+        f = codec.decode_frame(codec.encode_request(1, 1, a, quant="f16")[4:])
+        assert not f.flags & (codec.FLAG_F16 | codec.FLAG_Q8)
+        assert f.array.dtype == a.dtype
+    with pytest.raises(codec.CodecError, match="quant"):
+        codec.encode_request(1, 1, np.zeros((4, 50), np.float32),
+                             quant="lz4")
+
+
+def test_quant_property_roundtrip_bounds():
+    pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    @settings(deadline=None, max_examples=40)
+    @given(st.integers(0, 2 ** 31 - 1), st.integers(3, 200),
+           st.sampled_from(["f16", "q8"]),
+           st.floats(0.01, 1e4))
+    def roundtrip(seed, n, quant, span):
+        rng = np.random.default_rng(seed)
+        arr = ((rng.random(n) - 0.5) * span).astype(np.float32)
+        frame = codec.decode_frame(
+            codec.encode_request(1, seed, arr, quant=quant)[4:])
+        assert frame.array.dtype == np.float32
+        assert frame.array.shape == arr.shape
+        if quant == "f16" and frame.flags & codec.FLAG_F16:
+            np.testing.assert_array_equal(
+                frame.array, arr.astype(np.float16).astype(np.float32))
+        elif quant == "q8" and frame.flags & codec.FLAG_Q8:
+            scale = (float(arr.max()) - float(arr.min())) / 255.0
+            assert np.abs(frame.array - arr).max() <= scale / 2 + 1e-6
+        else:                                         # fell back to raw
+            np.testing.assert_array_equal(frame.array, arr)
+
+    roundtrip()
+
+
+def test_traj_quant_applies_only_to_obs_key():
+    """Lossy framing is an obs-only concession: rewards/dones/logprobs in
+    the same TRAJ must stay bit-exact or the learner's targets drift."""
+    traj = {"obs": np.random.rand(8, 50).astype(np.float32),
+            "rewards": np.random.rand(8).astype(np.float32) * 100,
+            "dones": np.zeros(8, np.float32)}
+    out = codec.decode_frame(
+        codec.encode_trajectory(1, traj, quant="q8")[4:])
+    assert out.flags & codec.FLAG_Q8
+    scale = (float(traj["obs"].max()) - float(traj["obs"].min())) / 255.0
+    assert np.abs(out.arrays["obs"] - traj["obs"]).max() <= scale / 2 + 1e-6
+    np.testing.assert_array_equal(out.arrays["rewards"], traj["rewards"])
+    np.testing.assert_array_equal(out.arrays["dones"], traj["dones"])
+
+
+# --------------------------------------- zero-copy parts + TRAJ batching
+
+def test_parts_encoding_matches_joined_and_shares_memory():
+    """encode_*_parts is the same bytes as encode_* without the copy: the
+    data part is a memoryview over the caller's array."""
+    arr = np.random.rand(16, 84).astype(np.float32)
+    parts = codec.encode_request_parts(7, 9, arr)
+    joined = b"".join(bytes(p) for p in parts)
+    assert joined == codec.encode_request(7, 9, arr)
+    assert codec.parts_len(parts) == len(joined)
+    views = [p for p in parts if isinstance(p, memoryview)]
+    assert any(getattr(v, "obj", None) is arr for v in views), \
+        "request payload was copied, not viewed"
+    # trajectory + reply parts agree with their joined forms too
+    traj = {"obs": arr, "a": np.arange(16, dtype=np.int64)}
+    assert b"".join(bytes(p) for p in
+                    codec.encode_trajectory_parts(3, traj)) == \
+        codec.encode_trajectory(3, traj)
+    assert b"".join(bytes(p) for p in
+                    codec.encode_reply_parts(5, arr, version=2)) == \
+        codec.encode_reply(5, arr, version=2)
+
+
+def test_zero_copy_decode_views_when_aligned():
+    """zero_copy=True exposes u8 payloads as read-only views over the recv
+    buffer (alignment always holds for u8); writes must be refused."""
+    arr = np.arange(4 * 84 * 84, dtype=np.uint8).reshape(4, 84, 84)
+    body = codec.encode_request(1, 1, arr)[4:]
+    frame = codec.decode_frame(body, zero_copy=True)
+    assert np.array_equal(frame.array, arr)
+    assert not frame.array.flags.writeable
+    assert frame.array.base is not None, "u8 decode copied despite zero_copy"
+    with pytest.raises(ValueError):
+        frame.array[0, 0, 0] = 1
+    # default path stays a private, writable copy
+    frame2 = codec.decode_frame(body)
+    frame2.array[0, 0, 0] = 1
+
+
+def test_traj_batch_roundtrip_and_limits():
+    """KIND_TRAJ_BATCH carries N unrolls in one frame; decode returns them
+    in order, each with intact keys/dtypes; empty batches are refused."""
+    rng = np.random.default_rng(2)
+    trajs = [{"obs": rng.random((4, 50)).astype(np.float32),
+              "actions": rng.integers(0, 3, 4).astype(np.int32)}
+             for _ in range(5)]
+    wire = codec.encode_traj_batch(9, trajs)
+    frame = codec.decode_frame(wire[4:])
+    assert frame.kind == codec.KIND_TRAJ_BATCH and frame.actor_id == 9
+    assert len(frame.traj_batch) == 5
+    for got, want in zip(frame.traj_batch, trajs):
+        assert sorted(got) == sorted(want)
+        for k in want:
+            assert got[k].dtype == want[k].dtype
+            np.testing.assert_array_equal(got[k], want[k])
+    # one frame << N solo frames: the header+key dedup is the point
+    solo = sum(len(codec.encode_trajectory(9, t)) for t in trajs)
+    assert len(wire) < solo
+    with pytest.raises(codec.CodecError, match="batch"):
+        codec.encode_traj_batch(9, [])
+
+
+def test_expansion_caps_checked_before_allocation():
+    """Hostile quant/RLE frames cannot out-expand max_frame: the declared
+    decode size is checked BEFORE any allocation, with a named error."""
+    arr = np.zeros(4096, np.float32)
+    arr[0] = 1.0                                     # make q8 applicable
+    wire = codec.encode_request(1, 1, arr, quant="q8")
+    assert codec.decode_frame(wire[4:]).array.size == 4096
+    with pytest.raises(codec.CodecError, match="Q8"):
+        codec.decode_frame(wire[4:], max_frame=1024)
+    wire16 = codec.encode_request(1, 1, arr, quant="f16")
+    with pytest.raises(codec.CodecError, match="F16"):
+        codec.decode_frame(wire16[4:], max_frame=1024)
+
+
+# ------------------------------------------------------------- shm ring
+
+def test_shm_ring_roundtrip_and_fill():
+    ring = ShmRing.create(slot_size=256, num_slots=4)
+    try:
+        assert ring.fill() == 0
+        assert ring.try_get() is None
+        assert ring.try_put([b"hello ", b"world"])
+        assert ring.fill() == 1
+        peer = ShmRing.attach(ring.name, 256, 4)
+        assert peer.try_get() == b"hello world"
+        assert peer.try_get() is None
+        peer.close()
+    finally:
+        ring.close()
+        ring.unlink()
+
+
+def test_shm_ring_rejects_oversized_and_overflow_returns_false():
+    ring = ShmRing.create(slot_size=64, num_slots=2)
+    try:
+        assert not ring.try_put([b"x" * 65])          # > slot payload
+        assert ring.try_put([b"a"])
+        assert ring.try_put([b"b"])
+        assert not ring.try_put([b"c"])               # full: caller spills
+        assert ring.try_get() == b"a"
+        assert ring.try_put([b"c"])                   # space reclaimed
+        assert ring.try_get() == b"b"
+        assert ring.try_get() == b"c"
+    finally:
+        ring.close()
+        ring.unlink()
+
+
+def test_shm_ring_fuzz_wraparound_against_deque_model():
+    """Randomized put/get against a deque model, with a ring small enough
+    that every slot wraps many times — ordering and payload bytes must
+    match the model exactly, including zero-length payloads."""
+    from collections import deque
+
+    rng = np.random.default_rng(3)
+    ring = ShmRing.create(slot_size=128, num_slots=3)
+    model = deque()
+    try:
+        for _ in range(2000):
+            if rng.random() < 0.55:
+                payload = rng.bytes(int(rng.integers(0, 129)))
+                ok = ring.try_put([payload])
+                assert ok == (len(model) < 3)
+                if ok:
+                    model.append(payload)
+            else:
+                got = ring.try_get()
+                want = model.popleft() if model else None
+                assert got == want
+            assert ring.fill() == len(model)
+        while model:
+            assert ring.try_get() == model.popleft()
+    finally:
+        ring.close()
+        ring.unlink()
+
+
+def test_shm_ring_attach_validates_geometry():
+    ring = ShmRing.create(slot_size=256, num_slots=4)
+    try:
+        with pytest.raises(ShmRingError):
+            ShmRing.attach(ring.name, 512, 4)         # wrong slot size
+        with pytest.raises(ShmRingError):
+            ShmRing.attach(ring.name, 256, 8)         # wrong slot count
+        with pytest.raises((ShmRingError, FileNotFoundError)):
+            ShmRing.attach("psm_does_not_exist_xyz", 256, 4)
+        with pytest.raises(ShmRingError):
+            ShmRing.create(slot_size=0, num_slots=4)
+    finally:
+        ring.close()
+        ring.unlink()
+
+
+# ------------------------------------------------- ShmTransport e2e
+
+def _serve(max_batch=4, deadline_ms=2.0, **gw_kwargs):
+    srv = InferenceServer(det_policy, max_batch=max_batch,
+                          deadline_ms=deadline_ms)
+    gw = InferenceGateway(srv, **gw_kwargs)
+    srv.start()
+    addr = gw.start()
+    return srv, gw, addr
+
+
+def test_shm_transport_rides_ring_and_replies_match_tcp():
+    """Loopback negotiation grants CODEC_SHM: requests and replies ride
+    the ring pair (zero TCP frames after handshake), and the answers are
+    identical to a plain TCP connection on the same gateway."""
+    srv, gw, addr = _serve()
+    tr = ShmTransport.connect(addr)
+    tcp = SyncSocketTransport.connect(addr)
+    try:
+        assert tr.wait_hello(5.0)
+        assert tr.shm_active, "loopback peer was not granted CODEC_SHM"
+        obs = np.random.rand(4, 50).astype(np.float32)
+        for _ in range(8):
+            got = tr.submit_batch(1, obs).get(timeout=5.0)
+            assert np.array_equal(got, det_policy(obs, None))
+        want = tcp.submit_batch(2, obs).get(timeout=5.0)
+        assert np.array_equal(want, det_policy(obs, None))
+        assert tr.shm_frames >= 8
+        assert tr.shm_replies >= 8
+        assert tr.spill_frames == 0
+        assert gw.stats["shm_conns"] == 1
+        assert gw.stats["shm_frames"] >= 8
+    finally:
+        tr.close()
+        tcp.close()
+        gw.stop()
+        srv.stop()
+
+
+def test_shm_transport_spills_oversized_frames_to_tcp():
+    """A frame too big for a ring slot must transparently take the TCP
+    path (same connection, same ordering guarantees) — never an error,
+    never a drop."""
+    srv, gw, addr = _serve(max_batch=8)
+    tr = ShmTransport.connect(addr, slot_size=512, num_slots=4)
+    try:
+        assert tr.wait_hello(5.0) and tr.shm_active
+        small = np.random.rand(1, 50).astype(np.float32)     # fits
+        big = np.random.rand(64, 50).astype(np.float32)      # > 512 bytes
+        got = tr.submit_batch(1, small).get(timeout=5.0)
+        assert np.array_equal(got, det_policy(small, None))
+        got = tr.submit_batch(1, big).get(timeout=5.0)
+        assert np.array_equal(got, det_policy(big, None))
+        assert tr.shm_frames >= 1
+        assert tr.spill_frames >= 1, "oversized frame did not spill to TCP"
+    finally:
+        tr.close()
+        gw.stop()
+        srv.stop()
+
+
+def test_shm_transport_severed_on_gateway_loss():
+    """Ring liveness rides the TCP control channel: gateway death poisons
+    pending replies and fails subsequent submits fast — no spin-forever
+    on a dead ring."""
+    srv, gw, addr = _serve()
+    tr = ShmTransport.connect(addr)
+    try:
+        assert tr.wait_hello(5.0) and tr.shm_active
+        obs = np.zeros((2, 50), np.float32)
+        assert tr.submit_batch(1, obs).get(timeout=5.0) is not None
+        gw.stop()
+        deadline = time.perf_counter() + 5.0
+        out = None
+        while time.perf_counter() < deadline:
+            out = tr.submit_batch(1, obs).get(timeout=1.0)
+            if isinstance(out, ReplyError):
+                break
+            time.sleep(0.05)
+        assert isinstance(out, ReplyError), out
+        assert tr.error is not None
+    finally:
+        tr.close()
+        srv.stop()
+
+
+def test_quant_negotiated_per_connection_e2e():
+    """quant='q8' HELLOs CODEC_QUANT; granted requests cross the wire
+    quantized (gateway counts them) and still produce correct actions for
+    a policy that is quantization-robust by construction."""
+
+    def coarse_policy(obs, ids):
+        # bucketed so q8's <=scale/2 error cannot flip the argmax
+        return (obs.reshape(obs.shape[0], -1) > 0.5).sum(axis=1) \
+            .astype(np.int64) % CatchEnv.num_actions
+
+    srv = InferenceServer(coarse_policy, max_batch=8, deadline_ms=2.0)
+    gw = InferenceGateway(srv)
+    srv.start()
+    addr = gw.start()
+    tr_q = SyncSocketTransport.connect(addr, quant="q8")
+    tr_p = SyncSocketTransport.connect(addr)
+    try:
+        assert tr_q.wait_hello(5.0)
+        obs = np.zeros((4, 50), np.float32)
+        obs[:, ::7] = 1.0
+        for _ in range(4):
+            got = tr_q.submit_batch(0, obs).get(timeout=5.0)
+            assert np.array_equal(got, coarse_policy(obs, None))
+        got = tr_p.submit_batch(1, obs).get(timeout=5.0)
+        assert np.array_equal(got, coarse_policy(obs, None))
+        assert gw.stats["quant_request_frames"] >= 3
+        assert gw.stats["request_frames"] >= 5
+    finally:
+        tr_q.close()
+        tr_p.close()
+        gw.stop()
+        srv.stop()
+
+
+def test_traj_coalescing_one_frame_many_records():
+    """With CODEC_TRAJBATCH granted, buffered unrolls leave as ONE
+    TRAJ_BATCH frame at the next flush point; the gateway ledger counts
+    both the batch frame and the records it carried."""
+    sunk = []
+    srv, gw, addr = _serve(sink=sunk.append)
+    tr = SyncSocketTransport.connect(addr, coalesce=True)
+    try:
+        assert tr.wait_hello(5.0)
+        traj = {"obs": np.random.rand(4, 50).astype(np.float32),
+                "actions": np.zeros(4, np.int32)}
+        for _ in range(5):
+            tr.send_trajectory(traj)
+        # flush point: the next request submit
+        tr.submit_batch(0, np.zeros((2, 50), np.float32)).get(timeout=5.0)
+        deadline = time.perf_counter() + 5.0
+        while len(sunk) < 5 and time.perf_counter() < deadline:
+            time.sleep(0.01)
+        assert len(sunk) == 5
+        assert gw.stats["traj_batch_frames"] == 1, \
+            "coalesced records arrived as separate frames"
+        assert gw.stats["traj_frames"] == 5
+        for t in sunk:
+            np.testing.assert_array_equal(t["obs"], traj["obs"])
+    finally:
+        tr.close()
+        gw.stop()
+        srv.stop()
+
+
+def test_shm_ping_no_slower_than_tcp_loopback():
+    """THE perf contract, in-process edition: best-of-N round-trips over
+    the ring must be no slower than loopback TCP (loose 1.2x threshold —
+    the strict gate runs in fig4 --smoke --transport shm)."""
+    srv, gw, addr = _serve(max_batch=4, deadline_ms=0.5)
+    tcp = SyncSocketTransport.connect(addr)
+    shm = ShmTransport.connect(addr)
+    obs = np.zeros((4, 50), np.float32)
+    try:
+        assert shm.wait_hello(5.0) and shm.shm_active
+
+        def ping(tr, aid, n=60):
+            for _ in range(15):
+                tr.submit_batch(aid, obs).get(timeout=5.0)
+            t0 = time.perf_counter()
+            for _ in range(n):
+                tr.submit_batch(aid, obs).get(timeout=5.0)
+            return (time.perf_counter() - t0) / n
+
+        best_tcp = min(ping(tcp, 0) for _ in range(3))
+        best_shm = min(ping(shm, 1) for _ in range(3))
+        assert best_shm <= best_tcp * 1.2, \
+            f"shm {1e6 * best_shm:.0f}us vs tcp {1e6 * best_tcp:.0f}us"
+    finally:
+        tcp.close()
+        shm.close()
+        gw.stop()
+        srv.stop()
+
+
+# ------------------------------------------------------------- parity
+
+def _run_inproc_rollout(n_traj):
+    from repro.core.actor import Actor
+
+    srv = InferenceServer(det_policy, max_batch=3, deadline_ms=2.0)
+    trajs = []
+    actor = Actor(0, CatchEnv, srv, lambda t: trajs.append(t),
+                  unroll=4, num_envs=3)
+    srv.start()
+    actor.start()
+    deadline = time.perf_counter() + 30.0
+    while len(trajs) < n_traj and time.perf_counter() < deadline:
+        time.sleep(0.01)
+    actor.stop()
+    srv.stop()
+    actor.join()
+    assert len(trajs) >= n_traj
+    return trajs[:n_traj]
+
+
+def _run_shm_rollout(n_traj):
+    srv = InferenceServer(det_policy, max_batch=3, deadline_ms=2.0)
+    trajs = []
+    gw = InferenceGateway(srv, sink=lambda t: trajs.append(t))
+    srv.start()
+    addr = gw.start()
+    # quant=None: bit-parity is only promised with lossless framing
+    pool = ActorHostPool(CatchEnv, num_actors=1, envs_per_actor=3, unroll=4,
+                         use_shm=True, quant=None)
+    stats = pool.run(addr, seconds=2.0)
+    gw.stop()
+    srv.stop()
+    assert stats[0]["error"] is None, stats[0]["error"]
+    assert stats[0]["shm_frames"] > 0, "rollout never used the ring"
+    assert len(trajs) >= n_traj, \
+        f"shm rollout produced {len(trajs)} < {n_traj} unrolls"
+    return trajs[:n_traj]
+
+
+def test_shm_parity_rollouts_bit_identical_to_inproc():
+    """The transport contract extends to the ring: same seeds, same
+    policy, quantization off -> the unroll stream that crosses the shm
+    rings equals the in-proc one, bitwise."""
+    n = 6
+    a_trajs = _run_inproc_rollout(n)
+    b_trajs = _run_shm_rollout(n)
+    for i, (ta, tb) in enumerate(zip(a_trajs, b_trajs)):
+        assert sorted(ta) == sorted(tb)
+        for k in ta:
+            va, vb = np.asarray(ta[k]), np.asarray(tb[k])
+            assert va.dtype == vb.dtype, (i, k)
+            assert np.array_equal(va, vb), f"unroll {i} key {k} diverged"
+
+
+def test_seed_system_shm_transport_end_to_end():
+    """`SeedSystem(transport='shm')`: frames flow over the rings (host
+    counters prove it), replay fills, and the run is clean."""
+    from repro.core.system import SeedSystem
+
+    sys_ = SeedSystem(env_factory=CatchEnv, policy_step=det_policy,
+                      num_actors=2, unroll=8, envs_per_actor=4,
+                      deadline_ms=1.0, transport="shm", num_actor_hosts=1)
+    sys_.warmup()
+    stats = sys_.run(seconds=0.8, with_learner=False)
+    assert stats["inference_error"] is None
+    assert stats["host_errors"] == []
+    assert stats["env_frames"] > 50, stats
+    assert stats["host_shm_frames"] > 0, "system run never used the ring"
+    assert stats["gateway_shm_conns"] >= 1
+    assert len(sys_.replay) > 0

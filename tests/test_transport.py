@@ -153,10 +153,10 @@ def test_codec_rejects_unknown_flags_and_bad_rle():
     body[4] |= 0x80                          # unknown flag bit
     with pytest.raises(codec.CodecError, match="unknown flag"):
         codec.decode_frame(bytes(body))
-    # FLAG_RLE is only valid on array frames
+    # array-encoding flags are only valid on array frames
     err = bytearray(codec.encode_error(0, "boom")[4:])
     err[4] |= codec.FLAG_RLE
-    with pytest.raises(codec.CodecError, match="FLAG_RLE"):
+    with pytest.raises(codec.CodecError, match="invalid on frame kind"):
         codec.decode_frame(bytes(err))
     # RLE run total must match the declared shape exactly
     with pytest.raises(codec.CodecError, match="RLE"):
@@ -607,21 +607,39 @@ def test_seed_system_socket_transport_end_to_end():
         f"socket transport {best_rel:.2f}x in-proc: wire path regressed"
 
 
-def test_codec_reply_version_rides_actor_id_slot():
-    """CODEC_ONPOLICY wire shape: the behavior-param version travels in
-    the REPLY header's (otherwise unused) actor_id field — old decoders
-    see a field they never inspected, new ones read the version."""
+def test_codec_reply_version_header_field():
+    """Wire v2: the behavior-param version travels in the REPLY header's
+    dedicated param_version field — the v1 hack that smuggled it through
+    the unused actor_id slot is gone, and actor_id stays 0 on replies."""
     wire = codec.encode_reply(9, np.arange(4, dtype=np.int32), version=17)
     frame = codec.read_frame(io.BytesIO(wire).read)
     assert frame.kind == codec.KIND_REPLY
     assert frame.request_id == 9
-    assert frame.actor_id == 17
+    assert frame.param_version == 17
+    assert frame.actor_id == 0
     assert np.array_equal(frame.array, np.arange(4, dtype=np.int32))
-    # default stays 0 = unversioned (byte-identical to the pre-onpolicy
-    # encoding, which the loopback parity test also pins)
+    # default stays 0 = unversioned
     legacy = codec.read_frame(io.BytesIO(
         codec.encode_reply(9, np.arange(4, dtype=np.int32))).read)
-    assert legacy.actor_id == 0
+    assert legacy.param_version == 0
+    # every non-REPLY frame carries 0 in the reserved field
+    req = codec.decode_frame(
+        codec.encode_request(3, 4, np.zeros(2, np.float32))[4:])
+    assert req.param_version == 0
+
+
+def test_codec_rejects_mismatched_wire_version():
+    """A peer speaking a different frame version byte is rejected with a
+    clear CodecError — capability interop WITHIN a version is HELLO's
+    job; across versions both ends must upgrade."""
+    wire = bytearray(codec.encode_reply(1, np.arange(3, dtype=np.int64)))
+    assert wire[6] == codec.VERSION          # len(4) + magic(2), then ver
+    wire[6] = codec.VERSION - 1
+    with pytest.raises(codec.CodecError, match="wire version"):
+        codec.decode_frame(bytes(wire[4:]))
+    wire[6] = codec.VERSION + 1
+    with pytest.raises(codec.CodecError, match="wire version"):
+        codec.decode_frame(bytes(wire[4:]))
 
 
 def test_onpolicy_negotiation_version_flow_and_traj_stripping():

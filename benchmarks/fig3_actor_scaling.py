@@ -30,10 +30,24 @@ Four parts:
 `--smoke` shrinks every measured window so CI can exercise the full
 measured path in seconds; `--replicas N` sets the sharded sweep's widest
 point (CI runs `--smoke --replicas 2` and `--smoke --algo vtrace`).
+
+`--telemetry` runs part (g): a socket-transport system under the full
+`repro.telemetry` plane, then VALIDATES what it produced — trace.json
+parses as Chrome trace events with at least one round-trip stitched
+across two processes by wire trace_seq, metrics.jsonl is non-empty with
+p50/p95/p99 for replica batch wait and wire RTT, the frame ledger agrees
+with the telemetry counters, and the measured CPU/GPU ratio is finite
+and classified. Writes trace.json, metrics.jsonl and BENCH_telemetry.json
+to --out-dir; exits nonzero if any check fails (CI runs
+`--smoke --telemetry`).
 """
 
 import argparse
+import json
+import os
+import sys
 import time
+from collections import defaultdict
 
 import numpy as np
 
@@ -273,6 +287,138 @@ def run_vtrace(args, sec):
               f"learner_bound={p.learner_bound}")
 
 
+def _telemetry_policy(obs, ids):
+    # module-level so spawned actor-host children can pickle the factory
+    # chain (the policy itself stays learner-side; this is only for the
+    # in-proc warmup parity)
+    return np.random.randint(0, CatchEnv.num_actions, size=(obs.shape[0],))
+
+
+def run_telemetry(args, sec, out_dir="."):
+    """Part (g): measured telemetry validation run (see module docstring).
+
+    Every check appends to `failures` instead of raising, so one broken
+    artifact still reports the state of all the others before exit(1).
+    """
+    from repro.telemetry import Telemetry, merge_bench_json
+
+    seconds = max(sec * 4, 1.2) if args.smoke else 4.0
+    tel = Telemetry(process_name="learner", out_dir=out_dir)
+    sys_ = SeedSystem(env_factory=CatchEnv, policy_step=_telemetry_policy,
+                      num_actors=2, unroll=8, envs_per_actor=2,
+                      deadline_ms=2.0, transport="socket",
+                      num_actor_hosts=2, telemetry=tel)
+    stats = sys_.run(seconds=seconds, with_learner=False)
+    report = tel.bottleneck_report(stats)
+    paths = tel.dump(out_dir)
+
+    failures = []
+
+    def check(ok, what):
+        if not ok:
+            failures.append(what)
+        return ok
+
+    check(not stats["host_errors"], f"host errors: {stats['host_errors']}")
+    check(stats["env_frames"] > 0, "no env frames in the measured window")
+
+    # 1. trace.json parses and is Chrome-trace shaped
+    events = []
+    try:
+        with open(paths["trace"]) as f:
+            doc = json.load(f)
+        events = doc.get("traceEvents", [])
+        check(isinstance(events, list) and events,
+              "trace.json has no traceEvents")
+        check(all("ph" in e and "pid" in e for e in events),
+              "trace event missing ph/pid")
+    except (OSError, ValueError) as e:
+        failures.append(f"trace.json unreadable: {e}")
+
+    # 2. >=1 round-trip stitched across >=2 processes by trace_seq
+    by_seq = defaultdict(set)
+    for e in events:
+        if e.get("ph") == "X" and e.get("args", {}).get("trace_seq"):
+            by_seq[e["args"]["trace_seq"]].add(e["pid"])
+    stitched = sum(1 for pids in by_seq.values() if len(pids) >= 2)
+    check(stitched >= 1,
+          f"no round-trip stitched across 2+ processes "
+          f"({len(by_seq)} seqs seen)")
+
+    # 3. metrics.jsonl non-empty, with percentiles for batch wait + RTT
+    lines = []
+    try:
+        with open(paths["metrics"]) as f:
+            lines = [json.loads(ln) for ln in f if ln.strip()]
+        check(bool(lines), "metrics.jsonl is empty")
+    except (OSError, ValueError) as e:
+        failures.append(f"metrics.jsonl unreadable: {e}")
+    wait_h = tel.merged_histogram("inference/batch_wait_s")
+    rtt_h = tel.merged_histogram("wire/rtt_s")
+    check(bool(wait_h and wait_h.get("p50") is not None
+               and wait_h.get("p99") is not None),
+          "no p50/p99 for inference/batch_wait_s")
+    check(bool(rtt_h and rtt_h.get("p50") is not None
+               and rtt_h.get("p99") is not None),
+          "no p50/p99 for wire/rtt_s")
+
+    # 4. frame ledger vs telemetry counters: the registry's lane counter
+    # IS the source of stats["inference_lanes"] (exact), and actor frames
+    # can trail served lanes only by the in-flight round-trips at stop
+    lanes = tel._counter_total("/requests")
+    check(int(lanes) == int(stats["inference_lanes"]),
+          f"registry lanes {lanes} != stats {stats['inference_lanes']}")
+    in_flight = 2 * 2  # num_actors * envs_per_actor
+    check(0 <= lanes - stats["env_frames"] <= in_flight,
+          f"ledger drift: {lanes} lanes served vs "
+          f"{stats['env_frames']} frames stepped")
+
+    # 5. measured CPU/GPU ratio is finite and the window classified
+    check(np.isfinite(report.cpu_gpu_ratio), "cpu_gpu_ratio not finite")
+    check(report.bottleneck.endswith("-bound") or report.bottleneck == "idle",
+          f"unclassified window: {report.bottleneck!r}")
+
+    payload = {
+        "seconds": seconds,
+        "env_frames": stats["env_frames"],
+        "env_frames_per_s": stats["env_frames_per_s"],
+        "stitched_roundtrips": stitched,
+        "trace_events": len(events),
+        "metrics_lines": len(lines),
+        "batch_wait_p50_s": wait_h.get("p50") if wait_h else None,
+        "batch_wait_p99_s": wait_h.get("p99") if wait_h else None,
+        "wire_rtt_p50_s": rtt_h.get("p50") if rtt_h else None,
+        "wire_rtt_p99_s": rtt_h.get("p99") if rtt_h else None,
+        "bottleneck": report.as_dict(),
+        "failures": failures,
+    }
+    merge_bench_json(os.path.join(out_dir, "BENCH_telemetry.json"),
+                     "fig3_telemetry", payload)
+
+    print("# fig3g: telemetry validation (socket transport, 2 hosts)")
+    print("name,value,derived")
+    print(f"fig3g_frames_per_s,{stats['env_frames_per_s']:.1f},"
+          f"frames={stats['env_frames']}")
+    print(f"fig3g_stitched_roundtrips,{stitched},of {len(by_seq)} seqs")
+    print(f"fig3g_trace_events,{len(events)},{paths['trace']}")
+    print(f"fig3g_metrics_lines,{len(lines)},{paths['metrics']}")
+    if rtt_h:
+        print(f"fig3g_wire_rtt_p50_us,{rtt_h['p50'] * 1e6:.0f},"
+              f"p99_us={rtt_h['p99'] * 1e6:.0f}")
+    if wait_h:
+        print(f"fig3g_batch_wait_p50_us,{wait_h['p50'] * 1e6:.0f},"
+              f"p99_us={wait_h['p99'] * 1e6:.0f}")
+    print(f"fig3g_cpu_gpu_ratio,{report.cpu_gpu_ratio:.2f},"
+          f"{report.bottleneck}")
+    for line in str(report).splitlines():
+        print(f"# {line}")
+    if failures:
+        for f_ in failures:
+            print(f"fig3g_FAIL,1,{f_}")
+        sys.exit(1)
+    print("fig3g_ok,1,all telemetry checks passed")
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
@@ -282,8 +428,17 @@ def main():
     ap.add_argument("--algo", choices=("r2d2", "vtrace"), default="r2d2",
                     help="r2d2: parts (a-e); vtrace: the on-policy "
                          "training-plane sweep (f)")
+    ap.add_argument("--telemetry", action="store_true",
+                    help="part (g): socket run under the telemetry plane, "
+                         "validating trace/metrics/ratio artifacts")
+    ap.add_argument("--out-dir", default=".",
+                    help="where --telemetry writes trace.json, "
+                         "metrics.jsonl and BENCH_telemetry.json")
     args = ap.parse_args()
     sec = 0.3 if args.smoke else 1.2
+    if args.telemetry:
+        run_telemetry(args, sec, out_dir=args.out_dir)
+        return
     if args.algo == "vtrace":
         run_vtrace(args, sec)
         return

@@ -40,18 +40,25 @@ def _policy_step(obs, ids):
 
 def measured_transport_sweep(num_actors=2, envs_per_actor=4, seconds=1.0,
                              unroll=8, num_actor_hosts=2, num_gateways=1,
-                             transports=("inproc", "socket", "shm")):
+                             transports=("inproc", "socket", "shm"),
+                             telemetry=False):
     """The same (num_actors, E) SEED system on Catch, in-proc vs loopback
     TCP vs shared-memory rings: frames/s, per-actor cycle time, and the
     implied wire RTT. With `num_gateways > 1` the socket run shards the
     accept loop: G gateways (+ G inference replicas, one per gateway)
-    with actor hosts hashed across their addresses."""
+    with actor hosts hashed across their addresses. ``telemetry=True``
+    runs each point under its own `repro.telemetry.Telemetry`, so every
+    stats dict carries a measured ``bottleneck`` attribution."""
     rows = []
     for transport in transports:
+        tel = None
+        if telemetry:
+            from repro.telemetry import Telemetry
+            tel = Telemetry(process_name="learner")
         kwargs = dict(env_factory=CatchEnv, policy_step=_policy_step,
                       num_actors=num_actors, unroll=unroll,
                       envs_per_actor=envs_per_actor, deadline_ms=1.0,
-                      transport=transport)
+                      transport=transport, telemetry=tel)
         if transport in ("socket", "shm"):
             kwargs["num_actor_hosts"] = num_actor_hosts
             kwargs["num_gateways"] = num_gateways
@@ -191,6 +198,11 @@ def main():
                         os.path.dirname(os.path.abspath(__file__)), "..",
                         "BENCH_wire.json"),
                     help="where to write the wire benchmark ledger")
+    ap.add_argument("--telemetry", action="store_true",
+                    help="run each transport point under the telemetry "
+                         "plane: print the MEASURED bottleneck/CPU-GPU "
+                         "ratio per transport and merge the attributions "
+                         "into BENCH_telemetry.json next to --out")
     args = ap.parse_args()
     sec = 0.5 if args.smoke else 1.5
     hosts = max(1 if args.smoke else 2, args.gateways)
@@ -227,7 +239,8 @@ def main():
     t_rows = measured_transport_sweep(num_actors=n_act, envs_per_actor=E,
                                       seconds=sec, num_actor_hosts=hosts,
                                       num_gateways=args.gateways,
-                                      transports=wire_transports)
+                                      transports=wire_transports,
+                                      telemetry=args.telemetry)
     bench = {"benchmark": "fig4_wire", "smoke": bool(args.smoke),
              "num_actors": n_act, "envs_per_actor": E,
              "num_actor_hosts": hosts, "seconds": sec,
@@ -258,6 +271,22 @@ def main():
             "host_spill_frames": stats.get("host_spill_frames"),
             "error": err,
         }
+        if args.telemetry and "bottleneck" in stats:
+            b_ = stats["bottleneck"]
+            print(f"fig4_measured_ratio_{transport},"
+                  f"{b_['cpu_gpu_ratio']:.2f},{b_['bottleneck']} "
+                  f"wire_share={b_['shares'].get('wire', 0.0):.2f}")
+    if args.telemetry:
+        from repro.telemetry import merge_bench_json
+        tel_out = os.path.join(os.path.dirname(os.path.normpath(args.out)),
+                               "BENCH_telemetry.json")
+        merge_bench_json(tel_out, "fig4_transports", {
+            "smoke": bool(args.smoke), "seconds": sec,
+            "num_actors": n_act, "envs_per_actor": E,
+            "attribution": {t: s["bottleneck"] for t, s in t_rows
+                            if "bottleneck" in s},
+        })
+        print(f"# merged measured attributions into {tel_out}")
     gate_failed = None
     if min(fps.values()) <= 0:
         # a failed run reports its error above; don't bury it under a

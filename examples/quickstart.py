@@ -4,7 +4,9 @@
 2. trains it with the V-trace learner on synthetic trajectories,
 3. checkpoints, restores, and serves a few greedy tokens,
 4. runs the SEED actor/inference system with vectorized (vmapped) env
-   lanes and shows the envs-per-actor throughput axis.
+   lanes and shows the envs-per-actor throughput axis,
+5. re-runs it under the telemetry plane and prints the measured
+   BottleneckReport (which plane gates throughput, and the CPU/GPU ratio).
 
     PYTHONPATH=src python examples/quickstart.py
 """
@@ -184,6 +186,32 @@ def onpolicy_demo(E=4, seconds=2.0):
           f"(bounded queue sheds what the learner cannot absorb)")
 
 
+def telemetry_demo(E=4, seconds=1.0):
+    """The measurement plane (`repro.telemetry`): the same SEED system run
+    under a `Telemetry` bundle — per-request spans stitched by trace_seq,
+    latency histograms behind the stats dicts, per-process CPU sampling —
+    ending in the paper's question answered from measurement: which plane
+    gates throughput, and what is the measured CPU/GPU ratio? `tel.dump()`
+    writes trace.json (load at ui.perfetto.dev) + metrics.jsonl."""
+    from repro.telemetry import Telemetry
+
+    tel = Telemetry(process_name="learner", out_dir="/tmp/repro_quickstart")
+    sys_ = SeedSystem(env_factory=CatchEnv, policy_step=_quickstart_policy,
+                      num_actors=2, unroll=8, envs_per_actor=E,
+                      deadline_ms=2.0, telemetry=tel)
+    sys_.warmup()
+    stats = sys_.run(seconds=seconds, with_learner=False)
+    report = tel.bottleneck_report(stats)
+    for line in str(report).splitlines():
+        print(f"  {line}")
+    rtt = tel.merged_histogram("wire/rtt_s")
+    print(f"  inference rtt p50={rtt['p50'] * 1e6:.0f}us "
+          f"p99={rtt['p99'] * 1e6:.0f}us over {rtt['count']} round-trips")
+    paths = tel.dump()
+    print(f"  wrote {paths['trace']} (open at ui.perfetto.dev) "
+          f"and {paths['metrics']}")
+
+
 def main():
     arch = sys.argv[1] if len(sys.argv) > 1 else "qwen3-14b"
     cfg = smoke_config(arch)
@@ -221,6 +249,8 @@ def main():
     sharded_inference_demo()
     print("== on-policy training plane (algo='vtrace', trajectory queue)")
     onpolicy_demo()
+    print("== telemetry plane (spans, histograms, bottleneck attribution)")
+    telemetry_demo()
     print("ok")
 
 

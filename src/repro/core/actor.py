@@ -12,12 +12,14 @@ lanes, the CuLE-style design point the paper's CPU/GPU-ratio metric favors.
 
 import queue
 import threading
+import time
 from typing import Callable, Optional
 
 import numpy as np
 
 from repro.core.inference import ReplyError
 from repro.envs.vector import make_vector_env
+from repro.telemetry.tracer import next_trace_seq
 
 
 # canonical per-lane dtypes; keys outside this map pass through unchanged
@@ -58,7 +60,8 @@ class Actor:
     def __init__(self, actor_id: int, env, server, sink: Callable,
                  unroll: int, num_envs: int = 1, seed: Optional[int] = None,
                  version_source: Optional[Callable] = None,
-                 with_logprobs: bool = False, stamp_records: bool = False):
+                 with_logprobs: bool = False, stamp_records: bool = False,
+                 telemetry=None):
         """``version_source() -> int`` is the learner's published param
         version: when set, each unroll is stamped with the version current
         at its FIRST step (the behavior version) and the actor accumulates
@@ -94,6 +97,13 @@ class Actor:
         self.unrolls = 0                     # unroll flushes (E records each)
         self.param_lag_total = 0             # sum over unrolls of version lag
         self.error: Optional[str] = None     # server/transport death, surfaced
+        # telemetry is opt-in; the loop hoists these into locals and the
+        # disabled path is a single `is None` branch per use
+        self._tracer = (telemetry.tracer
+                        if telemetry is not None and telemetry.enabled
+                        else None)
+        self._h_rtt = (telemetry.metrics.histogram("wire/rtt_s")
+                       if telemetry is not None else None)
 
     @property
     def steps(self):
@@ -122,6 +132,8 @@ class Actor:
 
     def _loop(self):
         E = self.num_envs
+        tr = self._tracer
+        h_rtt = self._h_rtt
         obs = self.vec.reset()                       # (E, ...)
         # lanes step in lockstep, so one batched accumulator suffices: O(1)
         # appends per iteration, split into per-lane unrolls only at flush
@@ -136,7 +148,20 @@ class Actor:
             # of waiting forever: a stopped/dead server drains pending
             # requests with a poison `ReplyError`, and `server.error` is
             # the backstop for a request that died in-flight inside a batch
-            reply = self.server.submit_batch(self.actor_id, obs)
+            if tr is not None:
+                # fresh stitch id per round-trip: every span this request
+                # touches (here, the gateway, the replica) shares it, so
+                # the trace viewer renders one connected flow. The kwarg
+                # is only passed when tracing so bare test doubles that
+                # implement the two-arg signature keep working.
+                seq = next_trace_seq()
+                t0_ns = time.perf_counter_ns()
+                reply = self.server.submit_batch(
+                    self.actor_id, obs, trace_seq=seq)
+            else:
+                seq = 0
+                t0_ns = time.perf_counter_ns() if h_rtt is not None else 0
+                reply = self.server.submit_batch(self.actor_id, obs)
             actions = None
             while not self._stop.is_set():
                 try:
@@ -158,6 +183,13 @@ class Actor:
                 break
             if actions is None:
                 break
+            if tr is not None or h_rtt is not None:
+                dur_ns = time.perf_counter_ns() - t0_ns
+                if tr is not None:
+                    tr.record("actor/inference_rtt", t0_ns, dur_ns, seq=seq,
+                              args={"lanes": E})
+                if h_rtt is not None:
+                    h_rtt.record(dur_ns * 1e-9)
             logprobs = None
             if self.with_logprobs:
                 # on-policy reply rows: [action, behavior_logprob]

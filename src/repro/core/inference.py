@@ -48,6 +48,8 @@ from typing import Callable, Dict, Optional, Tuple
 
 import numpy as np
 
+from repro.telemetry.metrics import MetricsRegistry
+
 
 @dataclass
 class ReplyError:
@@ -63,6 +65,7 @@ class InferenceRequest:
     obs: np.ndarray              # (E, ...) lane-batched observations
     reply: "queue.Queue"
     scalar: bool = False         # legacy single-obs submit: unwrap the reply
+    trace_seq: int = 0           # telemetry stitch id (0 = untraced)
     t_enqueue: float = field(default_factory=time.perf_counter)
 
     @property
@@ -70,11 +73,17 @@ class InferenceRequest:
         return self.obs.shape[0]
 
 
-def _fresh_stats() -> dict:
-    # "requests" counts LANES (the supply quantity the paper sweeps);
-    # "rpcs" counts request messages (the transport quantity).
-    return {"batches": 0, "requests": 0, "rpcs": 0,
-            "batch_occupancy": 0.0, "queue_wait_s": 0.0, "compute_s": 0.0}
+# "requests" counts LANES (the supply quantity the paper sweeps);
+# "rpcs" counts request messages (the transport quantity).
+_STAT_KEYS = ("batches", "requests", "rpcs",
+              "batch_occupancy", "queue_wait_s", "compute_s")
+_INT_KEYS = ("batches", "requests", "rpcs")
+
+
+def _as_stats(raw: dict) -> dict:
+    """Registry counters are floats; the historical dict shape keeps the
+    event counts as ints."""
+    return {k: int(v) if k in _INT_KEYS else v for k, v in raw.items()}
 
 
 def _derive_stats(s: dict) -> dict:
@@ -103,8 +112,19 @@ class _Replica:
         self.replica_id = replica_id
         self.lane_budget = lane_budget
         self.requests: "queue.Queue[InferenceRequest]" = queue.Queue()
-        self.stats = _fresh_stats()
+        # registry-backed counters: one shared lock makes every stats
+        # snapshot point-in-time atomic (the old plain-dict shard could be
+        # read mid-batch-update by throughput())
+        self._c = server.metrics.counters(f"inference/r{replica_id}",
+                                          _STAT_KEYS)
+        server.metrics.gauge(f"inference/r{replica_id}/queue_depth",
+                             fn=self.requests.qsize)
         self._thread: Optional[threading.Thread] = None
+
+    @property
+    def stats(self) -> dict:
+        """Atomic counter snapshot in the historical dict shape."""
+        return _as_stats(self.server.metrics.read(self._c))
 
     def start(self):
         self._thread = threading.Thread(
@@ -149,16 +169,43 @@ class _Replica:
                 return
             dt = time.perf_counter() - t0
             lanes = 0
+            waits = []
             for r in batch:
                 a = actions[lanes:lanes + r.lanes]
                 lanes += r.lanes
                 r.reply.put(a[0] if r.scalar else a)
-                self.stats["queue_wait_s"] += (t0 - r.t_enqueue) * r.lanes
-            self.stats["compute_s"] += dt
-            self.stats["batches"] += 1
-            self.stats["requests"] += lanes
-            self.stats["rpcs"] += len(batch)
-            self.stats["batch_occupancy"] += min(lanes / self.lane_budget, 1.0)
+                waits.append(t0 - r.t_enqueue)
+            # ONE lock acquisition per batch: counters + histograms move
+            # together, so no snapshot can see a batch counted without its
+            # requests (or a wait histogram ahead of its rpc count)
+            c = self._c
+            with srv.metrics.lock:
+                c["queue_wait_s"].value += sum(
+                    w * r.lanes for w, r in zip(waits, batch))
+                c["compute_s"].value += dt
+                c["batches"].value += 1
+                c["requests"].value += lanes
+                c["rpcs"].value += len(batch)
+                c["batch_occupancy"].value += min(lanes / self.lane_budget,
+                                                  1.0)
+                for w in waits:
+                    srv._h_wait.record_locked(max(w, 0.0))
+                srv._h_compute.record_locked(dt)
+            tr = srv._tracer
+            if tr is not None:
+                t1_ns = time.perf_counter_ns()
+                t0_ns = t1_ns - int(dt * 1e9)
+                for w, r in zip(waits, batch):
+                    if r.trace_seq:
+                        # after-the-fact spans from the request's enqueue
+                        # stamp: the batch wait, then the shared forward —
+                        # both carry the request's stitch id
+                        tr.record(f"replica{self.replica_id}/batch_wait",
+                                  t0_ns - int(max(w, 0.0) * 1e9),
+                                  int(max(w, 0.0) * 1e9), seq=r.trace_seq)
+                        tr.record(f"replica{self.replica_id}/forward",
+                                  t0_ns, t1_ns - t0_ns, seq=r.trace_seq,
+                                  args={"lanes": lanes, "rpcs": len(batch)})
 
     def _collect(self):
         """Fill a batch until `lane_budget` LANES or the deadline —
@@ -197,7 +244,8 @@ class InferenceServer:
     """
 
     def __init__(self, policy_step: Callable, max_batch: int,
-                 deadline_ms: float = 10.0, num_replicas: int = 1):
+                 deadline_ms: float = 10.0, num_replicas: int = 1,
+                 telemetry=None):
         if not isinstance(num_replicas, int) or num_replicas < 1:
             raise ValueError(
                 f"num_replicas must be a positive int, got {num_replicas!r}")
@@ -211,6 +259,16 @@ class InferenceServer:
         self.max_batch = max_batch           # TOTAL lane budget per round
         self.deadline_ms = deadline_ms
         self.num_replicas = num_replicas
+        # stats always live in a registry (private one when no telemetry is
+        # attached) so snapshots are atomic either way; the tracer rides
+        # along only when a Telemetry bundle asks for spans
+        self.metrics = (telemetry.metrics if telemetry is not None
+                        else MetricsRegistry())
+        self._tracer = (telemetry.tracer
+                        if telemetry is not None and telemetry.enabled
+                        else None)
+        self._h_wait = self.metrics.histogram("inference/batch_wait_s")
+        self._h_compute = self.metrics.histogram("inference/compute_s")
         # each replica serves a shard of the lane budget; ceil so the
         # shards cover max_batch and N=1 keeps the budget bit-identical
         budget = -(-max_batch // num_replicas)
@@ -289,10 +347,12 @@ class InferenceServer:
             actor_id, np.asarray(obs)[None], queue.Queue(maxsize=1),
             scalar=True))
 
-    def submit_batch(self, actor_id: int, obs: np.ndarray) -> "queue.Queue":
+    def submit_batch(self, actor_id: int, obs: np.ndarray,
+                     trace_seq: int = 0) -> "queue.Queue":
         """Lane-batched submit: obs is (E, ...); the reply holds (E,) actions."""
         return self.submit_request(InferenceRequest(
-            actor_id, np.asarray(obs), queue.Queue(maxsize=1)))
+            actor_id, np.asarray(obs), queue.Queue(maxsize=1),
+            trace_seq=trace_seq))
 
     # --------------------------------------------------------------- slots
 
@@ -324,22 +384,32 @@ class InferenceServer:
     @property
     def stats(self) -> dict:
         """Aggregated raw counters, summed across replicas (the historical
-        single-loop shape; with num_replicas=1 it IS replica 0's dict)."""
-        out = _fresh_stats()
-        for rep in self._replicas:
-            for k, v in rep.stats.items():
+        single-loop shape; with num_replicas=1 it IS replica 0's dict).
+        One registry-lock acquisition covers every replica, so the sum is
+        a point-in-time snapshot — no replica can count half a batch into
+        it (the pre-registry dicts could)."""
+        raws = self.metrics.read_groups([rep._c for rep in self._replicas])
+        out = {k: 0.0 for k in _STAT_KEYS}
+        for raw in raws:
+            for k, v in raw.items():
                 out[k] += v
-        return out
+        return _as_stats(out)
 
     def derived_stats(self) -> dict:
         """Aggregate derived means (see `_derive_stats`); the per-replica
-        decomposition is `per_replica_stats()`."""
+        decomposition is `per_replica_stats()`. All ratios are zero-guarded:
+        a server that served nothing reports 0.0 means, it never raises."""
         return _derive_stats(self.stats)
 
     def per_replica_stats(self) -> list:
         """Raw + derived stats per replica — the sharded decomposition
         `SeedSystem.throughput()` reports, so batch-fill starvation on one
-        replica (occupancy collapsing as N grows) is visible per shard."""
-        return [dict(rep.stats, replica=rep.replica_id,
-                     lane_budget=rep.lane_budget, **_derive_stats(rep.stats))
-                for rep in self._replicas]
+        replica (occupancy collapsing as N grows) is visible per shard.
+        All replicas are read under ONE lock acquisition: the rows are
+        mutually consistent, so their sum is itself a valid aggregate
+        snapshot (same guarantee `stats` gives)."""
+        raws = self.metrics.read_groups([rep._c for rep in self._replicas])
+        return [dict(_as_stats(raw), replica=rep.replica_id,
+                     lane_budget=rep.lane_budget,
+                     **_derive_stats(raw))
+                for rep, raw in zip(self._replicas, raws)]

@@ -27,7 +27,8 @@ class Learner:
                  publish: Optional[Callable] = None,
                  checkpoint_manager=None, checkpoint_every: int = 0,
                  priority_update: Optional[Callable] = None,
-                 poison: Optional[Callable] = None):
+                 poison: Optional[Callable] = None,
+                 telemetry=None):
         """batch_fn() -> (batch, info) blocking; publish(params, step).
 
         ``poison()`` is called from `stop()` to unblock a batch_fn that is
@@ -52,6 +53,17 @@ class Learner:
         self.train_time_s = 0.0
         self.wait_time_s = 0.0
         self.error: Optional[str] = None     # traceback of a fatal loop error
+        # timings are already taken in _one_step; telemetry just adds the
+        # distribution (p50/p95/p99) view and an optional per-step span
+        self._tracer = (telemetry.tracer
+                        if telemetry is not None and telemetry.enabled
+                        else None)
+        if telemetry is not None:
+            self._h_train = telemetry.metrics.histogram("learner/train_s")
+            self._h_wait = telemetry.metrics.histogram("learner/wait_s")
+        else:
+            self._h_train = None
+            self._h_wait = None
 
     @property
     def stopped(self) -> bool:
@@ -86,6 +98,15 @@ class Learner:
         self.wait_time_s += t1 - t0
         self.train_time_s += t2 - t1
         self.steps += 1
+        if self._h_train is not None:
+            self._h_wait.record(t1 - t0)
+            self._h_train.record(t2 - t1)
+        if self._tracer is not None:
+            now_ns = time.perf_counter_ns()
+            self._tracer.record("learner/train_step",
+                                now_ns - int((t2 - t1) * 1e9),
+                                int((t2 - t1) * 1e9),
+                                args={"step": self.steps})
         self.metrics = {k: float(np.asarray(v).mean()) for k, v in metrics.items()
                         if np.asarray(v).ndim == 0}
         if self.priority_update and "priorities" in metrics:

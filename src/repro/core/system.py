@@ -93,7 +93,8 @@ class SeedSystem:
                  algo: str = "r2d2", max_param_lag: Optional[int] = None,
                  queue_capacity: Optional[int] = None,
                  gamma: Optional[float] = None,
-                 policy_publish: Optional[Callable] = None):
+                 policy_publish: Optional[Callable] = None,
+                 telemetry=None):
         if backend not in ("host", "device"):
             raise ValueError(f"unknown backend {backend!r}; use 'host' or 'device'")
         if algo not in ("r2d2", "vtrace"):
@@ -158,9 +159,18 @@ class SeedSystem:
         if wire_quant not in (None, "f16", "q8"):
             raise ValueError(
                 f"wire_quant={wire_quant!r}; expected None, 'f16' or 'q8'")
+        if telemetry is not None and not (
+                hasattr(telemetry, "metrics") and hasattr(telemetry, "tracer")
+                and hasattr(telemetry, "sampler")):
+            raise TypeError(
+                f"telemetry must be a repro.telemetry.Telemetry (or None), "
+                f"got {type(telemetry).__name__} — construct one with "
+                f"Telemetry(process_name=...) and pass the same instance "
+                f"you will later dump()/report from")
         self.backend = backend
         self.transport = transport
         self.algo = algo
+        self.telemetry = telemetry
         self.envs_per_actor = envs_per_actor
         self.engine_shards = engine_shards
         self.replay = PrioritizedReplay(replay_capacity)
@@ -182,7 +192,8 @@ class SeedSystem:
             from repro.onpolicy import TrajectoryQueue
             self.onpolicy_queue = TrajectoryQueue(
                 queue_capacity, max_param_lag=max_param_lag,
-                version_source=self._version)
+                version_source=self._version,
+                metrics=telemetry.metrics if telemetry else None)
         if backend == "host":
             if policy_step is None:
                 raise ValueError("backend='host' requires policy_step")
@@ -190,7 +201,8 @@ class SeedSystem:
             self.server = InferenceServer(
                 policy_step,
                 max_batch=inference_batch or max(num_actors * envs_per_actor, 1),
-                deadline_ms=deadline_ms, num_replicas=num_replicas)
+                deadline_ms=deadline_ms, num_replicas=num_replicas,
+                telemetry=telemetry)
             if wire:
                 from repro.launch.actor_host import ActorHostPool
                 from repro.transport.socket import InferenceGateway
@@ -204,21 +216,32 @@ class SeedSystem:
                                      # deployment asked for the shm plane,
                                      # so transport='socket' measures the
                                      # honest TCP path
-                                     allow_shm=use_shm)
+                                     allow_shm=use_shm,
+                                     telemetry=telemetry)
                     for _ in range(num_gateways)]
                 self.gateway = self.gateways[0]    # back-compat handle
+                if telemetry is not None:
+                    # gateways keep private registries (G gateways would
+                    # collide on counter names in a shared one); attach
+                    # them so snapshots/metrics.jsonl still see every frame
+                    for gi, gw in enumerate(self.gateways):
+                        telemetry.attach(f"gateway{gi}", gw.metrics)
                 self.pool = ActorHostPool(
                     env_factory, num_actors=num_actors,
                     envs_per_actor=envs_per_actor, unroll=unroll,
                     num_hosts=num_actor_hosts, compress=wire_compression,
-                    onpolicy=onpolicy, use_shm=use_shm, quant=wire_quant)
+                    onpolicy=onpolicy, use_shm=use_shm, quant=wire_quant,
+                    telemetry=telemetry is not None,
+                    pid_callback=(telemetry.watch_process
+                                  if telemetry is not None else None))
                 self.actors = []
             else:
                 self.actors = [Actor(i, env_factory, self.server, self._sink,
                                      unroll, num_envs=envs_per_actor,
                                      version_source=self._version,
                                      with_logprobs=onpolicy,
-                                     stamp_records=onpolicy)
+                                     stamp_records=onpolicy,
+                                     telemetry=telemetry)
                                for i in range(num_actors)]
         else:
             if policy_apply is None:
@@ -268,7 +291,8 @@ class SeedSystem:
                 priority_update=priority_update,
                 checkpoint_manager=checkpoint_manager,
                 checkpoint_every=checkpoint_every,
-                poison=poison)
+                poison=poison,
+                telemetry=telemetry)
 
     def _sink(self, traj):
         if self.onpolicy_queue is not None:
@@ -319,8 +343,14 @@ class SeedSystem:
                 a.vec.step(np.zeros(a.num_envs, np.int32))
 
     def run(self, seconds: float, with_learner: bool = True):
+        if self.telemetry is not None:
+            self.telemetry.start()
         if self.pool is not None:
-            return self._run_socket(seconds, with_learner)
+            try:
+                return self._run_socket(seconds, with_learner)
+            finally:
+                if self.telemetry is not None:
+                    self.telemetry.stop()
         if self.server:
             self.server.start()
         for a in self.actors:
@@ -344,6 +374,8 @@ class SeedSystem:
             # count so generated == trained + dropped in throughput()
             # (learner.stop() already closed it when a learner ran)
             self.onpolicy_queue.close()
+        if self.telemetry is not None:
+            self.telemetry.stop()
         return self.throughput(elapsed)
 
     def _run_socket(self, seconds: float, with_learner: bool):
@@ -379,6 +411,12 @@ class SeedSystem:
                 # after the gateways: TRAJ frames still in flight land as
                 # counted shutdown drops, not unrecorded frames
                 self.onpolicy_queue.close()
+        if self.telemetry is not None:
+            # fold each host's spans + registry snapshot (shipped through
+            # the mp result queue) into this process's telemetry; pops the
+            # bulky keys so last_stats stays a plain counter report
+            for s in host_stats:
+                self.telemetry.absorb_host(s)
         elapsed = max((s["elapsed_s"] for s in host_stats), default=seconds)
         return self.throughput(max(elapsed, 1e-9))
 
@@ -492,4 +530,9 @@ class SeedSystem:
                 "param_refreshes": refreshes,
                 "mean_param_lag": lag / max(iterations, 1),
             })
+        if self.telemetry is not None:
+            # the measured CPU/GPU-ratio attribution the paper's method
+            # is built on — computed from this same stats dict plus the
+            # registry/sampler, never raises on an empty window
+            out["bottleneck"] = self.telemetry.bottleneck_report(out).as_dict()
         return out

@@ -66,6 +66,13 @@ class ActorHostConfig:
     #                              for bit-parity with in-proc)
     coalesce: bool = True        # negotiate CODEC_TRAJBATCH: one frame
     #                              per unroll flush instead of per record
+    telemetry: bool = False      # build a child-process Telemetry: spans
+    #                              stamped with wire trace_seq ids + a
+    #                              metrics registry, both shipped back
+    #                              through the result queue for the parent
+    #                              to absorb (a Telemetry OBJECT cannot
+    #                              cross spawn — it holds locks/threads —
+    #                              so the flag travels, not the instance)
 
 
 def run_actor_host(cfg: ActorHostConfig, result_q) -> None:
@@ -81,6 +88,13 @@ def run_actor_host(cfg: ActorHostConfig, result_q) -> None:
         from repro.core.actor import Actor
         from repro.transport.socket import ShmTransport, SyncSocketTransport
 
+        tel = None
+        if cfg.telemetry:
+            from repro.telemetry import Telemetry
+            # per-child Telemetry: same CLOCK_MONOTONIC timeline and
+            # pid-salted trace_seq space as the parent, so the parent can
+            # merge spans verbatim after absorbing them from the result q
+            tel = Telemetry(process_name=f"actor-host-{cfg.host_id}")
         # compute-bound sibling actors convoy thread wakeups under
         # CPython's default 5 ms GIL slice; this process exists only to
         # run actors, so a finer slice is safe and worth real latency.
@@ -97,7 +111,8 @@ def run_actor_host(cfg: ActorHostConfig, result_q) -> None:
                                   compress=cfg.compress,
                                   onpolicy=cfg.onpolicy,
                                   quant=cfg.quant,
-                                  coalesce=cfg.coalesce)
+                                  coalesce=cfg.coalesce,
+                                  telemetry=tel)
             for _ in cfg.actor_ids]
         if cfg.onpolicy:
             # on-policy data is useless without logprobs + version stamps,
@@ -116,7 +131,8 @@ def run_actor_host(cfg: ActorHostConfig, result_q) -> None:
                   cfg.unroll, num_envs=cfg.envs_per_actor,
                   seed=None if cfg.seed is None else cfg.seed + aid,
                   version_source=(lambda tr=tr: tr.param_version),
-                  with_logprobs=cfg.onpolicy, stamp_records=cfg.onpolicy)
+                  with_logprobs=cfg.onpolicy, stamp_records=cfg.onpolicy,
+                  telemetry=tel)
             for aid, tr in zip(cfg.actor_ids, transports)]
         # pay jit/reset compilation before the measured window (JaxVectorEnv
         # reset is idempotent — fixed keys — so this doesn't perturb the
@@ -159,6 +175,18 @@ def run_actor_host(cfg: ActorHostConfig, result_q) -> None:
         stats["error"] = next(
             (tr.error for tr in transports if tr.error), None) or next(
             (a.error for a in actors if a.error), None)
+        if tel is not None:
+            # mirror the shm transports' plain-int hot-path counters into
+            # the registry once, at report time (they are single-threaded
+            # ints precisely so the ring path stays lock-free)
+            c = tel.metrics.counters(
+                "host_wire", ("shm_frames", "shm_replies", "spill_frames"))
+            with tel.metrics.lock:
+                for k, cnt in c.items():
+                    cnt.value += float(
+                        sum(getattr(tr, k, 0) for tr in transports))
+            stats["trace_events"] = tel.tracer.export_events()
+            stats["metrics_snapshot"] = tel.metrics.snapshot()
     except Exception:
         stats["error"] = traceback.format_exc()
     result_q.put(stats)
@@ -177,7 +205,8 @@ class ActorHostPool:
                  seed: Optional[int] = None, grace_s: float = 90.0,
                  compress: bool = False, onpolicy: bool = False,
                  use_shm: bool = False, quant: Optional[str] = None,
-                 coalesce: bool = True):
+                 coalesce: bool = True, telemetry: bool = False,
+                 pid_callback=None):
         if not 1 <= num_hosts <= num_actors:
             raise ValueError(
                 f"num_hosts={num_hosts} must be in [1, num_actors={num_actors}]")
@@ -193,6 +222,11 @@ class ActorHostPool:
         self.use_shm = use_shm
         self.quant = quant
         self.coalesce = coalesce
+        self.telemetry = telemetry
+        # pid_callback(name, pid) fires right after each spawn — the seam
+        # `Telemetry.watch_process` plugs into so the parent's utilization
+        # sampler reads the children's /proc/<pid>/stat from birth
+        self.pid_callback = pid_callback
         self.last_stats: List[dict] = []
 
     def _partitions(self) -> List[Tuple[int, ...]]:
@@ -235,10 +269,13 @@ class ActorHostPool:
                 envs_per_actor=self.envs_per_actor, unroll=self.unroll,
                 seconds=seconds, seed=self.seed, compress=self.compress,
                 onpolicy=self.onpolicy, use_shm=self.use_shm,
-                quant=self.quant, coalesce=self.coalesce)
+                quant=self.quant, coalesce=self.coalesce,
+                telemetry=self.telemetry)
             p = ctx.Process(target=run_actor_host, args=(cfg, result_q),
                             daemon=True)
             p.start()
+            if self.pid_callback is not None:
+                self.pid_callback(f"actor-host-{host_id}", p.pid)
             procs.append(p)
         deadline = time.perf_counter() + seconds + self.grace_s
         results = []

@@ -60,7 +60,8 @@ class TrajectoryQueue:
     """
 
     def __init__(self, capacity: int, max_param_lag: Optional[int] = None,
-                 version_source: Optional[Callable[[], int]] = None):
+                 version_source: Optional[Callable[[], int]] = None,
+                 metrics=None):
         if not isinstance(capacity, int) or capacity < 1:
             raise ValueError(
                 f"capacity must be a positive int (unrolls), got {capacity!r}")
@@ -82,6 +83,21 @@ class TrajectoryQueue:
         self.frames_pending = 0
         self.unrolls_trained = 0
         self.trained_lag_sum = 0
+        if metrics is not None:
+            # callback gauges: the registry reads these plain-int attributes
+            # at snapshot time, so the queue's hot path pays nothing. The
+            # reads are lock-free (GIL-atomic int loads) and each value is
+            # individually consistent — exact cross-field invariants come
+            # from `stats()`, which holds the queue lock.
+            metrics.gauge("onpolicy/queue_depth", fn=lambda: len(self._q))
+            metrics.gauge("onpolicy/frames_pending",
+                          fn=lambda: self.frames_pending)
+            metrics.gauge("onpolicy/drop_rate",
+                          fn=lambda: self.frames_dropped
+                          / max(self.frames_generated, 1))
+            metrics.gauge("onpolicy/mean_trained_lag",
+                          fn=lambda: self.trained_lag_sum
+                          / max(self.unrolls_trained, 1))
 
     # ------------------------------------------------------------ internals
 

@@ -1,0 +1,59 @@
+"""TelemetrySink: write the run's observables to disk.
+
+Two artifacts per run directory:
+
+- ``trace.json`` — Chrome trace-event JSON (load in Perfetto or
+  chrome://tracing): every span from every traced process, plus flow
+  arrows stitching each wire round-trip across process tracks.
+- ``metrics.jsonl`` — one JSON object per sampler tick: wall-clock ts,
+  per-process cpu cores, and a full registry snapshot (counters, gauges,
+  histograms with p50/p95/p99).
+
+`merge_bench_json` is the fig3/fig4 helper: both benchmarks append their
+measured section into ONE ``BENCH_telemetry.json`` keyed by benchmark
+name, so re-running either refreshes its own section without clobbering
+the other's.
+"""
+
+import json
+import os
+from typing import Dict, List, Optional
+
+__all__ = ["TelemetrySink", "merge_bench_json"]
+
+
+class TelemetrySink:
+    def __init__(self, out_dir: str = "."):
+        self.out_dir = out_dir
+
+    def dump(self, trace_events: List[dict], metric_lines: List[dict],
+             out_dir: Optional[str] = None) -> Dict[str, str]:
+        out = out_dir or self.out_dir
+        os.makedirs(out, exist_ok=True)
+        trace_path = os.path.join(out, "trace.json")
+        with open(trace_path, "w") as f:
+            json.dump({"traceEvents": trace_events, "displayTimeUnit": "ms"},
+                      f)
+        metrics_path = os.path.join(out, "metrics.jsonl")
+        with open(metrics_path, "w") as f:
+            for line in metric_lines:
+                f.write(json.dumps(line) + "\n")
+        return {"trace": trace_path, "metrics": metrics_path}
+
+
+def merge_bench_json(path: str, key: str, payload: dict) -> dict:
+    """Read-modify-write ``path`` setting ``doc[key] = payload``."""
+    doc = {}
+    if os.path.exists(path):
+        try:
+            with open(path) as f:
+                doc = json.load(f)
+        except (OSError, ValueError):
+            doc = {}
+    if not isinstance(doc, dict):
+        doc = {}
+    doc[key] = payload
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=2, sort_keys=True)
+        f.write("\n")
+    return doc

@@ -42,6 +42,14 @@ dicts additionally carry ``behavior_logprobs`` per step and a
 ``param_version`` stamp per unroll, gated on the HELLO grant exactly like
 compression — an un-granted client strips the keys.
 
+Header ``trace_seq`` (wire v3): a u32 telemetry sequence id
+(`repro.telemetry.next_trace_seq`) in a dedicated header field on every
+frame. A traced actor stamps its REQUEST, the gateway threads it through
+the replica and echoes it on the REPLY, and TRAJ/TRAJ_BATCH flushes carry
+their own — so one logical round-trip stitches into a single Perfetto
+flow across actor-host, gateway, and learner processes. 0 means untraced
+(the default; telemetry off costs four zero bytes per frame).
+
 Per-array encodings (the ``enc`` byte in every ndarray prologue):
 
   * ``ENC_RAW``  raw C-order bytes — always valid, the fallback;
@@ -75,7 +83,7 @@ Framing::
     frame   := u32 body_len | body                      (big-endian)
     body    := u16 magic | u8 ver | u8 kind | u8 flags
                | u32 actor_id | u64 request_id | u32 param_version
-               | payload
+               | u32 trace_seq | payload
     ndarray := u8 enc | u8 dtype_len | dtype_str | u8 ndim | ndim * u32 dim
                | [enc==Q8: f4 scale | f4 offset]
                | u64 nbytes | payload bytes
@@ -97,7 +105,7 @@ from typing import Callable, Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 MAGIC = 0x5254           # "RT" — repro transport
-VERSION = 2              # v2: param_version header field + per-array enc
+VERSION = 3              # v3: trace_seq header field (v2: param_version)
 
 KIND_REQUEST = 1
 KIND_REPLY = 2
@@ -134,8 +142,8 @@ DEFAULT_MAX_FRAME = 64 << 20      # 64 MiB: > any sane lane batch or unroll
 _F16_MAX = 65504.0       # largest finite float16
 
 _LEN = struct.Struct(">I")
-# magic, ver, kind, flags, actor_id, request_id, param_version
-_HEADER = struct.Struct(">HBBBIQI")
+# magic, ver, kind, flags, actor_id, request_id, param_version, trace_seq
+_HEADER = struct.Struct(">HBBBIQII")
 _U8 = struct.Struct(">B")
 _U16 = struct.Struct(">H")
 _U32 = struct.Struct(">I")
@@ -163,6 +171,7 @@ class Frame:
     request_id: int = 0
     flags: int = 0
     param_version: int = 0                   # REPLY: learner's published v
+    trace_seq: int = 0                       # telemetry stitch id (0 = off)
     array: Optional[np.ndarray] = None       # REQUEST / REPLY payload
     message: str = ""                        # ERROR payload
     arrays: Optional[Dict[str, np.ndarray]] = field(default=None)  # TRAJ
@@ -311,39 +320,44 @@ def _encode_ndarray(arr: np.ndarray) -> bytes:
 
 
 def _frame_parts(kind: int, actor_id: int, request_id: int, flags: int,
-                 payload_parts: List, param_version: int = 0) -> List:
+                 payload_parts: List, param_version: int = 0,
+                 trace_seq: int = 0) -> List:
     body_len = _HEADER.size + parts_len(payload_parts)
     head = _LEN.pack(body_len) + _HEADER.pack(
         MAGIC, VERSION, kind, flags, actor_id, request_id,
-        param_version & 0xFFFFFFFF)
+        param_version & 0xFFFFFFFF, trace_seq & 0xFFFFFFFF)
     return [head] + payload_parts
 
 
 def _frame(kind: int, actor_id: int, request_id: int, flags: int,
-           payload: bytes, param_version: int = 0) -> bytes:
+           payload: bytes, param_version: int = 0,
+           trace_seq: int = 0) -> bytes:
     return b"".join(_frame_parts(kind, actor_id, request_id, flags,
-                                 [payload], param_version))
+                                 [payload], param_version, trace_seq))
 
 
 def encode_request_parts(actor_id: int, request_id: int, obs: np.ndarray,
                          scalar: bool = False, compress: bool = False,
-                         quant: Optional[str] = None) -> List:
+                         quant: Optional[str] = None,
+                         trace_seq: int = 0) -> List:
     """``compress``/``quant`` opt this frame into RLE / F16 / Q8 payloads —
     callers must only pass them after a HELLO negotiation granted
-    ``CODEC_RLE`` / ``CODEC_QUANT`` (see `repro.transport.socket`)."""
+    ``CODEC_RLE`` / ``CODEC_QUANT`` (see `repro.transport.socket`).
+    ``trace_seq`` (wire v3) stitches this request's spans across
+    processes; 0 means untraced."""
     flags = FLAG_SCALAR if scalar else 0
     enc_flags, parts = _encode_ndarray_parts(obs, compress=compress,
                                              quant=quant)
     return _frame_parts(KIND_REQUEST, actor_id, request_id,
-                        flags | enc_flags, parts)
+                        flags | enc_flags, parts, trace_seq=trace_seq)
 
 
 def encode_request(actor_id: int, request_id: int, obs: np.ndarray,
                    scalar: bool = False, compress: bool = False,
-                   quant: Optional[str] = None) -> bytes:
+                   quant: Optional[str] = None, trace_seq: int = 0) -> bytes:
     return b"".join(encode_request_parts(actor_id, request_id, obs,
                                          scalar=scalar, compress=compress,
-                                         quant=quant))
+                                         quant=quant, trace_seq=trace_seq))
 
 
 def encode_hello(codecs: int) -> bytes:
@@ -369,18 +383,20 @@ def encode_shm(c2s_name: str, s2c_name: str, slot_size: int,
 
 
 def encode_reply_parts(request_id: int, actions: np.ndarray,
-                       version: int = 0) -> List:
+                       version: int = 0, trace_seq: int = 0) -> List:
     """``version`` (the behavior-param version serving this reply) rides
     the header's dedicated ``param_version`` field (wire v2; v1 smuggled
-    it through the unused actor_id slot)."""
+    it through the unused actor_id slot). ``trace_seq`` echoes the
+    REQUEST's id so the reply leg stitches onto the same flow."""
     _, parts = _encode_ndarray_parts(actions)
     return _frame_parts(KIND_REPLY, 0, request_id, 0, parts,
-                        param_version=version)
+                        param_version=version, trace_seq=trace_seq)
 
 
 def encode_reply(request_id: int, actions: np.ndarray,
-                 version: int = 0) -> bytes:
-    return b"".join(encode_reply_parts(request_id, actions, version=version))
+                 version: int = 0, trace_seq: int = 0) -> bytes:
+    return b"".join(encode_reply_parts(request_id, actions, version=version,
+                                       trace_seq=trace_seq))
 
 
 def encode_error(request_id: int, message: str) -> bytes:
@@ -412,22 +428,27 @@ def _traj_payload_parts(arrays: Dict[str, np.ndarray], compress: bool,
 
 def encode_trajectory_parts(actor_id: int, arrays: Dict[str, np.ndarray],
                             compress: bool = False,
-                            quant: Optional[str] = None) -> List:
+                            quant: Optional[str] = None,
+                            trace_seq: int = 0) -> List:
     flags, parts = _traj_payload_parts(arrays, compress, quant)
-    return _frame_parts(KIND_TRAJ, actor_id, 0, flags, parts)
+    return _frame_parts(KIND_TRAJ, actor_id, 0, flags, parts,
+                        trace_seq=trace_seq)
 
 
 def encode_trajectory(actor_id: int, arrays: Dict[str, np.ndarray],
                       compress: bool = False,
-                      quant: Optional[str] = None) -> bytes:
+                      quant: Optional[str] = None,
+                      trace_seq: int = 0) -> bytes:
     return b"".join(encode_trajectory_parts(actor_id, arrays,
-                                            compress=compress, quant=quant))
+                                            compress=compress, quant=quant,
+                                            trace_seq=trace_seq))
 
 
 def encode_traj_batch_parts(actor_id: int,
                             trajs: Sequence[Dict[str, np.ndarray]],
                             compress: bool = False,
-                            quant: Optional[str] = None) -> List:
+                            quant: Optional[str] = None,
+                            trace_seq: int = 0) -> List:
     """Coalesce several unroll dicts into ONE ``KIND_TRAJ_BATCH`` frame —
     one syscall / ring slot per actor flush instead of one per lane record.
     Only sent after a ``CODEC_TRAJBATCH`` HELLO grant."""
@@ -439,14 +460,17 @@ def encode_traj_batch_parts(actor_id: int,
         f, tparts = _traj_payload_parts(arrays, compress, quant)
         flags |= f
         parts.extend(tparts)
-    return _frame_parts(KIND_TRAJ_BATCH, actor_id, 0, flags, parts)
+    return _frame_parts(KIND_TRAJ_BATCH, actor_id, 0, flags, parts,
+                        trace_seq=trace_seq)
 
 
 def encode_traj_batch(actor_id: int, trajs: Sequence[Dict[str, np.ndarray]],
                       compress: bool = False,
-                      quant: Optional[str] = None) -> bytes:
+                      quant: Optional[str] = None,
+                      trace_seq: int = 0) -> bytes:
     return b"".join(encode_traj_batch_parts(actor_id, trajs,
-                                            compress=compress, quant=quant))
+                                            compress=compress, quant=quant,
+                                            trace_seq=trace_seq))
 
 
 # ---------------------------------------------------------------- decoding
@@ -594,7 +618,7 @@ def decode_frame(body, max_frame: int = DEFAULT_MAX_FRAME,
     if len(body) < _HEADER.size:
         raise TruncatedFrame(f"frame body of {len(body)} bytes < header")
     (magic, ver, kind, flags, actor_id, request_id,
-     param_version) = _HEADER.unpack_from(body)
+     param_version, trace_seq) = _HEADER.unpack_from(body)
     if magic != MAGIC:
         raise CodecError(f"bad magic 0x{magic:04x} (stream desynchronized?)")
     if ver != VERSION:
@@ -613,7 +637,8 @@ def decode_frame(body, max_frame: int = DEFAULT_MAX_FRAME,
             f"invalid on frame kind {kind}")
     offset = _HEADER.size
     frame = Frame(kind=kind, actor_id=actor_id, request_id=request_id,
-                  flags=flags, param_version=param_version)
+                  flags=flags, param_version=param_version,
+                  trace_seq=trace_seq)
     if kind in (KIND_REQUEST, KIND_REPLY):
         frame.array, offset = _decode_ndarray(body, offset,
                                               max_frame=max_frame,

@@ -30,7 +30,11 @@ class Transport:
     def submit(self, actor_id: int, obs: np.ndarray):
         raise NotImplementedError
 
-    def submit_batch(self, actor_id: int, obs: np.ndarray):
+    def submit_batch(self, actor_id: int, obs: np.ndarray,
+                     trace_seq: int = 0):
+        """``trace_seq`` (optional, telemetry): a `repro.telemetry`
+        stitch id the endpoint threads through to every span this
+        request touches (and onto the wire, for remote endpoints)."""
         raise NotImplementedError
 
     def close(self):
@@ -54,5 +58,6 @@ class InProcTransport(Transport):
     def submit(self, actor_id: int, obs: np.ndarray):
         return self.server.submit(actor_id, obs)
 
-    def submit_batch(self, actor_id: int, obs: np.ndarray):
-        return self.server.submit_batch(actor_id, obs)
+    def submit_batch(self, actor_id: int, obs: np.ndarray,
+                     trace_seq: int = 0):
+        return self.server.submit_batch(actor_id, obs, trace_seq=trace_seq)

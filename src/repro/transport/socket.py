@@ -47,6 +47,7 @@ NO liveness state — peer death is always detected on the TCP socket, so a
 dead reader severs the connection exactly like the plain socket path.
 """
 
+import contextlib
 import os
 import queue
 import select as _select
@@ -61,6 +62,8 @@ from typing import Callable, Dict, List, Optional, Tuple
 import numpy as np
 
 from repro.core.inference import InferenceRequest, ReplyError
+from repro.telemetry.metrics import MetricsRegistry
+from repro.telemetry.tracer import next_trace_seq
 from repro.transport.codec import (CODEC_ONPOLICY, CODEC_QUANT, CODEC_RLE,
                                    CODEC_SHM, CODEC_TRAJBATCH,
                                    DEFAULT_MAX_FRAME, FLAG_F16, FLAG_Q8,
@@ -93,6 +96,9 @@ _ONPOLICY_TRAJ_KEYS = ("behavior_logprobs", "param_version")
 _TRAJ_COALESCE_CAP = 256
 
 _IOV_MAX = 1024        # POSIX minimum for sendmsg iovec count
+
+# shared no-op context for "tracer is None" code paths
+_NOOP_CTX = contextlib.nullcontext()
 
 
 def _is_loopback(host: str) -> bool:
@@ -207,10 +213,13 @@ class SocketTransport(Transport):
     def __init__(self, sock: _socket.socket,
                  max_frame: int = DEFAULT_MAX_FRAME,
                  compress: bool = False, onpolicy: bool = False,
-                 quant: Optional[str] = None):
+                 quant: Optional[str] = None, telemetry=None):
         sock.setsockopt(_socket.IPPROTO_TCP, _socket.TCP_NODELAY, 1)
         self._sock = sock
         self.max_frame = max_frame
+        self._tracer = (telemetry.tracer
+                        if telemetry is not None and telemetry.enabled
+                        else None)
         self._send_lock = threading.Lock()
         self._pending: Dict[int, "queue.Queue"] = {}
         self._pending_lock = threading.Lock()
@@ -283,7 +292,8 @@ class SocketTransport(Transport):
 
     # ------------------------------------------------------- actor surface
 
-    def submit_batch(self, actor_id: int, obs: np.ndarray) -> "queue.Queue":
+    def submit_batch(self, actor_id: int, obs: np.ndarray,
+                     trace_seq: int = 0) -> "queue.Queue":
         obs = np.asarray(obs)
         reply: "queue.Queue" = queue.Queue(maxsize=1)
         if self.error is not None or self._closed.is_set():
@@ -296,7 +306,7 @@ class SocketTransport(Transport):
         try:
             self._send_parts(encode_request_parts(
                 actor_id, request_id, obs, compress=self._rle,
-                quant=self._quant_eff))
+                quant=self._quant_eff, trace_seq=trace_seq))
         except OSError as e:
             self._fail(f"send failed: {e}")
         return reply
@@ -321,10 +331,14 @@ class SocketTransport(Transport):
             self._hello.wait(timeout=5.0)
         if not self._onpolicy:
             arrays = _strip_onpolicy_keys(arrays)
+        tr = self._tracer
+        seq = next_trace_seq() if tr is not None else 0
         try:
-            self._send_parts(encode_trajectory_parts(
-                actor_id, arrays, compress=self._rle,
-                quant=self._quant_eff))
+            with (tr.trace_span("wire/traj_send", seq=seq)
+                  if tr is not None else _NOOP_CTX):
+                self._send_parts(encode_trajectory_parts(
+                    actor_id, arrays, compress=self._rle,
+                    quant=self._quant_eff, trace_seq=seq))
         except OSError as e:
             self._fail(f"send failed: {e}")
 
@@ -513,10 +527,11 @@ class _WireReply:
     with it."""
 
     def __init__(self, gateway: "InferenceGateway", channel,
-                 request_id: int):
+                 request_id: int, trace_seq: int = 0):
         self._gateway = gateway
         self._channel = channel
         self._request_id = request_id
+        self._trace_seq = trace_seq
 
     def put(self, result):
         if isinstance(result, ReplyError):
@@ -525,9 +540,15 @@ class _WireReply:
                                             result.message))
         else:
             self._gateway._bump("reply_frames")
-            self._channel.send_parts(encode_reply_parts(
-                self._request_id, np.asarray(result),
-                version=self._gateway._version()))
+            tr = self._gateway._tracer
+            seq = self._trace_seq
+            with (tr.trace_span("gateway/reply_encode", seq=seq)
+                  if tr is not None and seq else _NOOP_CTX):
+                # the REPLY echoes the REQUEST's stitch id so the actor-
+                # side decode leg lands on the same flow
+                self._channel.send_parts(encode_reply_parts(
+                    self._request_id, np.asarray(result),
+                    version=self._gateway._version(), trace_seq=seq))
 
 
 class _SyncReply:
@@ -568,10 +589,13 @@ class SyncSocketTransport(Transport):
                  max_frame: int = DEFAULT_MAX_FRAME,
                  compress: bool = False, onpolicy: bool = False,
                  quant: Optional[str] = None, coalesce: bool = False,
-                 _offer_shm: bool = False):
+                 telemetry=None, _offer_shm: bool = False):
         sock.setsockopt(_socket.IPPROTO_TCP, _socket.TCP_NODELAY, 1)
         self._sock = sock
         self.max_frame = max_frame
+        self._tracer = (telemetry.tracer
+                        if telemetry is not None and telemetry.enabled
+                        else None)
         self._buf = bytearray()
         self._next_id = 1
         self._rle = False        # enabled by the gateway's HELLO grant
@@ -630,14 +654,16 @@ class SyncSocketTransport(Transport):
                 self.error = frame.message
         return self._hello_seen and self.error is None
 
-    def submit_batch(self, actor_id: int, obs: np.ndarray) -> _SyncReply:
+    def submit_batch(self, actor_id: int, obs: np.ndarray,
+                     trace_seq: int = 0) -> _SyncReply:
         self._flush_traj()
         request_id = self._next_id
         self._next_id += 1
         if self.error is None:
             self._send_parts(encode_request_parts(
                 actor_id, request_id, np.asarray(obs),
-                compress=self._rle, quant=self._quant_eff))
+                compress=self._rle, quant=self._quant_eff,
+                trace_seq=trace_seq))
         return _SyncReply(self, request_id)
 
     def submit(self, actor_id: int, obs: np.ndarray):
@@ -657,8 +683,13 @@ class SyncSocketTransport(Transport):
             if len(self._traj_buf) >= _TRAJ_COALESCE_CAP:
                 self._flush_traj()
             return
-        self._send_parts(encode_trajectory_parts(
-            actor_id, arrays, compress=self._rle, quant=self._quant_eff))
+        tr = self._tracer
+        seq = next_trace_seq() if tr is not None else 0
+        with (tr.trace_span("wire/traj_send", seq=seq)
+              if tr is not None else _NOOP_CTX):
+            self._send_parts(encode_trajectory_parts(
+                actor_id, arrays, compress=self._rle,
+                quant=self._quant_eff, trace_seq=seq))
 
     def _flush_traj(self):
         if not self._traj_buf:
@@ -669,9 +700,17 @@ class SyncSocketTransport(Transport):
         by_actor: Dict[int, List[Dict[str, np.ndarray]]] = {}
         for aid, arrays in buf:
             by_actor.setdefault(aid, []).append(arrays)
+        tr = self._tracer
         for aid, trajs in by_actor.items():
-            self._send_parts(encode_traj_batch_parts(
-                aid, trajs, compress=self._rle, quant=self._quant_eff))
+            # each coalesced flush frame gets its own stitch id so the
+            # gateway-side ingest span pairs with this client-side send
+            seq = next_trace_seq() if tr is not None else 0
+            with (tr.trace_span("wire/traj_flush", seq=seq,
+                                args={"records": len(trajs)})
+                  if tr is not None else _NOOP_CTX):
+                self._send_parts(encode_traj_batch_parts(
+                    aid, trajs, compress=self._rle, quant=self._quant_eff,
+                    trace_seq=seq))
 
     def close(self):
         self._flush_traj()       # conserve the trajectory ledger
@@ -786,20 +825,23 @@ class ShmTransport(SyncSocketTransport):
                  max_frame: int = DEFAULT_MAX_FRAME,
                  compress: bool = False, onpolicy: bool = False,
                  quant: Optional[str] = None, coalesce: bool = False,
-                 slot_size: int = DEFAULT_SLOT_SIZE,
+                 telemetry=None, slot_size: int = DEFAULT_SLOT_SIZE,
                  num_slots: int = DEFAULT_NUM_SLOTS):
         self._c2s: Optional[ShmRing] = None
         self._s2c: Optional[ShmRing] = None
         self._slot_size = slot_size
         self._num_slots = num_slots
         self._backoff = _SpinBackoff()
+        # single-thread counters (one actor per transport); mirrored into
+        # the telemetry registry at report time by `run_actor_host` so the
+        # ring hot path stays lock-free
         self.shm_frames = 0      # frames that rode the ring (sent)
         self.shm_replies = 0     # frames that arrived via the ring
         self.spill_frames = 0    # frames that fell back to TCP
         peer = sock.getpeername()[0]
         super().__init__(sock, max_frame=max_frame, compress=compress,
                          onpolicy=onpolicy, quant=quant, coalesce=coalesce,
-                         _offer_shm=_is_loopback(peer))
+                         telemetry=telemetry, _offer_shm=_is_loopback(peer))
 
     @property
     def shm_active(self) -> bool:
@@ -899,9 +941,13 @@ class InferenceGateway:
                  max_frame: int = DEFAULT_MAX_FRAME,
                  gil_switch_interval_s: Optional[float] = 1e-3,
                  version_source: Optional[Callable] = None,
-                 onpolicy: bool = False, allow_shm: bool = True):
+                 onpolicy: bool = False, allow_shm: bool = True,
+                 telemetry=None):
         self.server = server
         self.sink = sink
+        self._tracer = (telemetry.tracer
+                        if telemetry is not None and telemetry.enabled
+                        else None)
         self._bind = (host, port)
         self.max_frame = max_frame
         # learner's published param version, stamped onto every REPLY so
@@ -930,18 +976,27 @@ class InferenceGateway:
         self._lock = threading.Lock()
         # traj_frames counts trajectory RECORDS delivered to the sink (a
         # TRAJ_BATCH frame counts each coalesced record), so the ledger is
-        # conserved whether or not the client coalesces
-        self.stats = {"connections": 0, "request_frames": 0,
-                      "reply_frames": 0, "error_frames": 0, "traj_frames": 0,
-                      "hello_frames": 0, "rle_request_frames": 0,
-                      "quant_request_frames": 0, "traj_batch_frames": 0,
-                      "shm_conns": 0, "shm_frames": 0, "shm_spill_frames": 0}
+        # conserved whether or not the client coalesces. Counters live in
+        # a PRIVATE registry (each gateway owns its names; a shared one
+        # would collide across `num_gateways` shards) — `stats` stays the
+        # historical dict, now as an atomic snapshot; SeedSystem attaches
+        # the registry to the Telemetry bundle for metrics.jsonl export.
+        self.metrics = MetricsRegistry()
+        self._c = self.metrics.counters("gateway", (
+            "connections", "request_frames", "reply_frames", "error_frames",
+            "traj_frames", "hello_frames", "rle_request_frames",
+            "quant_request_frames", "traj_batch_frames", "shm_conns",
+            "shm_frames", "shm_spill_frames"))
         self.error: Optional[str] = None
 
+    @property
+    def stats(self) -> dict:
+        """Point-in-time atomic counter snapshot (historical dict shape)."""
+        return {k: int(v) for k, v in self.metrics.read(self._c).items()}
+
     def _bump(self, key: str, n: int = 1):
-        # N reader threads + the server loop all count; += is not atomic
-        with self._lock:
-            self.stats[key] += n
+        # N reader threads + the server loop all count; Counter.add locks
+        self._c[key].add(n)
 
     def _version(self) -> int:
         return self.version_source() if self.version_source else 0
@@ -987,7 +1042,7 @@ class InferenceGateway:
             sock.setsockopt(_socket.IPPROTO_TCP, _socket.TCP_NODELAY, 1)
             with self._lock:
                 self._conns.append(sock)
-                self.stats["connections"] += 1
+            self._bump("connections")
             t = threading.Thread(target=self._read_conn, args=(sock,),
                                  daemon=True)
             t.start()
@@ -1019,6 +1074,19 @@ class InferenceGateway:
         return None, False
 
     def _handle_frame(self, frame, sock, writer, state) -> None:
+        tr = self._tracer
+        if tr is not None and frame.trace_seq and frame.kind in (
+                KIND_REQUEST, KIND_TRAJ, KIND_TRAJ_BATCH):
+            # the gateway leg of the stitched round-trip: decode already
+            # happened, this span is the reader-thread dispatch
+            name = ("gateway/dispatch" if frame.kind == KIND_REQUEST
+                    else "gateway/traj_ingest")
+            with tr.trace_span(name, seq=frame.trace_seq):
+                self._dispatch_frame(frame, sock, writer, state)
+        else:
+            self._dispatch_frame(frame, sock, writer, state)
+
+    def _dispatch_frame(self, frame, sock, writer, state) -> None:
         if frame.kind == KIND_REQUEST:
             self._bump("request_frames")
             if frame.flags & FLAG_RLE:
@@ -1034,8 +1102,9 @@ class InferenceGateway:
                     f"got a {frame.array.ndim}-d array")
             self.server.submit_request(InferenceRequest(
                 frame.actor_id, frame.array,
-                _WireReply(self, state["reply_channel"],
-                           frame.request_id)))
+                _WireReply(self, state["reply_channel"], frame.request_id,
+                           trace_seq=frame.trace_seq),
+                trace_seq=frame.trace_seq))
         elif frame.kind == KIND_TRAJ:
             self._bump("traj_frames")
             if self.sink is not None:

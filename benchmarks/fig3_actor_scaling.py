@@ -37,8 +37,14 @@ parses as Chrome trace events with at least one round-trip stitched
 across two processes by wire trace_seq, metrics.jsonl is non-empty with
 p50/p95/p99 for replica batch wait and wire RTT, the frame ledger agrees
 with the telemetry counters, and the measured CPU/GPU ratio is finite
-and classified. Writes trace.json, metrics.jsonl and BENCH_telemetry.json
-to --out-dir; exits nonzero if any check fails (CI runs
+and classified. The run also binds the live ops plane (`ops_port=0`): a
+sidecar thread scrapes `/metrics` + `/healthz` MID-run and the exposition
+must pass the in-repo Prometheus validator (names, TYPE backing, bucket
+monotonicity, +Inf == _count); afterwards a best-of-N in-proc pair gates
+the full ops plane (HTTP server + watchdog + auditor) at < 3% frames/s
+overhead vs telemetry-only. Writes trace.json, metrics.jsonl and
+BENCH_telemetry.json (including the measured ops-overhead delta) to
+--out-dir; exits nonzero if any check fails (CI runs
 `--smoke --telemetry`).
 """
 
@@ -294,21 +300,83 @@ def _telemetry_policy(obs, ids):
     return np.random.randint(0, CatchEnv.num_actions, size=(obs.shape[0],))
 
 
+def _http_get(url, timeout=2.0):
+    """GET returning (status, body-text); a 503 /healthz still has a JSON
+    body worth reading, so HTTPError is a result, not an exception."""
+    import urllib.error
+    import urllib.request
+    try:
+        with urllib.request.urlopen(url, timeout=timeout) as resp:
+            return resp.status, resp.read().decode()
+    except urllib.error.HTTPError as e:
+        return e.code, e.read().decode()
+
+
+def _ops_overhead_gate(repeats=3, seconds=0.8):
+    """Satellite of the PR-7 disabled-overhead gate: the FULL ops plane
+    (HTTP server + watchdog + auditor, nothing scraping) must cost < 3%
+    best-of-N frames/s vs the same in-proc system under telemetry only."""
+    from repro.telemetry import Telemetry
+
+    def best_fps(ops_port):
+        best = 0.0
+        for _ in range(repeats):
+            tel = Telemetry(process_name="learner")
+            sys_ = SeedSystem(
+                env_factory=CatchEnv, policy_step=_telemetry_policy,
+                num_actors=2, unroll=8, envs_per_actor=2,
+                deadline_ms=2.0, telemetry=tel, ops_port=ops_port)
+            sys_.warmup()
+            stats = sys_.run(seconds=seconds, with_learner=False)
+            sys_.stop_ops()
+            best = max(best, stats["env_frames_per_s"])
+        return best
+
+    base = best_fps(None)          # telemetry only: no ops/watchdog/auditor
+    withops = best_fps(0)          # full ops plane enabled
+    overhead = 1.0 - withops / base if base > 0 else 0.0
+    return base, withops, overhead
+
+
 def run_telemetry(args, sec, out_dir="."):
     """Part (g): measured telemetry validation run (see module docstring).
 
     Every check appends to `failures` instead of raising, so one broken
     artifact still reports the state of all the others before exit(1).
     """
-    from repro.telemetry import Telemetry, merge_bench_json
+    import threading
+
+    from repro.telemetry import (Telemetry, merge_bench_json,
+                                 validate_prometheus)
 
     seconds = max(sec * 4, 1.2) if args.smoke else 4.0
     tel = Telemetry(process_name="learner", out_dir=out_dir)
     sys_ = SeedSystem(env_factory=CatchEnv, policy_step=_telemetry_policy,
                       num_actors=2, unroll=8, envs_per_actor=2,
                       deadline_ms=2.0, transport="socket",
-                      num_actor_hosts=2, telemetry=tel)
+                      num_actor_hosts=2, telemetry=tel, ops_port=0)
+    ops_host, ops_port = sys_.ops_address
+    ops_base = f"http://{ops_host}:{ops_port}"
+    # scrape the live plane MID-run from a sidecar thread — the same shape
+    # a Prometheus agent would use against a real deployment
+    scrapes = {"metrics": [], "healthz": [], "errors": []}
+    scr_stop = threading.Event()
+
+    def _scrape_loop():
+        while not scr_stop.wait(0.4):
+            try:
+                _, text = _http_get(ops_base + "/metrics")
+                scrapes["metrics"].append(text)
+                _, hz = _http_get(ops_base + "/healthz")
+                scrapes["healthz"].append(json.loads(hz))
+            except Exception as e:       # noqa: BLE001 — recorded, checked
+                scrapes["errors"].append(str(e))
+
+    scraper = threading.Thread(target=_scrape_loop, daemon=True)
+    scraper.start()
     stats = sys_.run(seconds=seconds, with_learner=False)
+    scr_stop.set()
+    scraper.join(timeout=5.0)
     report = tel.bottleneck_report(stats)
     paths = tel.dump(out_dir)
 
@@ -378,6 +446,31 @@ def run_telemetry(args, sec, out_dir="."):
     check(report.bottleneck.endswith("-bound") or report.bottleneck == "idle",
           f"unclassified window: {report.bottleneck!r}")
 
+    # 6. live ops plane: mid-run scrapes happened and the LAST /metrics
+    # (plus a final post-run one) passes the in-repo Prometheus validator
+    # (names, TYPE backing, bucket monotonicity, +Inf == _count)
+    check(bool(scrapes["metrics"]),
+          f"no mid-run /metrics scrape landed (errors: {scrapes['errors']})")
+    check(bool(scrapes["healthz"]), "no mid-run /healthz scrape landed")
+    promlint = []
+    for text in scrapes["metrics"][-1:]:
+        promlint.extend(validate_prometheus(text))
+    _, final_text = _http_get(ops_base + "/metrics", timeout=5.0)
+    promlint.extend(validate_prometheus(final_text))
+    for v in promlint:
+        check(False, f"prometheus exposition: {v}")
+    verdicts = sorted({h.get("verdict", "?") for h in scrapes["healthz"]})
+    check(all(v in ("healthy", "degraded", "stalled") for v in verdicts),
+          f"unparseable /healthz verdicts: {verdicts}")
+    sys_.stop_ops()
+
+    # 7. ops plane overhead vs telemetry-only (in-proc, best-of-N)
+    fps_base, fps_ops, ops_overhead = _ops_overhead_gate(
+        seconds=max(sec * 2, 0.6))
+    check(ops_overhead < 0.03,
+          f"ops plane costs {ops_overhead:.1%} frames/s "
+          f"({fps_ops:.0f} vs {fps_base:.0f}) — gate is 3%")
+
     payload = {
         "seconds": seconds,
         "env_frames": stats["env_frames"],
@@ -390,6 +483,12 @@ def run_telemetry(args, sec, out_dir="."):
         "wire_rtt_p50_s": rtt_h.get("p50") if rtt_h else None,
         "wire_rtt_p99_s": rtt_h.get("p99") if rtt_h else None,
         "bottleneck": report.as_dict(),
+        "ops_scrapes": len(scrapes["metrics"]),
+        "ops_healthz_verdicts": verdicts,
+        "ops_metrics_lines": len(final_text.splitlines()),
+        "fps_telemetry_only": fps_base,
+        "fps_with_ops": fps_ops,
+        "ops_overhead_frac": ops_overhead,
         "failures": failures,
     }
     merge_bench_json(os.path.join(out_dir, "BENCH_telemetry.json"),
@@ -410,6 +509,10 @@ def run_telemetry(args, sec, out_dir="."):
               f"p99_us={wait_h['p99'] * 1e6:.0f}")
     print(f"fig3g_cpu_gpu_ratio,{report.cpu_gpu_ratio:.2f},"
           f"{report.bottleneck}")
+    print(f"fig3g_ops_scrapes,{len(scrapes['metrics'])},"
+          f"mid-run /metrics+/healthz verdicts={'/'.join(verdicts)}")
+    print(f"fig3g_ops_overhead_pct,{100.0 * ops_overhead:.2f},"
+          f"with_ops={fps_ops:.0f} telemetry_only={fps_base:.0f} gate=3%")
     for line in str(report).splitlines():
         print(f"# {line}")
     if failures:

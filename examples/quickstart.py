@@ -212,6 +212,51 @@ def telemetry_demo(E=4, seconds=1.0):
           f"and {paths['metrics']}")
 
 
+def ops_demo(E=4, seconds=2.0):
+    """The LIVE half of the measurement plane: `SeedSystem(ops_port=0)`
+    binds a loopback HTTP server next to the learner — `/metrics` is the
+    Prometheus text scrape (counters match the conserved frame ledger
+    exactly), `/healthz` the watchdog's verdict over every loop's
+    heartbeat, `/varz` the bottleneck report + ledger as JSON, `/trace` an
+    on-demand Chrome trace. Here: run in a background thread, scrape
+    mid-flight with nothing but urllib, and print the live bottleneck."""
+    import json
+    import threading
+    import time
+    import urllib.request
+
+    from repro.telemetry import Telemetry
+
+    tel = Telemetry(process_name="learner", out_dir="/tmp/repro_quickstart")
+    sys_ = SeedSystem(env_factory=CatchEnv, policy_step=_quickstart_policy,
+                      num_actors=2, unroll=8, envs_per_actor=E,
+                      deadline_ms=2.0, telemetry=tel, ops_port=0)
+    host, port = sys_.ops_address
+    print(f"  ops plane listening on http://{host}:{port}")
+    sys_.warmup()
+    runner = threading.Thread(
+        target=lambda: sys_.run(seconds=seconds, with_learner=False),
+        daemon=True)
+    runner.start()
+    time.sleep(seconds / 2)                      # scrape MID-run
+    with urllib.request.urlopen(
+            f"http://{host}:{port}/metrics", timeout=5) as resp:
+        metrics_text = resp.read().decode()
+    with urllib.request.urlopen(
+            f"http://{host}:{port}/varz", timeout=5) as resp:
+        varz = json.load(resp)
+    runner.join()
+    sample = [l for l in metrics_text.splitlines()
+              if l.startswith("inference_") and not l.startswith("# ")]
+    print(f"  /metrics: {len(metrics_text.splitlines())} lines, e.g. "
+          f"{sample[0] if sample else '(warming up)'}")
+    bn = varz.get("bottleneck", {})
+    print(f"  /varz live bottleneck: {bn.get('bottleneck', '?')} "
+          f"(cpu/gpu ratio {bn.get('cpu_gpu_ratio', 0.0):.2f})")
+    print(f"  /healthz verdict: {varz.get('health', {}).get('verdict', '?')}")
+    sys_.stop_ops()
+
+
 def main():
     arch = sys.argv[1] if len(sys.argv) > 1 else "qwen3-14b"
     cfg = smoke_config(arch)
@@ -251,6 +296,8 @@ def main():
     onpolicy_demo()
     print("== telemetry plane (spans, histograms, bottleneck attribution)")
     telemetry_demo()
+    print("== live ops plane (/metrics, /healthz, /varz over HTTP)")
+    ops_demo()
     print("ok")
 
 

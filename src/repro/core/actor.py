@@ -104,6 +104,10 @@ class Actor:
                         else None)
         self._h_rtt = (telemetry.metrics.histogram("wire/rtt_s")
                        if telemetry is not None else None)
+        # ops plane (None without a full Telemetry bundle): the loop
+        # heartbeats, and a poison reply files a postmortem
+        self._health = getattr(telemetry, "health", None)
+        self._flightrec = getattr(telemetry, "flightrec", None)
 
     @property
     def steps(self):
@@ -131,9 +135,25 @@ class Actor:
         return buf
 
     def _loop(self):
+        hb = self._health
+        hb_name = f"actor/{self.actor_id}"
+        if hb is not None:
+            # the reply-retry loop wakes at least every 1 s even when a
+            # replica is wedged, so a 5 s deadline isolates blame: the
+            # wedged REPLICA goes stale, its blocked actors stay healthy
+            hb.register(hb_name, stale_after_s=5.0)
+        try:
+            self._run()
+        finally:
+            if hb is not None:
+                hb.unregister(hb_name)
+
+    def _run(self):
         E = self.num_envs
         tr = self._tracer
         h_rtt = self._h_rtt
+        hb = self._health
+        hb_name = f"actor/{self.actor_id}"
         obs = self.vec.reset()                       # (E, ...)
         # lanes step in lockstep, so one batched accumulator suffices: O(1)
         # appends per iteration, split into per-lane unrolls only at flush
@@ -142,6 +162,8 @@ class Actor:
         # first step (the most stale params any of its actions used)
         unroll_version = self._version()
         while not self._stop.is_set():
+            if hb is not None:
+                hb.beat(hb_name)
             # ONE request per iteration; on timeout keep waiting on the SAME
             # reply — resubmitting would advance the server's per-lane
             # recurrent state twice for one observation. Fail fast instead
@@ -167,6 +189,11 @@ class Actor:
                 try:
                     result = reply.get(timeout=1.0)
                 except queue.Empty:
+                    if hb is not None:
+                        # still alive, just waiting on a reply — without
+                        # this beat a wedged replica would mark its
+                        # blocked actors stale too and blur the blame
+                        hb.beat(hb_name)
                     err = getattr(self.server, "error", None)
                     if err is not None:
                         self.error = err
@@ -178,6 +205,10 @@ class Actor:
                     # shutdown — not an error worth surfacing
                     if not self._stop.is_set():
                         self.error = result.message
+                        if self._flightrec is not None:
+                            self._flightrec.trigger(
+                                "actor_poisoned",
+                                f"actor {self.actor_id}: {result.message}")
                     break
                 actions = np.asarray(result)         # (E,) or (E, 2)
                 break

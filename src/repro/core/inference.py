@@ -140,14 +140,28 @@ class _Replica:
         # record a fatal policy_step/shape error instead of dying silently:
         # actors wait on replies indefinitely, so a silent death here would
         # stall the whole system with no trace (same class as Learner.error)
+        hb = self.server._health
+        name = f"inference/replica{self.replica_id}"
+        if hb is not None:
+            # _collect polls at >= 20 Hz even idle, so a 1.5 s deadline
+            # means a wedged policy_step flips /healthz well inside the
+            # 2 s the ops plane promises
+            hb.register(name, stale_after_s=1.5)
         try:
             self._serve()
         except Exception:
             self.server._fatal(traceback.format_exc())
+        finally:
+            if hb is not None:
+                hb.unregister(name)
 
     def _serve(self):
         srv = self.server
+        hb = srv._health
+        hb_name = f"inference/replica{self.replica_id}"
         while not srv._stop.is_set():
+            if hb is not None:
+                hb.beat(hb_name)
             batch = self._collect()
             if not batch:
                 continue
@@ -269,6 +283,10 @@ class InferenceServer:
                         else None)
         self._h_wait = self.metrics.histogram("inference/batch_wait_s")
         self._h_compute = self.metrics.histogram("inference/compute_s")
+        # ops plane (both None without a full Telemetry bundle): replica
+        # loops stamp heartbeats; _fatal files a postmortem on the way down
+        self._health = getattr(telemetry, "health", None)
+        self._flightrec = getattr(telemetry, "flightrec", None)
         # each replica serves a shard of the lane budget; ceil so the
         # shards cover max_batch and N=1 keeps the budget bit-identical
         budget = -(-max_batch // num_replicas)
@@ -306,10 +324,15 @@ class InferenceServer:
         """A replica died: record the first traceback, stop EVERY replica
         (a half-sharded server would silently serve a fraction of lanes),
         and poison all queues."""
-        if self.error is None:
+        first = self.error is None
+        if first:
             self.error = err
         self._stop.set()
         self._drain_pending(self.error)
+        if first and self._flightrec is not None:
+            # after the drain: the bundle's stacks/metrics show the system
+            # as the poisoned actors will find it
+            self._flightrec.trigger("server_fatal", err)
 
     def _drain_pending(self, message: str):
         """Fail-fast: poison every queued request on every replica so

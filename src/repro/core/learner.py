@@ -64,6 +64,7 @@ class Learner:
         else:
             self._h_train = None
             self._h_wait = None
+        self._health = getattr(telemetry, "health", None)
 
     @property
     def stopped(self) -> bool:
@@ -120,14 +121,26 @@ class Learner:
     def _loop(self):
         # A bare `except queue.Empty` would let any other exception kill the
         # thread silently; record it so the system can surface the death.
-        while not self._stop.is_set():
-            try:
-                self._one_step()
-            except queue.Empty:
-                continue
-            except BatchSourceClosed:
-                break                 # poisoned batch source: clean shutdown
-            except Exception:
-                self.error = traceback.format_exc()
-                self._stop.set()
-                break
+        hb = self._health
+        if hb is not None:
+            # generous deadline: the first train_step pays jit compile
+            # (seconds), and an empty trajectory queue legitimately
+            # blocks batch_fn — only a truly wedged learner should flag
+            hb.register("learner", stale_after_s=30.0)
+        try:
+            while not self._stop.is_set():
+                if hb is not None:
+                    hb.beat("learner")
+                try:
+                    self._one_step()
+                except queue.Empty:
+                    continue
+                except BatchSourceClosed:
+                    break             # poisoned batch source: clean shutdown
+                except Exception:
+                    self.error = traceback.format_exc()
+                    self._stop.set()
+                    break
+        finally:
+            if hb is not None:
+                hb.unregister("learner")

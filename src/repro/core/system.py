@@ -94,7 +94,7 @@ class SeedSystem:
                  queue_capacity: Optional[int] = None,
                  gamma: Optional[float] = None,
                  policy_publish: Optional[Callable] = None,
-                 telemetry=None):
+                 telemetry=None, ops_port: Optional[int] = None):
         if backend not in ("host", "device"):
             raise ValueError(f"unknown backend {backend!r}; use 'host' or 'device'")
         if algo not in ("r2d2", "vtrace"):
@@ -167,6 +167,17 @@ class SeedSystem:
                 f"got {type(telemetry).__name__} — construct one with "
                 f"Telemetry(process_name=...) and pass the same instance "
                 f"you will later dump()/report from")
+        if ops_port is not None:
+            if not isinstance(ops_port, int) or isinstance(ops_port, bool) \
+                    or ops_port < 0:
+                raise ValueError(
+                    f"ops_port must be a non-negative int (0 = ephemeral "
+                    f"port) or None, got {ops_port!r}")
+            if telemetry is None:
+                # the ops plane needs somewhere to read from; a bare
+                # SeedSystem(ops_port=0) gets a default telemetry bundle
+                from repro.telemetry import Telemetry
+                telemetry = Telemetry(process_name="learner")
         self.backend = backend
         self.transport = transport
         self.algo = algo
@@ -181,6 +192,13 @@ class SeedSystem:
         self.gateway = None
         self.gateways = []
         self.pool = None
+        self.num_actors = num_actors
+        self.ops_address = None
+        self._run_t0 = None
+        # ops-plane handles (None when telemetry is absent or duck-typed
+        # without the PR-8 attributes — everything downstream null-checks)
+        self._health = getattr(telemetry, "health", None)
+        self._flightrec = getattr(telemetry, "flightrec", None)
         onpolicy = algo == "vtrace"
         # the publish/version seam exists for EVERY backend now: device
         # workers pull params from it, host/socket actors read the version
@@ -193,7 +211,8 @@ class SeedSystem:
             self.onpolicy_queue = TrajectoryQueue(
                 queue_capacity, max_param_lag=max_param_lag,
                 version_source=self._version,
-                metrics=telemetry.metrics if telemetry else None)
+                metrics=telemetry.metrics if telemetry else None,
+                health=self._health)
         if backend == "host":
             if policy_step is None:
                 raise ValueError("backend='host' requires policy_step")
@@ -233,7 +252,15 @@ class SeedSystem:
                     onpolicy=onpolicy, use_shm=use_shm, quant=wire_quant,
                     telemetry=telemetry is not None,
                     pid_callback=(telemetry.watch_process
-                                  if telemetry is not None else None))
+                                  if telemetry is not None else None),
+                    heartbeat_callback=(self._health.beat
+                                        if self._health is not None else None),
+                    heartbeat_close=(self._health.unregister
+                                     if self._health is not None else None),
+                    failure_callback=(
+                        (lambda msg: self._flightrec.trigger(
+                            "pool_timeout", msg))
+                        if self._flightrec is not None else None))
                 self.actors = []
             else:
                 self.actors = [Actor(i, env_factory, self.server, self._sink,
@@ -270,7 +297,8 @@ class SeedSystem:
 
             self.actors = [
                 RolloutWorker(i, make_engine(i), self._sink,
-                              self._param_source, stamp_records=onpolicy)
+                              self._param_source, stamp_records=onpolicy,
+                              health=self._health)
                 for i in range(num_actors)]
         self.learner = None
         if train_step is not None:
@@ -293,6 +321,98 @@ class SeedSystem:
                 checkpoint_every=checkpoint_every,
                 poison=poison,
                 telemetry=telemetry)
+        auditor = getattr(telemetry, "auditor", None)
+        if auditor is not None:
+            # continuous invariant audits: re-check the conserved ledger
+            # and slot-table bounds WHILE training runs (tests only pin
+            # them at quiescence)
+            self._audit_prev_slots = 0
+            if self.onpolicy_queue is not None:
+                auditor.add_check("frame_ledger", self._audit_ledger)
+            if self.server is not None:
+                auditor.add_check("slot_table", self._audit_slots)
+        if ops_port is not None:
+            # the HTTP listener binds now (address known before run());
+            # the watchdog/auditor threads start inside telemetry.start()
+            self.ops_address = telemetry.serve_ops(port=ops_port)
+            telemetry.ops.set_varz(self._varz)
+            telemetry.ops.add_collector(self._ops_ledger_gauges)
+
+    # ---------------------------------------------------------- ops plane
+
+    def _ops_ledger_gauges(self):
+        """Per-scrape gauges whose cross-field invariants must hold WITHIN
+        one exposition: the frame ledger comes from a single
+        `TrajectoryQueue.stats()` call (atomic under the queue lock), so a
+        scrape can never observe generated != trained+dropped+pending —
+        individual callback gauges cannot promise that."""
+        out = {}
+        if self.onpolicy_queue is not None:
+            for k, v in self.onpolicy_queue.stats().items():
+                if isinstance(v, bool) or not isinstance(v, (int, float)):
+                    continue
+                out[f"onpolicy/{k}"] = v
+        if self.server is not None:
+            out["inference/num_slots"] = self.server.num_slots
+        return out
+
+    def _varz(self) -> dict:
+        """The /varz document: live throughput()/BottleneckReport/ledger/
+        occupancy stats plus health and postmortem paths — the
+        autoscaler's input."""
+        elapsed = (time.perf_counter() - self._run_t0) \
+            if self._run_t0 is not None else 0.0
+        stats = self.throughput(max(elapsed, 1e-9))
+        out = {"stats": stats}
+        if self.telemetry is not None:
+            try:
+                out["bottleneck"] = \
+                    self.telemetry.bottleneck_report(stats).as_dict()
+            except Exception:
+                pass             # a scrape must never 500 on attribution
+        if self._health is not None:
+            out["health"] = self._health.report().as_dict()
+        if self._flightrec is not None:
+            out["postmortems"] = list(self._flightrec.bundles)
+        return out
+
+    def _audit_ledger(self):
+        s = self.onpolicy_queue.stats()
+        v = []
+        accounted = (s["frames_trained"] + s["frames_dropped"]
+                     + s["frames_pending"])
+        if s["frames_generated"] != accounted:
+            v.append(f"frame ledger not conserved: generated="
+                     f"{s['frames_generated']} != trained+dropped+pending="
+                     f"{accounted}")
+        if s["frames_pending"] < 0:
+            v.append(f"negative frames_pending: {s['frames_pending']}")
+        depth = len(self.onpolicy_queue)
+        if depth > s["capacity"]:
+            v.append(f"queue depth {depth} exceeds capacity "
+                     f"{s['capacity']}")
+        return v
+
+    def _audit_slots(self):
+        v = []
+        n = self.server.num_slots
+        budget = self.num_actors * self.envs_per_actor
+        if n > budget:
+            v.append(f"slot table has {n} slots > lane budget {budget}")
+        if n < self._audit_prev_slots:
+            v.append(f"slot table shrank: {self._audit_prev_slots} -> {n} "
+                     f"(slots are never removed)")
+        else:
+            self._audit_prev_slots = n
+        return v
+
+    def stop_ops(self):
+        """Tear down the ops HTTP server. It deliberately outlives run()
+        (a post-run scrape must still see the final quiescent ledger), so
+        tests and long-lived embedders call this when done."""
+        if self.telemetry is not None:
+            self.telemetry.close_ops()
+        self.ops_address = None
 
     def _sink(self, traj):
         if self.onpolicy_queue is not None:
@@ -343,6 +463,7 @@ class SeedSystem:
                 a.vec.step(np.zeros(a.num_envs, np.int32))
 
     def run(self, seconds: float, with_learner: bool = True):
+        self._run_t0 = time.perf_counter()
         if self.telemetry is not None:
             self.telemetry.start()
         if self.pool is not None:
@@ -446,6 +567,8 @@ class SeedSystem:
             "learner_error": self.learner.error if self.learner else None,
             "episode_return_mean": float(np.mean(returns or [0.0])),
         }
+        if self.ops_address is not None:
+            out["ops_address"] = f"{self.ops_address[0]}:{self.ops_address[1]}"
         if self.server:
             # actors stamp the behavior-param version on every unroll, so
             # the device path's staleness metric exists here too: mean lag

@@ -35,6 +35,7 @@ parity contract `tests/test_transport.py` asserts.
 
 import multiprocessing as mp
 import queue as _queue
+import threading
 import time
 import traceback
 from dataclasses import dataclass
@@ -73,6 +74,14 @@ class ActorHostConfig:
     #                              to absorb (a Telemetry OBJECT cannot
     #                              cross spawn — it holds locks/threads —
     #                              so the flag travels, not the instance)
+    heartbeat: bool = False      # piggyback liveness on the result queue:
+    #                              a daemon thread puts
+    #                              {"__heartbeat__": host_id} every 0.5 s
+    #                              and the parent relays each beat into its
+    #                              HeartbeatRegistry, so the watchdog
+    #                              covers child PROCESSES over the same
+    #                              protocol the final stats already ride
+    #                              (no extra pipe to leak across spawn)
 
 
 def run_actor_host(cfg: ActorHostConfig, result_q) -> None:
@@ -80,6 +89,20 @@ def run_actor_host(cfg: ActorHostConfig, result_q) -> None:
     stats = {"host_id": cfg.host_id, "elapsed_s": 0.0, "iterations": 0,
              "frames": 0, "episodes": 0, "returns": [], "error": None,
              "unrolls": 0, "param_lag_total": 0}
+    hb_stop = None
+    if cfg.heartbeat:
+        # beat from birth: the slow phases (jax import, jit warmup, env
+        # reset) are exactly when the parent most wants proof of life
+        hb_stop = threading.Event()
+
+        def _beat_loop():
+            while not hb_stop.wait(0.5):
+                try:
+                    result_q.put({"__heartbeat__": cfg.host_id})
+                except Exception:
+                    return       # queue torn down: parent is gone anyway
+
+        threading.Thread(target=_beat_loop, daemon=True).start()
     try:
         import sys
 
@@ -189,6 +212,8 @@ def run_actor_host(cfg: ActorHostConfig, result_q) -> None:
             stats["metrics_snapshot"] = tel.metrics.snapshot()
     except Exception:
         stats["error"] = traceback.format_exc()
+    if hb_stop is not None:
+        hb_stop.set()            # stats is the LAST frame this child sends
     result_q.put(stats)
 
 
@@ -206,7 +231,8 @@ class ActorHostPool:
                  compress: bool = False, onpolicy: bool = False,
                  use_shm: bool = False, quant: Optional[str] = None,
                  coalesce: bool = True, telemetry: bool = False,
-                 pid_callback=None):
+                 pid_callback=None, heartbeat_callback=None,
+                 heartbeat_close=None, failure_callback=None):
         if not 1 <= num_hosts <= num_actors:
             raise ValueError(
                 f"num_hosts={num_hosts} must be in [1, num_actors={num_actors}]")
@@ -227,6 +253,15 @@ class ActorHostPool:
         # `Telemetry.watch_process` plugs into so the parent's utilization
         # sampler reads the children's /proc/<pid>/stat from birth
         self.pid_callback = pid_callback
+        # heartbeat_callback(name) relays each child's piggybacked beat
+        # (HeartbeatRegistry.beat: auto-registers under the default
+        # watched deadline); heartbeat_close(name) runs once per host when
+        # run() finishes so completed children don't read as stalled
+        # forever after; failure_callback(msg) fires on the hard-timeout
+        # path right before the RuntimeError (the flight recorder's seam)
+        self.heartbeat_callback = heartbeat_callback
+        self.heartbeat_close = heartbeat_close
+        self.failure_callback = failure_callback
         self.last_stats: List[dict] = []
 
     def _partitions(self) -> List[Tuple[int, ...]]:
@@ -270,7 +305,8 @@ class ActorHostPool:
                 seconds=seconds, seed=self.seed, compress=self.compress,
                 onpolicy=self.onpolicy, use_shm=self.use_shm,
                 quant=self.quant, coalesce=self.coalesce,
-                telemetry=self.telemetry)
+                telemetry=self.telemetry,
+                heartbeat=self.heartbeat_callback is not None)
             p = ctx.Process(target=run_actor_host, args=(cfg, result_q),
                             daemon=True)
             p.start()
@@ -280,16 +316,31 @@ class ActorHostPool:
         deadline = time.perf_counter() + seconds + self.grace_s
         results = []
         try:
-            for _ in procs:
+            # heartbeats interleave with final stats on the ONE queue, so
+            # collect by count, not by iteration: a {"__heartbeat__": h}
+            # frame is relayed and skipped. The deadline is re-checked
+            # explicitly — a child whose actors wedged keeps beating, and
+            # those beats must not let it dodge the hard timeout.
+            while len(results) < len(procs):
                 remaining = deadline - time.perf_counter()
+                if remaining <= 0:
+                    self._timed_out(results, procs, seconds)
                 try:
-                    results.append(result_q.get(timeout=max(remaining, 0.1)))
+                    r = result_q.get(timeout=max(remaining, 0.1))
                 except _queue.Empty:
-                    raise RuntimeError(
-                        f"actor host timed out after {seconds + self.grace_s:.0f}s "
-                        f"({len(results)}/{len(procs)} reported) — wire-level "
-                        f"deadlock or crash; partial stats: {results}")
+                    self._timed_out(results, procs, seconds)
+                if isinstance(r, dict) and "__heartbeat__" in r:
+                    if self.heartbeat_callback is not None:
+                        self.heartbeat_callback(
+                            f"actor-host-{r['__heartbeat__']}")
+                    continue
+                results.append(r)
         finally:
+            if self.heartbeat_close is not None:
+                # completed (or killed) children stop beating; drop their
+                # registry entries so they don't read as stalled forever
+                for host_id in range(len(procs)):
+                    self.heartbeat_close(f"actor-host-{host_id}")
             for p in procs:
                 p.join(timeout=5.0)
                 if p.is_alive():
@@ -297,3 +348,15 @@ class ActorHostPool:
                     p.join(timeout=5.0)
         self.last_stats = sorted(results, key=lambda s: s["host_id"])
         return self.last_stats
+
+    def _timed_out(self, results, procs, seconds):
+        msg = (
+            f"actor host timed out after {seconds + self.grace_s:.0f}s "
+            f"({len(results)}/{len(procs)} reported) — wire-level "
+            f"deadlock or crash; partial stats: {results}")
+        if self.failure_callback is not None:
+            try:
+                self.failure_callback(msg)   # postmortem BEFORE the raise:
+            except Exception:                # the bundle must exist even if
+                pass                         # the caller swallows the error
+        raise RuntimeError(msg)

@@ -61,7 +61,7 @@ class TrajectoryQueue:
 
     def __init__(self, capacity: int, max_param_lag: Optional[int] = None,
                  version_source: Optional[Callable[[], int]] = None,
-                 metrics=None):
+                 metrics=None, health=None):
         if not isinstance(capacity, int) or capacity < 1:
             raise ValueError(
                 f"capacity must be a positive int (unrolls), got {capacity!r}")
@@ -83,6 +83,12 @@ class TrajectoryQueue:
         self.frames_pending = 0
         self.unrolls_trained = 0
         self.trained_lag_sum = 0
+        # optional HeartbeatRegistry: admissions stamp liveness so the
+        # ops plane can see the trajectory plane moving. Informational
+        # deadline (None): an idle-but-healthy system admits nothing.
+        self._health = health
+        if health is not None:
+            health.register("onpolicy/queue", stale_after_s=None)
         if metrics is not None:
             # callback gauges: the registry reads these plain-int attributes
             # at snapshot time, so the queue's hot path pays nothing. The
@@ -120,6 +126,8 @@ class TrajectoryQueue:
         plane, which is the resource the paper says to protect."""
         frames = _unroll_frames(traj)
         version = _unroll_version(traj)
+        if self._health is not None:
+            self._health.beat("onpolicy/queue")
         with self._cond:
             self.frames_generated += frames
             if self._closed:

@@ -20,7 +20,8 @@ from repro.core.actor import account_episode_ends, flush_lane_unrolls
 
 class RolloutWorker:
     def __init__(self, worker_id: int, engine, sink: Callable,
-                 param_source: Callable, stamp_records: bool = False):
+                 param_source: Callable, stamp_records: bool = False,
+                 health=None):
         """param_source() -> (params, version): latest published params and
         a monotone version counter (learner steps; 0 before any publish).
         ``stamp_records=True`` writes the behavior ``param_version`` into
@@ -40,6 +41,7 @@ class RolloutWorker:
         self.param_refreshes = 0          # scans that picked up fresh params
         self.param_lag_total = 0          # sum of version deltas across scans
         self.error: Optional[str] = None
+        self._health = health             # optional HeartbeatRegistry
 
     # the engine is the single source of truth for scan/frame counts
     @property
@@ -71,15 +73,28 @@ class RolloutWorker:
     def _loop(self):
         # record fatal errors instead of dying silently (same class as
         # Learner.error / InferenceServer.error)
+        hb = self._health
+        hb_name = f"rollout/worker{self.worker_id}"
+        if hb is not None:
+            # one beat per fused scan; 10 s tolerates a first-scan compile
+            # that slipped past warmup() while still catching a wedge
+            hb.register(hb_name, stale_after_s=10.0)
         try:
             self._run()
         except Exception:
             self.error = traceback.format_exc()
             self._stop.set()
+        finally:
+            if hb is not None:
+                hb.unregister(hb_name)
 
     def _run(self):
         T = self.engine.unroll
+        hb = self._health
+        hb_name = f"rollout/worker{self.worker_id}"
         while not self._stop.is_set():
+            if hb is not None:
+                hb.beat(hb_name)
             params, version = self.param_source()
             if version != self.param_version:
                 self.param_lag_total += version - self.param_version

@@ -26,6 +26,15 @@ histograms)     distributions. Never drops, no         loops take it once
                 registry snapshots (metrics.jsonl),    tick (default 4 Hz);
                 measured `BottleneckReport`/CPU-GPU    zero cost between
                 ratio.                                 ticks.
+`OpsServer`     *What is it doing RIGHT NOW — online   one HTTP thread,
+(+ health/      vs offline?* Online: /metrics          work only per
+audit plane)    Prometheus scrape, /healthz liveness   scrape; watchdog +
+                verdict, /varz live BottleneckReport;  auditor are two
+                heartbeat watchdog + invariant         ~4 Hz snapshot-
+                auditor watch the run as it happens.   read threads;
+                Offline twin: `TelemetrySink.dump()`   heartbeats are one
+                trace.json + metrics.jsonl, written    dict store per
+                after the run for post-hoc analysis.   loop iteration.
 ==============  =====================================  ====================
 
 Rules of thumb: count it in the registry if you will alert or scale on
@@ -56,7 +65,12 @@ import threading
 import time
 from typing import Dict, List, Optional
 
+from .audit import InvariantAuditor
+from .flightrec import FlightRecorder
+from .health import HealthReport, HeartbeatRegistry, Watchdog
 from .metrics import Counter, Gauge, Histogram, MetricsRegistry
+from .ops import (OpsServer, parse_prometheus, render_prometheus,
+                  sanitize_metric_name, validate_prometheus)
 from .sampler import (BottleneckReport, UtilizationSampler,
                       attribute_bottleneck, read_process_cpu_s)
 from .sink import TelemetrySink, merge_bench_json
@@ -67,6 +81,9 @@ __all__ = [
     "Histogram", "UtilizationSampler", "BottleneckReport",
     "attribute_bottleneck", "read_process_cpu_s", "TelemetrySink",
     "merge_bench_json", "next_trace_seq", "flow_events", "chrome_trace",
+    "HeartbeatRegistry", "HealthReport", "Watchdog", "FlightRecorder",
+    "InvariantAuditor", "OpsServer", "render_prometheus",
+    "parse_prometheus", "validate_prometheus", "sanitize_metric_name",
 ]
 
 
@@ -89,19 +106,68 @@ class Telemetry:
         self._extra_registries: Dict[str, MetricsRegistry] = {}
         self._lock = threading.Lock()
 
+        # live ops plane (PR 8): heartbeat liveness, crash postmortems,
+        # continuous invariant audits, HTTP export. The watchdog/auditor
+        # threads only run while the ops plane is active (serve_ops);
+        # the flight recorder and heartbeat stamps are always armed.
+        self.health = HeartbeatRegistry()
+        self.flightrec = FlightRecorder(
+            out_dir=os.path.join(out_dir, "crashes"), enabled=enabled)
+        self.flightrec.add_provider("metrics", self.merged_snapshot)
+        self.flightrec.add_provider(
+            "health", lambda: self.health.report().as_dict())
+        self.flightrec.add_provider(
+            "bottleneck", lambda: self.bottleneck_report({}).as_dict())
+        self.flightrec.set_trace_source(self.trace_events, chrome_trace)
+        self.watchdog = Watchdog(
+            self.health,
+            on_unhealthy=lambda rep: self.flightrec.trigger(
+                f"watchdog_{rep.verdict}", str(rep)))
+        self.auditor = InvariantAuditor(
+            interval_s=sample_interval_s, on_violation=self._audit_violation)
+        self.auditor.watch_registry("main", self.metrics)
+        self.ops: Optional[OpsServer] = None
+
+    def _audit_violation(self, check: str, msg: str):
+        """Auditor escalation: violation -> health event + postmortem."""
+        self.health.event(check, msg)
+        self.flightrec.trigger("audit_violation", f"{check}: {msg}")
+
     # ----------------------------------------------------------- lifecycle
 
     def start(self):
-        """Watch the calling (learner) process and start the sampler."""
+        """Watch the calling (learner) process and start the sampler;
+        with the ops plane active, also the watchdog + auditor."""
         if not self.enabled:
             return
         self.sampler.watch("learner", os.getpid())
         self.sampler.start()
+        if self.ops is not None:
+            self.watchdog.start()
+            self.auditor.start()
 
     def stop(self):
         if not self.enabled:
             return
+        self.watchdog.stop()
+        self.auditor.stop()
         self.sampler.stop()
+        # the ops server intentionally outlives stop(): a post-run scrape
+        # must still see the final (now quiescent) state — close_ops()
+        # tears it down.
+
+    def serve_ops(self, host: str = "127.0.0.1", port: int = 0):
+        """Start (or return) the ops HTTP server; (host, port) tuple."""
+        if self.ops is None:
+            self.ops = OpsServer(self, host=host, port=port)
+        if self.ops.address is None:
+            self.ops.start()
+        return self.ops.address
+
+    def close_ops(self):
+        ops, self.ops = self.ops, None
+        if ops is not None:
+            ops.stop()
 
     def watch_process(self, name: str, pid: int):
         """Register a child process (actor host) for CPU sampling."""
@@ -110,9 +176,10 @@ class Telemetry:
 
     def attach(self, name: str, registry: MetricsRegistry):
         """Include another registry (e.g. a gateway's private one) in
-        snapshots, reports, and metrics.jsonl."""
+        snapshots, reports, metrics.jsonl — and the continuous audit."""
         with self._lock:
             self._extra_registries[name] = registry
+        self.auditor.watch_registry(name, registry)
 
     # ----------------------------------------------------------- ingestion
 
@@ -150,6 +217,40 @@ class Telemetry:
                 lines.append({"ts": time.time(), "registry": name,
                               "metrics": reg.snapshot()})
         return lines
+
+    def merged_snapshot(self) -> dict:
+        """One registry-shaped snapshot spanning every process and plane:
+        own registry + attached (gateway) registries + absorbed actor-host
+        snapshots. Counters with the same name SUM (e.g. ``gateway/...``
+        across G gateways, ``host_wire/...`` across hosts), histograms
+        merge exactly via `Histogram.merge_snapshots`, and for gauges the
+        first-seen value wins (the learner process's own registry has
+        priority). This is what /metrics renders."""
+        snaps = [self.metrics.snapshot()]
+        with self._lock:
+            for reg in self._extra_registries.values():
+                snaps.append(reg.snapshot())
+            snaps.extend(e["metrics"] for e in self._host_snapshots)
+        counters: Dict[str, float] = {}
+        gauges: Dict[str, float] = {}
+        hists: Dict[str, List[dict]] = {}
+        for s in snaps:
+            for k, v in s.get("counters", {}).items():
+                counters[k] = counters.get(k, 0.0) + v
+            for k, v in s.get("gauges", {}).items():
+                gauges.setdefault(k, v)
+            for k, h in s.get("histograms", {}).items():
+                hists.setdefault(k, []).append(h)
+        merged_h = {}
+        for k, hs in hists.items():
+            try:
+                m = Histogram.merge_snapshots(hs)
+            except ValueError:               # mismatched v0: keep local view
+                m = hs[0]
+            if m:
+                merged_h[k] = m
+        return {"counters": counters, "gauges": gauges,
+                "histograms": merged_h}
 
     def merged_histogram(self, name: str) -> Optional[dict]:
         """Merge a named histogram across this process and every absorbed

@@ -30,6 +30,7 @@ burns few seconds). Every returned number is finite; an empty window
 classifies as "idle" instead of dividing by zero.
 """
 
+import logging
 import os
 import resource
 import threading
@@ -40,6 +41,8 @@ from typing import Dict, Optional
 
 __all__ = ["read_process_cpu_s", "UtilizationSampler", "BottleneckReport",
            "attribute_bottleneck"]
+
+_log = logging.getLogger("repro.telemetry.sampler")
 
 try:
     _CLK_TCK = os.sysconf("SC_CLK_TCK")
@@ -79,6 +82,7 @@ class UtilizationSampler:
         self._procs: Dict[str, int] = {}
         self._base: Dict[str, float] = {}
         self._last: Dict[str, tuple] = {}       # name -> (perf_t, cpu_s)
+        self._vanished: set = set()             # names whose pid was reaped
         self._plock = threading.Lock()
         self._stop = threading.Event()
         self._thread: Optional[threading.Thread] = None
@@ -88,6 +92,7 @@ class UtilizationSampler:
         cpu = read_process_cpu_s(pid)
         with self._plock:
             self._procs[name] = pid
+            self._vanished.discard(name)        # re-watch revives a name
             if cpu is not None:
                 self._base[name] = cpu
                 self._last[name] = (time.perf_counter(), cpu)
@@ -97,11 +102,23 @@ class UtilizationSampler:
         """One tick: refresh cpu gauges, snapshot the registry, buffer."""
         now = time.perf_counter()
         with self._plock:
-            procs = dict(self._procs)
+            procs = {n: p for n, p in self._procs.items()
+                     if n not in self._vanished}
         cores = {}
         for name, pid in procs.items():
             cpu = read_process_cpu_s(pid)
             if cpu is None:
+                # the pid was reaped between ticks (an actor-host child
+                # exiting races this read): skip it from now on, log the
+                # disappearance ONCE, and never let it raise into — or
+                # spin inside — the sampler thread. cpu_totals() keeps
+                # serving the last reading taken while it was alive.
+                with self._plock:
+                    already = name in self._vanished
+                    self._vanished.add(name)
+                if not already:
+                    _log.warning("watched process %r (pid %s) vanished; "
+                                 "skipping it from now on", name, pid)
                 continue
             last = self._last.get(name)
             with self._plock:
@@ -123,9 +140,10 @@ class UtilizationSampler:
             procs = dict(self._procs)
             base = dict(self._base)
             last = dict(self._last)
+            vanished = set(self._vanished)
         out = {}
         for name, pid in procs.items():
-            cpu = read_process_cpu_s(pid)
+            cpu = None if name in vanished else read_process_cpu_s(pid)
             if cpu is None:
                 cpu = last.get(name, (0.0, None))[1]
             if cpu is None:

@@ -5,9 +5,16 @@ Two artifacts per run directory:
 - ``trace.json`` — Chrome trace-event JSON (load in Perfetto or
   chrome://tracing): every span from every traced process, plus flow
   arrows stitching each wire round-trip across process tracks.
-- ``metrics.jsonl`` — one JSON object per sampler tick: wall-clock ts,
-  per-process cpu cores, and a full registry snapshot (counters, gauges,
-  histograms with p50/p95/p99).
+- ``metrics.jsonl`` — one JSON object per sampler tick: schema version,
+  monotonic tick index, wall-clock ts, per-process cpu cores, and a full
+  registry snapshot (counters, gauges, histograms with p50/p95/p99).
+
+Both artifacts are written ATOMICALLY: content goes to a same-directory
+temp file first, then `os.replace` publishes it — a crash mid-dump (the
+flight recorder triggering while a dump is in flight, a SIGKILL'd CI
+job) can never leave a truncated trace.json that Perfetto rejects or a
+half-line in metrics.jsonl. Readers either see the previous complete
+artifact or the new complete one.
 
 `merge_bench_json` is the fig3/fig4 helper: both benchmarks append their
 measured section into ONE ``BENCH_telemetry.json`` keyed by benchmark
@@ -17,9 +24,29 @@ the other's.
 
 import json
 import os
-from typing import Dict, List, Optional
+from typing import Callable, Dict, List, Optional
 
-__all__ = ["TelemetrySink", "merge_bench_json"]
+__all__ = ["TelemetrySink", "merge_bench_json", "METRICS_SCHEMA_VERSION"]
+
+# bump when the shape of a metrics.jsonl line changes; consumers key
+# their parsing on the per-line "schema" stamp
+METRICS_SCHEMA_VERSION = 1
+
+
+def _atomic_write(path: str, write_fn: Callable) -> None:
+    """Write via temp file + `os.replace` (atomic on POSIX within one
+    filesystem — the temp lives next to the target to guarantee that)."""
+    tmp = f"{path}.tmp.{os.getpid()}"
+    try:
+        with open(tmp, "w") as f:
+            write_fn(f)
+        os.replace(tmp, path)
+    finally:
+        if os.path.exists(tmp):          # only on a failed write
+            try:
+                os.remove(tmp)
+            except OSError:
+                pass
 
 
 class TelemetrySink:
@@ -31,13 +58,17 @@ class TelemetrySink:
         out = out_dir or self.out_dir
         os.makedirs(out, exist_ok=True)
         trace_path = os.path.join(out, "trace.json")
-        with open(trace_path, "w") as f:
-            json.dump({"traceEvents": trace_events, "displayTimeUnit": "ms"},
-                      f)
+        _atomic_write(trace_path, lambda f: json.dump(
+            {"traceEvents": trace_events, "displayTimeUnit": "ms"}, f))
         metrics_path = os.path.join(out, "metrics.jsonl")
-        with open(metrics_path, "w") as f:
-            for line in metric_lines:
-                f.write(json.dumps(line) + "\n")
+
+        def _write_lines(f):
+            for i, line in enumerate(metric_lines):
+                stamped = {"schema": METRICS_SCHEMA_VERSION, "tick": i}
+                stamped.update(line)
+                f.write(json.dumps(stamped) + "\n")
+
+        _atomic_write(metrics_path, _write_lines)
         return {"trace": trace_path, "metrics": metrics_path}
 
 
@@ -53,7 +84,10 @@ def merge_bench_json(path: str, key: str, payload: dict) -> dict:
     if not isinstance(doc, dict):
         doc = {}
     doc[key] = payload
-    with open(path, "w") as f:
+
+    def _write(f):
         json.dump(doc, f, indent=2, sort_keys=True)
         f.write("\n")
+
+    _atomic_write(path, _write)
     return doc

@@ -48,6 +48,7 @@ dead reader severs the connection exactly like the plain socket path.
 """
 
 import contextlib
+import itertools
 import os
 import queue
 import select as _select
@@ -430,11 +431,19 @@ class _ConnWriter:
 
     _POISON = object()
 
-    def __init__(self, sock, maxsize: int = 256):
+    def __init__(self, sock, maxsize: int = 256, health=None,
+                 name: Optional[str] = None):
         self._sock = sock
         self._q: "queue.Queue" = queue.Queue(maxsize=maxsize)
         self._stop = threading.Event()
         self.failed = False
+        # optional HeartbeatRegistry: the poll loop wakes at least every
+        # 0.25 s even when idle, so a 2 s deadline catches a writer thread
+        # wedged inside sendall (peer stopped reading but kept the socket)
+        self._health = health
+        self._hb_name = name
+        if health is not None and name is not None:
+            health.register(name, stale_after_s=2.0)
         self._thread = threading.Thread(target=self._loop, daemon=True)
         self._thread.start()
 
@@ -473,24 +482,31 @@ class _ConnWriter:
         self._thread.join(timeout=5.0)
 
     def _loop(self):
-        while True:
-            try:
-                frame = self._q.get(timeout=0.25)
-            except queue.Empty:
-                if self._stop.is_set():
+        hb, hb_name = self._health, self._hb_name
+        try:
+            while True:
+                if hb is not None and hb_name is not None:
+                    hb.beat(hb_name)
+                try:
+                    frame = self._q.get(timeout=0.25)
+                except queue.Empty:
+                    if self._stop.is_set():
+                        return
+                    continue
+                if frame is self._POISON:
                     return
-                continue
-            if frame is self._POISON:
-                return
-            if self.failed:
-                continue         # drain without sending
-            try:
-                if isinstance(frame, list):
-                    sendmsg_all(self._sock, frame)
-                else:
-                    self._sock.sendall(frame)
-            except OSError:
-                self.failed = True
+                if self.failed:
+                    continue     # drain without sending
+                try:
+                    if isinstance(frame, list):
+                        sendmsg_all(self._sock, frame)
+                    else:
+                        self._sock.sendall(frame)
+                except OSError:
+                    self.failed = True
+        finally:
+            if hb is not None and hb_name is not None:
+                hb.unregister(hb_name)
 
 
 class _ShmReplyChannel:
@@ -948,6 +964,11 @@ class InferenceGateway:
         self._tracer = (telemetry.tracer
                         if telemetry is not None and telemetry.enabled
                         else None)
+        # ops plane (None without a full Telemetry bundle): conn readers
+        # heartbeat, a severed connection files a postmortem
+        self._health = getattr(telemetry, "health", None)
+        self._flightrec = getattr(telemetry, "flightrec", None)
+        self._conn_seq = itertools.count()
         self._bind = (host, port)
         self.max_frame = max_frame
         # learner's published param version, stamped onto every REPLY so
@@ -1060,6 +1081,7 @@ class InferenceGateway:
             return read_frame(lambda n: recv_exact(sock, n),
                               self.max_frame, zero_copy=True), False
         backoff = state["backoff"]
+        hb, hb_name = self._health, state.get("hb_name")
         while not self._stop.is_set():
             payload = c2s.try_get()
             if payload is not None:
@@ -1070,6 +1092,10 @@ class InferenceGateway:
                 backoff.reset()
                 return read_frame(lambda n: recv_exact(sock, n),
                                   self.max_frame, zero_copy=True), False
+            if hb is not None and hb_name is not None:
+                # the shm poller never blocks in a syscall, so an idle ring
+                # still stamps liveness every backoff tick
+                hb.beat(hb_name)
             backoff.wait()
         return None, False
 
@@ -1148,16 +1174,30 @@ class InferenceGateway:
                 f"unexpected frame kind {frame.kind} on gateway")
 
     def _read_conn(self, sock):
-        writer = _ConnWriter(sock)           # replies leave via this thread
+        hb = self._health
+        conn_n = next(self._conn_seq)
+        hb_name = f"gateway/conn{conn_n}"
+        # replies leave via this thread; the writer heartbeats on its own
+        # 0.25 s poll, the reader's deadline stays informational (None)
+        # because a TCP read legitimately blocks for as long as the peer
+        # is quiet — only the shm poll path stamps continuously
+        writer = _ConnWriter(
+            sock, health=hb,
+            name=(f"{hb_name}/writer" if hb is not None else None))
+        if hb is not None:
+            hb.register(hb_name, stale_after_s=None)
         try:
             peer = sock.getpeername()[0]
         except OSError:
             peer = ""
         state = {"c2s": None, "s2c": None, "reply_channel": writer,
                  "loopback": _is_loopback(peer),
-                 "backoff": _SpinBackoff()}
+                 "backoff": _SpinBackoff(),
+                 "hb_name": hb_name if hb is not None else None}
         try:
             while not self._stop.is_set():
+                if hb is not None:
+                    hb.beat(hb_name)
                 frame, via_shm = self._next_conn_frame(sock, state)
                 if frame is None:
                     break
@@ -1167,7 +1207,13 @@ class InferenceGateway:
         except (OSError, CodecError, ShmRingError):
             if not self._stop.is_set():
                 self.error = traceback.format_exc()
+                if self._flightrec is not None:
+                    self._flightrec.trigger(
+                        "gateway_sever",
+                        f"conn{conn_n} reader died:\n{self.error}")
         finally:
+            if hb is not None:
+                hb.unregister(hb_name)
             writer.stop()
             sock.close()
             for ring in (state["c2s"], state["s2c"]):

@@ -1,0 +1,500 @@
+"""Live ops plane tests: Prometheus render/parse/validate round-trips,
+heartbeat verdicts, watchdog transitions, flight-recorder bundles, the
+continuous auditor, and the HTTP endpoints against live `SeedSystem`s.
+
+The load-bearing ones are the e2e promises from the ops-plane design:
+a `/metrics` scrape of a live system must expose a frame ledger that is
+conserved WITHIN the scrape and matches `throughput()` exactly; a
+deliberately wedged replica must flip `/healthz` to ``degraded`` naming
+that replica within 2 s and leave a postmortem bundle while the OTHER
+replica keeps serving; and a full vtrace socket training run must pass
+the continuous invariant auditor with zero violations.
+"""
+
+import json
+import os
+import threading
+import time
+import urllib.error
+import urllib.request
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core.system import SeedSystem
+from repro.envs.catch import CatchEnv
+from repro.onpolicy import VTraceLearner, mlp_actor_critic
+from repro.optim import adamw
+from repro.telemetry import (FlightRecorder, HeartbeatRegistry,
+                             InvariantAuditor, MetricsRegistry, Telemetry,
+                             UtilizationSampler, Watchdog, parse_prometheus,
+                             render_prometheus, sanitize_metric_name,
+                             validate_prometheus)
+from repro.telemetry.ops import value_of
+from repro.telemetry.sink import METRICS_SCHEMA_VERSION
+
+OBS_DIM = 50          # CatchEnv() default 10x5
+
+
+def _http_get(url, timeout=5.0):
+    """(status, body) — a 503 /healthz still carries a JSON body."""
+    try:
+        with urllib.request.urlopen(url, timeout=timeout) as resp:
+            return resp.status, resp.read().decode()
+    except urllib.error.HTTPError as e:
+        return e.code, e.read().decode()
+
+
+# ------------------------------------------------- prometheus exposition
+
+def test_sanitize_metric_name():
+    assert sanitize_metric_name("onpolicy/frames_generated") == \
+        "onpolicy_frames_generated"
+    assert sanitize_metric_name("inference/r0/batches") == \
+        "inference_r0_batches"
+    assert sanitize_metric_name("9lives") == "_9lives"
+    assert sanitize_metric_name("ok_name:x") == "ok_name:x"
+
+
+def test_render_parse_roundtrip_is_exact_for_ledger_ints():
+    """Counters are the conserved frame ledger: a scrape must round-trip
+    them EXACTLY (no float formatting drift), including past 2^31."""
+    reg = MetricsRegistry()
+    reg.counter("onpolicy/frames_generated").add(12_345_678_901)
+    reg.gauge("onpolicy/frames_pending").set(7)
+    h = reg.histogram("learner/train_s")
+    for v in (1e-4, 2e-4, 8e-3):
+        h.record(v)
+    text = render_prometheus(reg.snapshot(),
+                             extra_gauges={"inference/num_slots": 4})
+    assert validate_prometheus(text) == []
+    parsed = parse_prometheus(text)
+    assert value_of(parsed, "onpolicy_frames_generated") == 12_345_678_901
+    assert value_of(parsed, "onpolicy_frames_pending") == 7
+    assert value_of(parsed, "inference_num_slots") == 4
+    assert parsed["types"]["onpolicy_frames_generated"] == "counter"
+    assert parsed["types"]["learner_train_s"] == "histogram"
+    assert value_of(parsed, "learner_train_s_count") == 3
+    assert value_of(parsed, "learner_train_s_sum") == pytest.approx(83e-4)
+
+
+def test_histogram_buckets_are_cumulative_with_inf_terminal():
+    reg = MetricsRegistry()
+    h = reg.histogram("lat")
+    for v in (1e-6, 1e-6, 1e-3):
+        h.record(v)
+    text = render_prometheus(reg.snapshot())
+    assert validate_prometheus(text) == []
+    buckets = [(labels.get("le"), v)
+               for name, labels, v in parse_prometheus(text)["samples"]
+               if name == "lat_bucket"]
+    assert buckets[-1] == ("+Inf", 3)
+    counts = [v for _, v in buckets]
+    assert counts == sorted(counts)          # cumulative => non-decreasing
+
+
+def test_validator_catches_broken_expositions():
+    assert validate_prometheus("totally not prometheus{")
+    # sample without a TYPE declaration
+    assert any("TYPE" in v for v in validate_prometheus("orphan 1\n"))
+    # non-monotone cumulative buckets
+    bad = ("# TYPE h histogram\n"
+           'h_bucket{le="1"} 5\n'
+           'h_bucket{le="2"} 3\n'
+           'h_bucket{le="+Inf"} 5\n'
+           "h_sum 1\nh_count 5\n")
+    assert any("monotonic" in v or "cumulative" in v
+               for v in validate_prometheus(bad))
+    # +Inf bucket disagrees with _count
+    bad2 = ("# TYPE h histogram\n"
+            'h_bucket{le="+Inf"} 4\n'
+            "h_sum 1\nh_count 5\n")
+    assert validate_prometheus(bad2)
+
+
+# -------------------------------------------------- heartbeats + watchdog
+
+def test_heartbeat_verdict_transitions():
+    reg = HeartbeatRegistry()
+    reg.register("fast", stale_after_s=0.05)
+    reg.register("slow", stale_after_s=60.0)
+    reg.register("info", stale_after_s=None)      # never flips the verdict
+    reg.beat("fast")
+    reg.beat("slow")
+    assert reg.report().verdict == "healthy"
+    time.sleep(0.08)
+    rep = reg.report()                      # fast stale, slow still fine
+    assert rep.verdict == "degraded"
+    assert rep.stale == ["fast"]
+    assert rep.components["info"]["stale"] is False
+    reg.unregister("slow")                  # every remaining watched stale
+    assert reg.report().verdict == "stalled"
+    reg.unregister("fast")                  # info alone: healthy, not dead
+    assert reg.report().verdict == "healthy"
+
+
+def test_beat_auto_registers_under_default_deadline():
+    """The actor-host relay beats names it never registered; they must
+    come out watched (default deadline), not invisible."""
+    reg = HeartbeatRegistry(default_stale_after_s=0.05)
+    reg.beat("actor-host-0")
+    rep = reg.report()
+    assert rep.components["actor-host-0"]["stale_after_s"] == 0.05
+    time.sleep(0.08)
+    assert reg.report().verdict == "stalled"
+
+
+def test_health_events_force_degraded_then_expire():
+    reg = HeartbeatRegistry(event_window_s=0.1)
+    reg.register("loop", stale_after_s=60.0)
+    reg.beat("loop")
+    reg.event("auditor", "ledger not conserved")
+    rep = reg.report()
+    assert rep.verdict == "degraded"
+    assert rep.events[0]["message"] == "ledger not conserved"
+    time.sleep(0.15)
+    assert reg.report().verdict == "healthy"    # event aged out
+
+
+def test_watchdog_fires_once_per_transition():
+    reg = HeartbeatRegistry()
+    reg.register("comp", stale_after_s=0.05)
+    reg.beat("comp")
+    fired = []
+    dog = Watchdog(reg, on_unhealthy=fired.append)
+    assert dog.check().verdict == "healthy"
+    assert fired == []
+    time.sleep(0.08)
+    assert dog.check().verdict != "healthy"
+    assert len(fired) == 1
+    dog.check()                             # still unhealthy: no refire
+    assert len(fired) == 1
+    assert dog.transitions == 1
+    reg.beat("comp")
+    assert dog.check().verdict == "healthy"
+    assert dog.latest.verdict == "healthy"
+
+
+# ------------------------------------------------------- flight recorder
+
+def test_flight_recorder_bundle_contents(tmp_path):
+    rec = FlightRecorder(out_dir=str(tmp_path))
+    rec.add_provider("metrics", lambda: {"counters": {"x": 1}})
+    rec.set_trace_source(lambda: [{"name": "span", "ph": "X", "pid": 1,
+                                   "tid": 1, "ts": 0, "dur": 1}],
+                         lambda evs: {"traceEvents": evs})
+    path = rec.trigger("unit_test", detail="deliberate")
+    assert path is not None and os.path.isdir(path)
+    manifest = json.load(open(os.path.join(path, "manifest.json")))
+    assert manifest["reason"] == "unit_test"
+    assert manifest["detail"] == "deliberate"
+    stacks = open(os.path.join(path, "stacks.txt")).read()
+    assert threading.current_thread().name in stacks
+    assert json.load(open(os.path.join(path, "metrics.json"))) == \
+        {"counters": {"x": 1}}
+    trace = json.load(open(os.path.join(path, "trace.json")))
+    assert trace["traceEvents"][0]["name"] == "span"
+    assert rec.bundles == [path]
+    # no half-written staging dirs left behind
+    assert not [d for d in os.listdir(tmp_path) if d.endswith(".tmp")]
+
+
+def test_flight_recorder_cooldown_and_cap(tmp_path):
+    rec = FlightRecorder(out_dir=str(tmp_path), max_bundles=3,
+                         per_reason_cooldown_s=60.0)
+    assert rec.trigger("wedge") is not None
+    assert rec.trigger("wedge") is None          # same reason: cooldown
+    assert rec.trigger("other") is not None      # different reason: fine
+    assert rec.trigger("third") is not None
+    assert rec.trigger("fourth") is None         # global cap
+    assert len(rec.bundles) == 3
+    assert rec.dropped == 2
+
+
+def test_flight_recorder_never_raises(tmp_path):
+    rec = FlightRecorder(out_dir=str(tmp_path))
+    rec.add_provider("broken", lambda: 1 / 0)
+    rec.set_trace_source(lambda: 1 / 0, lambda evs: 1 / 0)
+    path = rec.trigger("resilience")
+    assert path is not None                      # bundle still lands
+    assert os.path.exists(os.path.join(path, "stacks.txt"))
+    disabled = FlightRecorder(out_dir=str(tmp_path), enabled=False)
+    assert disabled.trigger("noop") is None
+
+
+# ------------------------------------------------------ invariant auditor
+
+def test_auditor_reports_each_violation_once():
+    aud = InvariantAuditor()
+    state = {"bad": False}
+    aud.add_check("ledger", lambda: ["broken"] if state["bad"] else [])
+    assert aud.tick() == []
+    state["bad"] = True
+    new = aud.tick()
+    assert new == ["broken"]
+    assert aud.tick() == []                      # deduped, still recorded
+    assert len(aud.violations) == 1
+    assert aud.violations[0]["check"] == "ledger"
+
+
+def test_auditor_counter_monotonicity_and_raising_check():
+    aud = InvariantAuditor()
+    reg = MetricsRegistry()
+    c = reg.counter("frames")
+    c.add(10)
+    aud.watch_registry("main", reg)
+    assert aud.tick() == []
+    with reg.lock:
+        c.value -= 5                             # counters must never go back
+    new = aud.tick()
+    assert len(new) == 1 and "frames" in new[0]
+    aud.add_check("explodes", lambda: 1 / 0)
+    new = aud.tick()
+    assert len(new) == 1 and "raised" in new[0]
+
+
+def test_auditor_escalates_to_health_and_flightrec(tmp_path):
+    tel = Telemetry(process_name="learner", out_dir=str(tmp_path))
+    tel.auditor.add_check("always", lambda: ["invariant broken"])
+    tel.auditor.tick()
+    assert tel.health.report().verdict == "degraded"
+    assert len(tel.flightrec.bundles) == 1
+    assert "audit_violation" in tel.flightrec.bundles[0]
+
+
+# --------------------------------------------- satellite fixes (1 and 2)
+
+def test_sampler_survives_vanished_pid(caplog):
+    """A reaped actor-host pid must be skipped (logged once), not raise
+    and kill the sampler thread."""
+    reg = MetricsRegistry()
+    s = UtilizationSampler(reg)
+    s.watch("self", os.getpid())
+    s.watch("ghost", 2 ** 22 + 12345)            # never a live pid
+    with caplog.at_level("WARNING", logger="repro.telemetry.sampler"):
+        for _ in range(3):
+            s.sample()                           # must not raise
+    vanished_logs = [r for r in caplog.records if "ghost" in r.getMessage()]
+    assert len(vanished_logs) == 1               # logged ONCE, not per tick
+    totals = s.cpu_totals()
+    assert "self" in totals                      # live pid still tracked
+    s.watch("ghost", os.getpid())                # re-watch revives the name
+    s.sample()
+    assert "ghost" in s.cpu_totals()
+
+
+def test_sink_dump_is_atomic_and_stamped(tmp_path):
+    tel = Telemetry(process_name="learner", out_dir=str(tmp_path))
+    tel.metrics.counter("x").add(3)
+    tel.sampler.sample()
+    paths = tel.dump()
+    lines = [json.loads(ln) for ln in open(paths["metrics"]) if ln.strip()]
+    assert lines
+    for i, line in enumerate(lines):
+        assert line["schema"] == METRICS_SCHEMA_VERSION
+        assert line["tick"] == i                 # monotonic tick index
+    json.load(open(paths["trace"]))              # valid JSON, fully written
+    leftovers = [f for f in os.listdir(tmp_path) if ".tmp." in f]
+    assert leftovers == []                       # os.replace cleaned up
+
+
+# ------------------------------------------------- live system endpoints
+
+def _vtrace_system(tmp_path, **kw):
+    init_fn, apply_fn = mlp_actor_critic(OBS_DIM, 3)
+    vl = VTraceLearner(apply_fn, adamw(1e-3))
+    params = init_fn(jax.random.PRNGKey(0))
+    state = vl.init_state(params)
+    policy = vl.sampling_policy(params)
+    for lanes in (4, 8):                         # pre-compile
+        policy(np.zeros((lanes, OBS_DIM), np.float32), None)
+    vl.warmup(state, batch_size=4, unroll=8, obs_shape=(OBS_DIM,))
+    tel = Telemetry(process_name="learner", out_dir=str(tmp_path))
+    return SeedSystem(env_factory=CatchEnv, policy_step=policy,
+                      num_actors=2, unroll=8, envs_per_actor=4,
+                      deadline_ms=1.0, algo="vtrace",
+                      train_step=vl.train_step, state=state,
+                      learner_batch=4, policy_publish=policy.publish,
+                      telemetry=tel, ops_port=0, **kw)
+
+
+def test_metrics_scrape_matches_conserved_ledger_exactly(tmp_path):
+    """Acceptance: GET /metrics on a live SeedSystem(ops_port=0) returns
+    parseable Prometheus text whose frame counters match the conserved
+    ledger in throughput() EXACTLY (one atomic stats() call per scrape)."""
+    sys_ = _vtrace_system(tmp_path, max_param_lag=50)
+    sys_.warmup()
+    host, port = sys_.ops_address
+    base = f"http://{host}:{port}"
+    stats = sys_.run(seconds=1.2)
+    assert stats["ops_address"] == f"{host}:{port}"
+    try:
+        # the ops server outlives run() so the final quiescent ledger is
+        # still scrapeable
+        status, text = _http_get(base + "/metrics")
+        assert status == 200
+        assert validate_prometheus(text) == []
+        parsed = parse_prometheus(text)
+        onp = stats["onpolicy"]
+        for key in ("frames_generated", "frames_trained", "frames_dropped",
+                    "frames_pending", "unrolls_trained", "capacity"):
+            got = value_of(parsed, f"onpolicy_{key}")
+            assert got == onp[key], (key, got, onp[key])
+        gen = value_of(parsed, "onpolicy_frames_generated")
+        assert gen == (value_of(parsed, "onpolicy_frames_trained")
+                       + value_of(parsed, "onpolicy_frames_dropped")
+                       + value_of(parsed, "onpolicy_frames_pending"))
+        assert value_of(parsed, "inference_num_slots") == \
+            sys_.server.num_slots
+        # /varz is the autoscaler's document: stats + bottleneck + health
+        status, vz = _http_get(base + "/varz")
+        assert status == 200
+        varz = json.loads(vz)
+        assert varz["stats"]["onpolicy"]["frames_generated"] == \
+            onp["frames_generated"]
+        assert "health" in varz
+        # post-run every loop unregistered cleanly: /healthz reads healthy
+        status, hz = _http_get(base + "/healthz")
+        assert status == 200
+        assert json.loads(hz)["verdict"] == "healthy"
+        # /trace serves the span rings on demand
+        status, tr = _http_get(base + "/trace")
+        assert status == 200
+        assert isinstance(json.loads(tr)["traceEvents"], list)
+        status, _ = _http_get(base + "/nonsense")
+        assert status == 404
+    finally:
+        sys_.stop_ops()
+    assert sys_.ops_address is None
+
+
+# --------------------------------------- satellite 3: the wedge e2e test
+
+_WEDGE = {"on": False, "release": threading.Event()}
+
+
+def _wedgeable_policy(obs, ids):
+    if _WEDGE["on"] and \
+            threading.current_thread().name == "inference-replica-1":
+        _WEDGE["release"].wait(timeout=30.0)
+    flat = np.abs(obs.reshape(obs.shape[0], -1))
+    return (flat.sum(axis=1) * 997.0).astype(np.int64) % CatchEnv.num_actions
+
+
+def test_wedged_replica_flips_healthz_and_writes_postmortem(tmp_path):
+    """Acceptance: wedge ONE replica mid-run; /healthz must flip to
+    ``degraded`` naming that replica within 2 s, a postmortem bundle must
+    appear, and the OTHER replica must keep serving."""
+    _WEDGE["on"] = False
+    _WEDGE["release"].clear()
+    tel = Telemetry(process_name="learner", out_dir=str(tmp_path))
+    sys_ = SeedSystem(env_factory=CatchEnv, policy_step=_wedgeable_policy,
+                      num_actors=2, unroll=8, envs_per_actor=2,
+                      deadline_ms=1.0, num_replicas=2, telemetry=tel,
+                      ops_port=0)
+    host, port = sys_.ops_address
+    base = f"http://{host}:{port}"
+    sys_.warmup()
+    runner = threading.Thread(
+        target=lambda: sys_.run(seconds=8.0, with_learner=False),
+        daemon=True)
+    runner.start()
+    try:
+        # let both replicas serve real traffic first
+        deadline = time.perf_counter() + 5.0
+        while time.perf_counter() < deadline:
+            c = tel.metrics.snapshot()["counters"]
+            if c.get("inference/r0/batches", 0) > 0 and \
+                    c.get("inference/r1/batches", 0) > 0:
+                break
+            time.sleep(0.05)
+        else:
+            pytest.fail("replicas never started serving")
+        status, hz = _http_get(base + "/healthz")
+        assert status == 200 and json.loads(hz)["verdict"] == "healthy"
+
+        wedged_at = time.perf_counter()
+        _WEDGE["on"] = True
+        flipped = None
+        while time.perf_counter() - wedged_at < 4.0:
+            status, hz = _http_get(base + "/healthz")
+            rep = json.loads(hz)
+            if status == 503 and rep["verdict"] == "degraded" and \
+                    "inference/replica1" in rep["stale"]:
+                flipped = time.perf_counter() - wedged_at
+                break
+            time.sleep(0.1)
+        assert flipped is not None, f"never flipped: {rep}"
+        assert flipped <= 2.0, f"flip took {flipped:.2f}s (promise is 2s)"
+        # the blame is isolated: replica 0 and both actors stay un-stale
+        assert "inference/replica0" not in rep["stale"]
+        assert not any(s.startswith("actor/") for s in rep["stale"])
+
+        # the watchdog transition filed a postmortem bundle
+        deadline = time.perf_counter() + 3.0
+        while time.perf_counter() < deadline and not tel.flightrec.bundles:
+            time.sleep(0.1)
+        assert tel.flightrec.bundles, "no postmortem bundle appeared"
+        bundle = tel.flightrec.bundles[0]
+        assert "watchdog_degraded" in bundle
+        stacks = open(os.path.join(bundle, "stacks.txt")).read()
+        assert "inference-replica-1" in stacks   # the wedged thread's stack
+        assert os.path.exists(os.path.join(bundle, "trace.json"))
+        assert os.path.exists(os.path.join(bundle, "health.json"))
+
+        # the OTHER replica keeps serving: frames still flow through r0
+        before = tel.metrics.snapshot()["counters"]["inference/r0/batches"]
+        time.sleep(0.6)
+        after = tel.metrics.snapshot()["counters"]["inference/r0/batches"]
+        assert after > before, "replica 0 stopped serving during the wedge"
+    finally:
+        _WEDGE["release"].set()
+        _WEDGE["on"] = False
+        runner.join(timeout=15.0)
+        sys_.stop_ops()
+    assert not runner.is_alive()
+
+
+# ------------------------------- acceptance: continuous auditor, socket e2e
+
+def test_auditor_zero_violations_full_vtrace_socket_run(tmp_path):
+    """Acceptance: the continuous auditor ticks through a full vtrace
+    socket-backend training e2e with ZERO violations, and the actor-host
+    children's piggybacked heartbeats reach the parent registry."""
+    sys_ = _vtrace_system(tmp_path, transport="socket", num_actor_hosts=1,
+                          max_param_lag=100)
+    tel = sys_.telemetry
+    host, port = sys_.ops_address
+    seen_components = set()
+    done = threading.Event()
+
+    def _poll_components():
+        while not done.wait(0.25):
+            try:
+                _, hz = _http_get(f"http://{host}:{port}/healthz")
+                seen_components.update(json.loads(hz)["components"])
+            except Exception:
+                pass
+
+    poller = threading.Thread(target=_poll_components, daemon=True)
+    poller.start()
+    try:
+        stats = sys_.run(seconds=2.0)
+    finally:
+        done.set()
+        poller.join(timeout=5.0)
+        sys_.stop_ops()
+    assert stats["host_errors"] == [], stats["host_errors"]
+    assert stats["learner_steps"] > 0
+    onp = stats["onpolicy"]
+    assert onp["frames_generated"] == (onp["frames_trained"]
+                                       + onp["frames_dropped"]
+                                       + onp["frames_pending"])
+    assert tel.auditor.ticks > 0, "auditor never ticked during the run"
+    assert tel.auditor.violations == [], tel.auditor.violations
+    # the mid-run /healthz view saw the whole plane, including the child
+    # process heartbeats relayed over the result queue
+    assert "learner" in seen_components
+    assert any(c.startswith("inference/replica") for c in seen_components)
+    assert "actor-host-0" in seen_components, sorted(seen_components)

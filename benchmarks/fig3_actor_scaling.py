@@ -522,6 +522,209 @@ def run_telemetry(args, sec, out_dir="."):
     print("fig3g_ok,1,all telemetry checks passed")
 
 
+def _fault_overhead_gate(repeats=3, seconds=0.8):
+    """The survival plane must be free when nothing dies: a socket run
+    with supervision + reconnect policies ARMED (but no chaos) must cost
+    < 3% best-of-N frames/s vs the identical run without them."""
+    from repro.fault import BackoffPolicy
+
+    def best_fps(fault):
+        kw = dict(supervise_hosts=True,
+                  wire_reconnect=BackoffPolicy()) if fault else {}
+        best = 0.0
+        for _ in range(repeats):
+            sys_ = SeedSystem(
+                env_factory=CatchEnv, policy_step=_telemetry_policy,
+                num_actors=2, unroll=8, envs_per_actor=2,
+                deadline_ms=2.0, transport="socket", num_actor_hosts=1,
+                **kw)
+            stats = sys_.run(seconds=seconds, with_learner=False)
+            best = max(best, stats["env_frames_per_s"])
+        return best
+
+    base = best_fps(False)       # the historical fail-fast wire
+    withf = best_fps(True)       # supervision + reconnect armed, idle
+    overhead = 1.0 - withf / base if base > 0 else 0.0
+    return base, withf, overhead
+
+
+def run_chaos(args, sec, out_dir="."):
+    """Part (h): the survivable serving plane under injected faults.
+
+    A vtrace socket training run (2 actor hosts, 2 gateways, live-loop
+    checkpointing, supervision + reconnect armed) has an actor host
+    KILLED and a gateway connection SEVERED mid-run by a scripted
+    `ChaosMonkey`. The run must complete with zero host errors, the host
+    respawned, the client reconnected, /healthz observed degraded
+    mid-run and healthy at the end, and the frame ledger EXACTLY
+    conserved. Afterwards the fault-path overhead gate checks the armed-
+    but-idle survival plane costs < 3% frames/s. Writes the results into
+    BENCH_telemetry.json under ``fig3_chaos``; exits nonzero on any
+    failed check (CI runs ``--smoke --chaos`` under a hard timeout).
+    """
+    import threading
+
+    import jax
+
+    from repro.fault import BackoffPolicy, ChaosEvent, ChaosMonkey
+    from repro.onpolicy import VTraceLearner, mlp_actor_critic
+    from repro.optim import adamw
+    from repro.telemetry import Telemetry, merge_bench_json
+
+    failures = []
+
+    def check(ok, what):
+        if not ok:
+            failures.append(what)
+        return ok
+
+    obs_dim = int(np.prod(CatchEnv().obs_shape))
+    init_fn, apply_fn = mlp_actor_critic(obs_dim, CatchEnv.num_actions)
+    vl = VTraceLearner(apply_fn, adamw(1e-3))
+    params = init_fn(jax.random.PRNGKey(0))
+    state = vl.init_state(params)
+    policy = vl.sampling_policy(params)
+    for lanes in (4, 8):
+        policy(np.zeros((lanes, obs_dim), np.float32), None)
+    vl.warmup(state, batch_size=4, unroll=8, obs_shape=(obs_dim,))
+    tel = Telemetry(process_name="learner", out_dir=out_dir)
+    tel.health.event_window_s = 3.0   # fault events age out before the
+    #                                   final "healed" check below
+    sys_ = SeedSystem(env_factory=CatchEnv, policy_step=policy,
+                      num_actors=2, unroll=8, envs_per_actor=4,
+                      deadline_ms=1.0, algo="vtrace", max_param_lag=100,
+                      train_step=vl.train_step, state=state,
+                      learner_batch=4, policy_publish=policy.publish,
+                      transport="socket", num_actor_hosts=2,
+                      num_gateways=2, telemetry=tel, ops_port=0,
+                      checkpoint_dir=os.path.join(out_dir, "chaos_ckpt"),
+                      checkpoint_every_s=1.0,
+                      supervise_hosts=True, host_stall_s=4.0,
+                      wire_reconnect=BackoffPolicy(base_s=0.05, cap_s=0.5,
+                                                   max_retries=8, seed=0))
+    ops_host, ops_port = sys_.ops_address
+    base_url = f"http://{ops_host}:{ops_port}"
+    seconds = 8.0 if args.smoke else 12.0
+    # the schedule is fixed data; its anchor is adaptive (children pay
+    # jax import + jit warmup before serving, so wall-clock offsets from
+    # run() start would race the spawn). Host 1 hashes to gateway 1, so
+    # the sever hits the SURVIVING host's wire — the one that must
+    # reconnect and live to report it.
+    monkey = ChaosMonkey.scripted(
+        ChaosEvent(0.5, "kill_actor_host", target=0),
+        ChaosEvent(2.5, "sever_gateway_conn", target=1))
+    verdicts = set()
+    done = threading.Event()
+
+    def _poll():
+        while not done.wait(0.25):
+            try:
+                _, hz = _http_get(base_url + "/healthz")
+                verdicts.add(json.loads(hz)["verdict"])
+            except Exception:
+                pass
+
+    def _arm_when_hosts_up():
+        deadline = time.perf_counter() + 60.0
+        while time.perf_counter() < deadline and not done.is_set():
+            try:
+                _, hz = _http_get(base_url + "/healthz")
+                comps = json.loads(hz)["components"]
+                if "actor-host-0" in comps and "actor-host-1" in comps:
+                    monkey.start(sys_)
+                    return
+            except Exception:
+                pass
+            time.sleep(0.2)
+
+    threading.Thread(target=_poll, daemon=True).start()
+    threading.Thread(target=_arm_when_hosts_up, daemon=True).start()
+    try:
+        stats = sys_.run(seconds=seconds)
+    finally:
+        done.set()
+        monkey.stop()
+    check(len(monkey.injected) == 2 and all(i[2] for i in monkey.injected),
+          f"chaos injection incomplete: {monkey.injected}")
+    check(stats["host_errors"] == [],
+          f"host errors: {stats['host_errors']}")
+    check(stats["learner_steps"] > 0, "learner never stepped")
+    onp = stats["onpolicy"]
+    check(onp["frames_generated"] == (onp["frames_trained"]
+                                      + onp["frames_dropped"]
+                                      + onp["frames_pending"]),
+          f"frame ledger NOT conserved: {onp}")
+    check(onp["frames_pending"] == 0,
+          f"frames still pending at rest: {onp['frames_pending']}")
+    rec = stats["recovery"]
+    check(rec["host_restarts"] >= 1, f"no host respawn: {rec}")
+    check(rec["reconnects"] >= 1, f"no client reconnect: {rec}")
+    check(rec["checkpoint_saves"] >= 1, f"no live-loop checkpoint: {rec}")
+    check(sys_.server.num_slots <= sys_.num_actors * sys_.envs_per_actor,
+          f"slot table grew past the lane budget: {sys_.server.num_slots}")
+    check("degraded" in verdicts,
+          f"faults were never observable on /healthz: {verdicts}")
+    check(any("host_death" in b for b in tel.flightrec.bundles),
+          f"no host_death postmortem: {tel.flightrec.bundles}")
+    healed = False
+    deadline = time.perf_counter() + 6.0
+    while time.perf_counter() < deadline:
+        status, hz = _http_get(base_url + "/healthz")
+        if status == 200 and json.loads(hz)["verdict"] == "healthy":
+            healed = True
+            break
+        time.sleep(0.25)
+    check(healed, f"/healthz never healed after the faults: {hz}")
+    sys_.stop_ops()
+
+    fps_base, fps_fault, frac = _fault_overhead_gate(
+        seconds=max(sec * 2, 0.6))
+    check(frac < 0.03,
+          f"armed fault plane costs {frac:.1%} frames/s "
+          f"({fps_fault:.0f} vs {fps_base:.0f}) — gate is 3%")
+
+    payload = {
+        "seconds": seconds,
+        "env_frames": stats["env_frames"],
+        "env_frames_per_s": stats["env_frames_per_s"],
+        "learner_steps": stats["learner_steps"],
+        "ledger": {k: onp[k] for k in
+                   ("frames_generated", "frames_trained", "frames_dropped",
+                    "frames_dropped_fault", "frames_pending")},
+        "recovery": rec,
+        "healthz_verdicts": sorted(verdicts),
+        "fps_fail_fast": fps_base,
+        "fps_fault_armed": fps_fault,
+        "fault_overhead_frac": frac,
+        "failures": failures,
+    }
+    merge_bench_json(os.path.join(out_dir, "BENCH_telemetry.json"),
+                     "fig3_chaos", payload)
+    print("# fig3h: chaos-injected survival run (vtrace, socket, 2 hosts)")
+    print("name,value,derived")
+    print(f"fig3h_frames_per_s,{stats['env_frames_per_s']:.1f},"
+          f"frames={stats['env_frames']} learner_steps="
+          f"{stats['learner_steps']}")
+    print(f"fig3h_host_restarts,{rec['host_restarts']},"
+          f"host_faults={rec['host_faults']} "
+          f"reconnects={rec['reconnects']} "
+          f"gateway_failovers={rec['gateway_failovers']}")
+    print(f"fig3h_frames_dropped_fault,{onp['frames_dropped_fault']},"
+          f"generated={onp['frames_generated']} "
+          f"trained={onp['frames_trained']} pending={onp['frames_pending']}")
+    print(f"fig3h_checkpoint_saves,{rec['checkpoint_saves']},"
+          f"live-loop cadence 1.0s")
+    print(f"fig3h_healthz,{'/'.join(sorted(verdicts))},"
+          f"healed={healed}")
+    print(f"fig3h_fault_overhead_pct,{100.0 * frac:.2f},"
+          f"armed={fps_fault:.0f} fail_fast={fps_base:.0f} gate=3%")
+    if failures:
+        for f_ in failures:
+            print(f"fig3h_FAIL,1,{f_}")
+        sys.exit(1)
+    print("fig3h_ok,1,all chaos checks passed")
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
@@ -534,13 +737,20 @@ def main():
     ap.add_argument("--telemetry", action="store_true",
                     help="part (g): socket run under the telemetry plane, "
                          "validating trace/metrics/ratio artifacts")
+    ap.add_argument("--chaos", action="store_true",
+                    help="part (h): chaos-injected vtrace socket run "
+                         "(host killed + gateway conn severed) gating the "
+                         "conserved ledger and fault-path overhead")
     ap.add_argument("--out-dir", default=".",
-                    help="where --telemetry writes trace.json, "
+                    help="where --telemetry/--chaos write trace.json, "
                          "metrics.jsonl and BENCH_telemetry.json")
     args = ap.parse_args()
     sec = 0.3 if args.smoke else 1.2
     if args.telemetry:
         run_telemetry(args, sec, out_dir=args.out_dir)
+        return
+    if args.chaos:
+        run_chaos(args, sec, out_dir=args.out_dir)
         return
     if args.algo == "vtrace":
         run_vtrace(args, sec)

@@ -6,7 +6,9 @@
 4. runs the SEED actor/inference system with vectorized (vmapped) env
    lanes and shows the envs-per-actor throughput axis,
 5. re-runs it under the telemetry plane and prints the measured
-   BottleneckReport (which plane gates throughput, and the CPU/GPU ratio).
+   BottleneckReport (which plane gates throughput, and the CPU/GPU ratio),
+6. crashes the learner with a `ChaosMonkey` mid-training and brings the
+   run back via `SeedSystem.resume()` from the live-loop checkpoints.
 
     PYTHONPATH=src python examples/quickstart.py
 """
@@ -257,6 +259,66 @@ def ops_demo(E=4, seconds=2.0):
     sys_.stop_ops()
 
 
+def chaos_demo(E=4, seconds=1.5):
+    """The survival plane (`repro.fault`): a `ChaosMonkey` crashes the
+    learner thread mid-V-trace-training (the same seam a real OOM or
+    assert would use), the live-loop checkpointer has been persisting
+    {params, opt_state, step} on a cadence, and `SeedSystem.resume()`
+    restores from the latest step, republishes params at a monotonic
+    version, reopens the trajectory queue, and the run continues — with
+    the frame ledger exactly conserved across the crash. The wire-level
+    half (actor-host SIGKILL + gateway sever + reconnect) runs in CI as
+    `benchmarks/fig3_actor_scaling.py --chaos`."""
+    import tempfile
+
+    import numpy as np
+
+    from repro.fault import ChaosEvent, ChaosMonkey
+    from repro.onpolicy import VTraceLearner, mlp_actor_critic
+
+    obs_dim = int(np.prod(CatchEnv().obs_shape))
+    init_fn, apply_fn = mlp_actor_critic(obs_dim, CatchEnv.num_actions)
+    vl = VTraceLearner(apply_fn, adamw(1e-3))
+    state = vl.init_state(init_fn(jax.random.PRNGKey(0)))
+    vl.warmup(state, batch_size=4, unroll=8, obs_shape=(obs_dim,))
+    policy = vl.sampling_policy(state["params"])
+    for lanes in (E, 2 * E):
+        policy(np.zeros((lanes, obs_dim), np.float32), None)
+
+    ckpt_dir = tempfile.mkdtemp(prefix="repro_chaos_")
+    sys_ = SeedSystem(env_factory=CatchEnv, policy_step=policy,
+                      num_actors=2, unroll=8, envs_per_actor=E,
+                      deadline_ms=1.0, algo="vtrace",
+                      train_step=vl.train_step, state=state,
+                      learner_batch=4, max_param_lag=50,
+                      policy_publish=policy.publish,
+                      checkpoint_dir=ckpt_dir, checkpoint_every_s=0.3)
+    sys_.warmup()        # jit the env up front: the crash must land in a
+    #                      window that is actually training
+    monkey = ChaosMonkey.scripted(
+        ChaosEvent(0.6, "crash_learner_step"))
+    monkey.start(sys_)
+    stats = sys_.run(seconds=seconds)
+    monkey.stop()
+    err = (stats["learner_error"] or "crash missed the window").splitlines()
+    print(f"  chaos: learner crashed after {stats['learner_steps']} steps "
+          f"({err[-1]})")
+    version = sys_.resume()
+    print(f"  resume: restored from checkpoint, republished params at "
+          f"version {version} "
+          f"(saves={sys_._recovery_stats()['checkpoint_saves']}, "
+          f"restores={sys_._recovery_stats()['checkpoint_restores']})")
+    stats = sys_.run(seconds=seconds / 2)
+    onp = stats["onpolicy"]
+    assert onp["frames_generated"] == (onp["frames_trained"]
+                                       + onp["frames_dropped"]
+                                       + onp["frames_pending"])
+    print(f"  after resume: {stats['learner_steps']} learner steps "
+          f"(> {version}), ledger conserved across the crash "
+          f"(generated={onp['frames_generated']} == trained + dropped + "
+          f"pending)")
+
+
 def main():
     arch = sys.argv[1] if len(sys.argv) > 1 else "qwen3-14b"
     cfg = smoke_config(arch)
@@ -298,6 +360,8 @@ def main():
     telemetry_demo()
     print("== live ops plane (/metrics, /healthz, /varz over HTTP)")
     ops_demo()
+    print("== survival plane (chaos-injected learner crash + resume)")
+    chaos_demo()
     print("ok")
 
 

@@ -67,6 +67,17 @@ class CheckpointManager:
         os.makedirs(directory, exist_ok=True)
         self._thread: Optional[threading.Thread] = None
         self._lock = threading.Lock()
+        # a failure on the async save thread is stashed here and re-raised
+        # on the next save()/wait() — silently losing checkpoints would
+        # turn a full disk into undetectable data loss at restore time
+        self._error: Optional[BaseException] = None
+        self.saves = 0           # committed checkpoints (post-rename)
+        self.restores = 0
+
+    def _raise_pending(self):
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise RuntimeError("async checkpoint save failed") from err
 
     def _step_dir(self, step: int) -> str:
         return os.path.join(self.dir, f"step_{step:010d}")
@@ -86,21 +97,29 @@ class CheckpointManager:
         if self._thread is not None:
             self._thread.join()
             self._thread = None
+        self._raise_pending()
 
     def save(self, state: Any, step: int):
         host_state = jax.tree.map(np.asarray, state)   # snapshot off-device
         if self.async_save:
-            self.wait()
+            self.wait()              # re-raises a prior async failure
             self._thread = threading.Thread(
-                target=self._save_sync, args=(host_state, step), daemon=True)
+                target=self._save_async, args=(host_state, step), daemon=True)
             self._thread.start()
         else:
             self._save_sync(host_state, step)
+
+    def _save_async(self, host_state, step):
+        try:
+            self._save_sync(host_state, step)
+        except BaseException as e:     # surfaced at the next save()/wait()
+            self._error = e
 
     def _save_sync(self, host_state, step):
         with self._lock:
             save_pytree(host_state, self._step_dir(step))
             self._gc()
+            self.saves += 1
 
     def _gc(self):
         steps = self.all_steps()
@@ -112,4 +131,6 @@ class CheckpointManager:
         self.wait()
         step = step if step is not None else self.latest_step()
         assert step is not None, f"no checkpoint in {self.dir}"
-        return restore_pytree(template, self._step_dir(step), shardings), step
+        out = restore_pytree(template, self._step_dir(step), shardings), step
+        self.restores += 1
+        return out

@@ -26,6 +26,7 @@ class Learner:
     def __init__(self, train_step: Callable, state, batch_fn: Callable,
                  publish: Optional[Callable] = None,
                  checkpoint_manager=None, checkpoint_every: int = 0,
+                 checkpoint_every_s: float = 0.0,
                  priority_update: Optional[Callable] = None,
                  poison: Optional[Callable] = None,
                  telemetry=None):
@@ -44,6 +45,11 @@ class Learner:
         self.publish = publish
         self.ckpt = checkpoint_manager
         self.checkpoint_every = checkpoint_every
+        # wall-clock checkpoint cadence (0 disables): the live-loop fault
+        # tolerance knob — step-based cadence stalls when steps stall,
+        # which is exactly when a crash costs the most un-checkpointed work
+        self.checkpoint_every_s = checkpoint_every_s
+        self._last_ckpt_t = time.perf_counter()
         self.priority_update = priority_update
         self.poison = poison
         self._stop = threading.Event()
@@ -117,6 +123,13 @@ class Learner:
         if self.ckpt and self.checkpoint_every and \
                 self.steps % self.checkpoint_every == 0:
             self.ckpt.save(self.state, self.steps)
+        elif self.ckpt and self.checkpoint_every_s and \
+                time.perf_counter() - self._last_ckpt_t \
+                >= self.checkpoint_every_s:
+            # async: hands off a host snapshot and keeps training — the
+            # save must not stall the accelerator (see CheckpointManager)
+            self.ckpt.save(self.state, self.steps)
+            self._last_ckpt_t = time.perf_counter()
 
     def _loop(self):
         # A bare `except queue.Empty` would let any other exception kill the

@@ -90,11 +90,16 @@ class SeedSystem:
                  engine_shards: int = 1, wire_compression: bool = False,
                  wire_quant: Optional[str] = None,
                  checkpoint_manager=None, checkpoint_every: int = 0,
+                 checkpoint_dir: Optional[str] = None,
+                 checkpoint_every_s: float = 0.0,
                  algo: str = "r2d2", max_param_lag: Optional[int] = None,
                  queue_capacity: Optional[int] = None,
                  gamma: Optional[float] = None,
                  policy_publish: Optional[Callable] = None,
-                 telemetry=None, ops_port: Optional[int] = None):
+                 telemetry=None, ops_port: Optional[int] = None,
+                 supervise_hosts: bool = False,
+                 max_host_restarts: int = 3, host_stall_s: float = 5.0,
+                 wire_reconnect=None):
         if backend not in ("host", "device"):
             raise ValueError(f"unknown backend {backend!r}; use 'host' or 'device'")
         if algo not in ("r2d2", "vtrace"):
@@ -178,6 +183,22 @@ class SeedSystem:
                 # SeedSystem(ops_port=0) gets a default telemetry bundle
                 from repro.telemetry import Telemetry
                 telemetry = Telemetry(process_name="learner")
+        if checkpoint_dir is not None:
+            if checkpoint_manager is not None:
+                raise ValueError(
+                    "pass checkpoint_dir OR checkpoint_manager, not both "
+                    "(checkpoint_dir constructs a CheckpointManager)")
+            from repro.checkpoint import CheckpointManager
+            checkpoint_manager = CheckpointManager(checkpoint_dir)
+        if checkpoint_every_s and checkpoint_manager is None:
+            raise ValueError(
+                f"checkpoint_every_s={checkpoint_every_s} needs somewhere "
+                f"to save — pass checkpoint_dir or checkpoint_manager")
+        if (supervise_hosts or wire_reconnect is not None) and not wire:
+            raise ValueError(
+                "supervise_hosts / wire_reconnect apply to wire transports "
+                "(in-process actors have no host processes to supervise "
+                "or connections to re-dial)")
         self.backend = backend
         self.transport = transport
         self.algo = algo
@@ -195,6 +216,10 @@ class SeedSystem:
         self.num_actors = num_actors
         self.ops_address = None
         self._run_t0 = None
+        # fault-recovery bookkeeping (see throughput()["recovery"])
+        self.host_faults = 0
+        self.frames_dropped_by_fault_events = 0
+        self._ckpt = checkpoint_manager
         # ops-plane handles (None when telemetry is absent or duck-typed
         # without the PR-8 attributes — everything downstream null-checks)
         self._health = getattr(telemetry, "health", None)
@@ -260,7 +285,12 @@ class SeedSystem:
                     failure_callback=(
                         (lambda msg: self._flightrec.trigger(
                             "pool_timeout", msg))
-                        if self._flightrec is not None else None))
+                        if self._flightrec is not None else None),
+                    supervise=supervise_hosts,
+                    max_host_restarts=max_host_restarts,
+                    host_stall_s=host_stall_s,
+                    reconnect=wire_reconnect,
+                    fault_callback=self._host_fault)
                 self.actors = []
             else:
                 self.actors = [Actor(i, env_factory, self.server, self._sink,
@@ -319,6 +349,7 @@ class SeedSystem:
                 priority_update=priority_update,
                 checkpoint_manager=checkpoint_manager,
                 checkpoint_every=checkpoint_every,
+                checkpoint_every_s=checkpoint_every_s,
                 poison=poison,
                 telemetry=telemetry)
         auditor = getattr(telemetry, "auditor", None)
@@ -338,6 +369,94 @@ class SeedSystem:
             telemetry.ops.set_varz(self._varz)
             telemetry.ops.add_collector(self._ops_ledger_gauges)
 
+    # --------------------------------------------------------- fault plane
+
+    def _host_fault(self, host_id: int, reason: str):
+        """ActorHostPool's per-death seam (fires BEFORE the respawn):
+        file the postmortem, force /healthz to at least `degraded` (a
+        fast respawn would otherwise beat the staleness window and the
+        death would be observable nowhere), and move the dead
+        incarnation's queued-but-untrained frames into the FAULT drop
+        bucket — the conserved ledger's answer to 'where did the dead
+        host's in-flight unrolls go?'. They are counted `frames_dropped`,
+        never `frames_trained`."""
+        self.host_faults += 1
+        if self._flightrec is not None:
+            self._flightrec.trigger("host_death", reason)
+        if self._health is not None:
+            self._health.event(f"actor-host-{host_id}", reason)
+        if self.onpolicy_queue is not None:
+            self.frames_dropped_by_fault_events += \
+                self.onpolicy_queue.drop_pending()
+
+    def _recovery_stats(self) -> dict:
+        """One consistent snapshot of the recovery counters — shared by
+        `throughput()["recovery"]`, the `/metrics` collector, and /varz so
+        every surface reports the same numbers."""
+        out = {
+            "host_faults": self.host_faults,
+            "host_restarts": (self.pool.host_restarts
+                              if self.pool is not None else 0),
+            "stale_frames_rejected": (self.pool.stale_frames_rejected
+                                      if self.pool is not None else 0),
+            "reconnects": 0, "gateway_failovers": 0,
+            "checkpoint_saves": self._ckpt.saves if self._ckpt else 0,
+            "checkpoint_restores": self._ckpt.restores if self._ckpt else 0,
+            "frames_dropped_by_fault": (
+                self.onpolicy_queue.frames_dropped_fault
+                if self.onpolicy_queue is not None else 0),
+        }
+        if self.pool is not None:
+            # transport-side counters live in the children and ride home
+            # in the final stats frames (a killed incarnation's counts die
+            # with it — the supervisor's own counters above don't)
+            out["reconnects"] = sum(s.get("reconnects", 0)
+                                    for s in self.pool.last_stats)
+            out["gateway_failovers"] = sum(s.get("gateway_failovers", 0)
+                                           for s in self.pool.last_stats)
+        return out
+
+    def resume(self) -> int:
+        """Learner crash recovery: restore the latest checkpoint into the
+        live loop and make the system runnable again. Returns the version
+        the restored params were re-published under.
+
+        The restored step may be OLDER than the last published version
+        (work since the last save died with the learner), so the republish
+        — and the learner's step counter — continue from
+        ``max(restored_step, current_version)``: `param_version` stays
+        monotonic across the crash boundary, which the staleness stamping
+        and the on-policy admission lag both assume. The params themselves
+        are the checkpointed ones, bit-exact.
+        """
+        if self.learner is None or self.learner.ckpt is None:
+            raise RuntimeError(
+                "resume() needs a learner with a checkpoint manager "
+                "(construct SeedSystem with checkpoint_dir=...)")
+        state, step = self.learner.ckpt.restore(self.learner.state)
+        version = max(step, self._version())
+        self.learner.state = state
+        self.learner.steps = version
+        self.learner.error = None
+        self.learner._stop.clear()
+        self._publish(state["params"], version)
+        if self.onpolicy_queue is not None:
+            # a vtrace learner's stop()/death closed the queue (poison
+            # seam); the resumed run must admit again — ledger counters
+            # carry over, keeping conservation a cross-restart oracle
+            self.onpolicy_queue.reopen()
+        if self.server is not None:
+            self.server.error = None
+            self.server._stop.clear()
+        for a in self.actors:
+            # actors/workers are re-runnable (start() builds a fresh
+            # thread) but stop() latches _stop — unlatch for the next run
+            a.error = None
+            flag = getattr(a, "_stop", None)
+            if flag is not None:
+                flag.clear()
+        return version
+
     # ---------------------------------------------------------- ops plane
 
     def _ops_ledger_gauges(self):
@@ -354,6 +473,8 @@ class SeedSystem:
                 out[f"onpolicy/{k}"] = v
         if self.server is not None:
             out["inference/num_slots"] = self.server.num_slots
+        for k, v in self._recovery_stats().items():
+            out[f"recovery/{k}"] = v
         return out
 
     def _varz(self) -> dict:
@@ -588,6 +709,9 @@ class SeedSystem:
             # (+ pending mid-run); drop_rate is the paper's actor-scaling
             # knee seen from the algorithm side
             out["onpolicy"] = self.onpolicy_queue.stats()
+        # survival counters: how much dying/reconnecting/checkpointing the
+        # run absorbed (all zero on a calm run — the overhead gate's claim)
+        out["recovery"] = self._recovery_stats()
         if self.server:
             s = self.server.stats           # summed across replicas
             actor_error = next(

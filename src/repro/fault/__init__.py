@@ -1,0 +1,55 @@
+"""Fault tolerance for the serving plane: who dies, who notices, what
+survives.
+
+The SEED layout has four failure domains, each with its own detector,
+recovery, and frame-ledger consequence — the matrix the chaos tests pin:
+
+==================== ======================= ========================== =====================
+domain               detector                recovery                   ledger consequence
+==================== ======================= ========================== =====================
+actor-host process   `ActorHostPool` scan:   respawn, SAME host_id /    queued unrolls ->
+(SIGKILL, OOM, hang) dead proc or missed     actor_ids (slot rows       ``frames_dropped_
+                     ``__heartbeat__``       re-adopt), epoch+1, under  fault``; in-flight
+                     (``host_stall_s``)      a `RestartBudget`          TCP dies with conn
+one TCP connection   client: ConnectionError `BackoffPolicy` re-dial +  the ONE in-flight
+(RST, gateway crash) mid send/recv; gateway: re-HELLO + re-grant; shm   request re-submits
+                     reader sever path       rings rebuilt fresh;       exactly (one dup
+                     (postmortem)            dead gateways re-hash      policy step)
+                                             ``host_id % live``
+learner thread       `Learner._loop` catches `SeedSystem.resume()`:     pending admits again
+(OOM, assert, jit)   -> ``learner.error``,   restore {params,opt,step}, after `reopen()`;
+                     /healthz degrades       republish monotonic        counters carry over
+                                             version, reopen queue
+inference replica    replica heartbeat       `Watchdog` names the       none: requests queue
+(GC pause, wedge)    ``inference/replicaK``  replica on /healthz;       behind the wedge and
+                     goes stale (1.5 s)      sibling replicas keep      complete late
+                                             serving their shards
+==================== ======================= ========================== =====================
+
+Exported pieces:
+
+  * `BackoffPolicy` — bounded exponential backoff with seeded jitter
+    (frozen dataclass: pickles across spawn with the host config);
+  * `RestartBudget` — restarts-per-window budget shared by the launch
+    `Supervisor` and the actor-host supervisor;
+  * `Supervisor` / `SimulatedFailure` — restore-and-retry around a
+    training loop (the launch layer's restart policy);
+  * `HeartbeatMonitor` — straggler detection over actor heartbeats;
+  * `ChaosMonkey` / `ChaosEvent` — deterministic seeded fault injection
+    against a live `SeedSystem` (see `repro.fault.chaos`).
+
+Everything here is OPT-IN: `reconnect=None` transports fail fast,
+`supervise=False` pools die loud, and a `SeedSystem` without
+`checkpoint_dir` never touches disk — the calm-path bit-parity the
+overhead gate (fig3 `--chaos` benchmark) enforces.
+"""
+
+from repro.fault.backoff import BackoffPolicy
+from repro.fault.chaos import ACTIONS, ChaosEvent, ChaosMonkey
+from repro.fault.supervisor import (HeartbeatMonitor, RestartBudget,
+                                    SimulatedFailure, Supervisor)
+
+__all__ = [
+    "ACTIONS", "BackoffPolicy", "ChaosEvent", "ChaosMonkey",
+    "HeartbeatMonitor", "RestartBudget", "SimulatedFailure", "Supervisor",
+]

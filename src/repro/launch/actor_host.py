@@ -41,6 +41,8 @@ import traceback
 from dataclasses import dataclass
 from typing import Any, List, Optional, Tuple
 
+from repro.fault.supervisor import RestartBudget
+
 
 @dataclass
 class ActorHostConfig:
@@ -82,13 +84,25 @@ class ActorHostConfig:
     #                              covers child PROCESSES over the same
     #                              protocol the final stats already ride
     #                              (no extra pipe to leak across spawn)
+    epoch: int = 0               # incarnation counter: bumped on every
+    #                              supervised respawn; every frame this
+    #                              child puts on the result queue carries
+    #                              it, so the parent rejects stale frames
+    #                              from a dead incarnation (the wire side
+    #                              needs no epoch — TCP replies die with
+    #                              the connection)
+    addresses: Optional[Tuple[Tuple[str, int], ...]] = None
+    #                              full gateway list for failover re-hash
+    #                              (None: no failover, fail-fast)
+    reconnect: Any = None        # repro.fault.BackoffPolicy (picklable) or
+    #                              None = historical fail-fast wire
 
 
 def run_actor_host(cfg: ActorHostConfig, result_q) -> None:
     """Child entry point: dial the gateway, drive actors, report stats."""
     stats = {"host_id": cfg.host_id, "elapsed_s": 0.0, "iterations": 0,
              "frames": 0, "episodes": 0, "returns": [], "error": None,
-             "unrolls": 0, "param_lag_total": 0}
+             "unrolls": 0, "param_lag_total": 0, "epoch": cfg.epoch}
     hb_stop = None
     if cfg.heartbeat:
         # beat from birth: the slow phases (jax import, jit warmup, env
@@ -98,7 +112,8 @@ def run_actor_host(cfg: ActorHostConfig, result_q) -> None:
         def _beat_loop():
             while not hb_stop.wait(0.5):
                 try:
-                    result_q.put({"__heartbeat__": cfg.host_id})
+                    result_q.put({"__heartbeat__": cfg.host_id,
+                                  "__epoch__": cfg.epoch})
                 except Exception:
                     return       # queue torn down: parent is gone anyway
 
@@ -135,7 +150,12 @@ def run_actor_host(cfg: ActorHostConfig, result_q) -> None:
                                   onpolicy=cfg.onpolicy,
                                   quant=cfg.quant,
                                   coalesce=cfg.coalesce,
-                                  telemetry=tel)
+                                  telemetry=tel,
+                                  reconnect=cfg.reconnect,
+                                  failover_addresses=(
+                                      list(cfg.addresses)
+                                      if cfg.addresses else None),
+                                  host_id=cfg.host_id)
             for _ in cfg.actor_ids]
         if cfg.onpolicy:
             # on-policy data is useless without logprobs + version stamps,
@@ -194,6 +214,10 @@ def run_actor_host(cfg: ActorHostConfig, result_q) -> None:
             getattr(tr, "shm_frames", 0) for tr in transports)
         stats["spill_frames"] = sum(
             getattr(tr, "spill_frames", 0) for tr in transports)
+        stats["reconnects"] = sum(
+            getattr(tr, "reconnects", 0) for tr in transports)
+        stats["gateway_failovers"] = sum(
+            getattr(tr, "gateway_failovers", 0) for tr in transports)
         stats["returns"] = [r for a in actors for r in a.returns[-20:]]
         stats["error"] = next(
             (tr.error for tr in transports if tr.error), None) or next(
@@ -223,6 +247,18 @@ class ActorHostPool:
     The pool partitions `num_actors` contiguously across `num_hosts` (host
     h gets ids [h*per, ...)); globally-unique actor ids keep the gateway's
     (actor_id, env_id) recurrent-slot mapping collision-free across hosts.
+
+    With ``supervise=True`` the pool is also the actor plane's SUPERVISOR:
+    a host that dies (exit without reporting) or goes silent (missed
+    ``__heartbeat__`` frames past ``host_stall_s``) is killed for certain,
+    reported through ``fault_callback`` (the SeedSystem seam that files the
+    postmortem, degrades /healthz, and moves the dead incarnation's pending
+    frames to the fault-drop ledger), and respawned with the SAME host_id
+    and actor_ids under a `RestartBudget`. Same ids means the replacement
+    re-adopts the exact (actor_id, env_id) slot rows the dead host owned —
+    the server's slot table stays dense and sticky across the crash. Each
+    incarnation carries an ``epoch``; result-queue frames from a dead
+    epoch (late stats, buffered beats) are rejected, never recorded.
     """
 
     def __init__(self, env_factory, num_actors: int, envs_per_actor: int,
@@ -232,7 +268,11 @@ class ActorHostPool:
                  use_shm: bool = False, quant: Optional[str] = None,
                  coalesce: bool = True, telemetry: bool = False,
                  pid_callback=None, heartbeat_callback=None,
-                 heartbeat_close=None, failure_callback=None):
+                 heartbeat_close=None, failure_callback=None,
+                 supervise: bool = False, max_host_restarts: int = 3,
+                 host_stall_s: float = 5.0,
+                 min_respawn_window_s: float = 0.25,
+                 reconnect=None, fault_callback=None):
         if not 1 <= num_hosts <= num_actors:
             raise ValueError(
                 f"num_hosts={num_hosts} must be in [1, num_actors={num_actors}]")
@@ -262,6 +302,25 @@ class ActorHostPool:
         self.heartbeat_callback = heartbeat_callback
         self.heartbeat_close = heartbeat_close
         self.failure_callback = failure_callback
+        # --- supervision (all opt-in: supervise=False is the historical
+        # fail-fast pool, byte-identical collect loop semantics) ---------
+        self.supervise = supervise
+        self.max_host_restarts = max_host_restarts
+        self.host_stall_s = host_stall_s
+        self.min_respawn_window_s = min_respawn_window_s
+        self.reconnect = reconnect   # BackoffPolicy for child transports
+        # fault_callback(host_id, reason) fires ONCE per detected death,
+        # BEFORE the respawn — the parent-side ledger/health/postmortem
+        # seam (exceptions swallowed: supervision must not die of its
+        # own observer)
+        self.fault_callback = fault_callback
+        # recovery counters (cumulative over the pool's lifetime; surfaced
+        # via SeedSystem.throughput()["recovery"] and /varz)
+        self.host_restarts = 0
+        self.stale_frames_rejected = 0
+        self.fault_log: List[str] = []
+        self._hosts: dict = {}       # host_id -> incarnation record
+        self._all_procs: List[Any] = []
         self.last_stats: List[dict] = []
 
     def _partitions(self) -> List[Tuple[int, ...]]:
@@ -285,6 +344,97 @@ class ActorHostPool:
             raise ValueError("need at least one gateway address")
         return addrs
 
+    def _spawn(self, host_id: int, actor_ids: Tuple[int, ...],
+               addresses: List[Tuple[str, int]], seconds: float,
+               epoch: int, result_q, ctx) -> None:
+        cfg = ActorHostConfig(
+            address=addresses[host_id % len(addresses)], host_id=host_id,
+            actor_ids=tuple(actor_ids), env_factory=self.env_factory,
+            envs_per_actor=self.envs_per_actor, unroll=self.unroll,
+            seconds=seconds, seed=self.seed, compress=self.compress,
+            onpolicy=self.onpolicy, use_shm=self.use_shm,
+            quant=self.quant, coalesce=self.coalesce,
+            telemetry=self.telemetry,
+            heartbeat=(self.heartbeat_callback is not None
+                       or self.supervise),
+            epoch=epoch,
+            addresses=(tuple(addresses)
+                       if self.reconnect is not None else None),
+            reconnect=self.reconnect)
+        p = ctx.Process(target=run_actor_host, args=(cfg, result_q),
+                        daemon=True)
+        p.start()
+        if self.pid_callback is not None:
+            self.pid_callback(f"actor-host-{host_id}", p.pid)
+        self._hosts[host_id] = {
+            "proc": p, "epoch": epoch, "actor_ids": tuple(actor_ids),
+            "last_beat": time.perf_counter(), "reported": False}
+        self._all_procs.append(p)
+
+    def kill_host(self, host_id: int) -> bool:
+        """Chaos hook: SIGKILL the live incarnation of `host_id` (no
+        cleanup, no final stats — the worst-case death the supervisor
+        must absorb). Returns False when the host isn't currently up."""
+        st = self._hosts.get(host_id)
+        if st is None or not st["proc"].is_alive():
+            return False
+        st["proc"].kill()
+        return True
+
+    def _scan(self, results, addresses, window_end, result_q, ctx,
+              budget, now) -> None:
+        """One supervision sweep: detect dead/silent hosts, respawn."""
+        for h, st in list(self._hosts.items()):
+            if st["reported"]:
+                continue
+            dead = not st["proc"].is_alive()
+            stalled = (not dead
+                       and now - st["last_beat"] > self.host_stall_s)
+            if not (dead or stalled):
+                continue
+            reason = (
+                f"actor-host-{h} (epoch {st['epoch']}) died without "
+                f"reporting (exitcode={st['proc'].exitcode})" if dead else
+                f"actor-host-{h} (epoch {st['epoch']}) missed heartbeats "
+                f"for {now - st['last_beat']:.1f}s > {self.host_stall_s}s")
+            self.fault_log.append(reason)
+            if self.fault_callback is not None:
+                try:
+                    self.fault_callback(h, reason)
+                except Exception:
+                    pass
+            # a silent-but-alive incarnation must be GONE before its
+            # replacement re-adopts the slot rows (two incarnations of one
+            # actor_id would interleave frames on the learner side)
+            try:
+                st["proc"].kill()
+            except Exception:
+                pass
+            remaining = window_end - now
+            if remaining < self.min_respawn_window_s:
+                # window is over: record a tombstone so run() completes
+                # with a dense per-host stats list (zero counters, the
+                # fault noted; NOT an error — the death was absorbed)
+                st["reported"] = True
+                results[h] = {
+                    "host_id": h, "elapsed_s": 0.0, "iterations": 0,
+                    "frames": 0, "episodes": 0, "returns": [],
+                    "error": None, "unrolls": 0, "param_lag_total": 0,
+                    "epoch": st["epoch"], "fault": reason}
+            elif budget.spend(now=now):
+                self.host_restarts += 1
+                self._spawn(h, st["actor_ids"], addresses, remaining,
+                            st["epoch"] + 1, result_q, ctx)
+            else:
+                st["reported"] = True
+                results[h] = {
+                    "host_id": h, "elapsed_s": 0.0, "iterations": 0,
+                    "frames": 0, "episodes": 0, "returns": [],
+                    "error": (f"{reason}; restart budget exhausted "
+                              f"({budget.spent} restarts within window)"),
+                    "unrolls": 0, "param_lag_total": 0,
+                    "epoch": st["epoch"], "fault": reason}
+
     def run(self, address, seconds: float) -> List[dict]:
         """Block until every host reports (or the hard timeout trips).
 
@@ -292,67 +442,88 @@ class ActorHostPool:
         hash across the list with the stable ``host_id % G`` map (see
         module docstring). mp start method is ALWAYS "spawn" — JAX holds
         threads at import time, so fork would deadlock the children.
+
+        With ``supervise=True`` the collect loop doubles as the
+        supervision loop: idle queue ticks run a death scan (see `_scan`),
+        and result-queue frames are epoch-checked so a dead incarnation's
+        late frames never reach the stats or the heartbeat registry.
         """
         addresses = self._normalize_addresses(address)
         ctx = mp.get_context("spawn")
         result_q = ctx.Queue()
-        procs = []
+        self._hosts = {}
+        self._all_procs = []
+        t0 = time.perf_counter()
+        window_end = t0 + seconds
+        budget = RestartBudget(self.max_host_restarts,
+                               window_s=max(seconds + self.grace_s, 60.0))
         for host_id, actor_ids in enumerate(self._partitions()):
-            cfg = ActorHostConfig(
-                address=addresses[host_id % len(addresses)], host_id=host_id,
-                actor_ids=actor_ids, env_factory=self.env_factory,
-                envs_per_actor=self.envs_per_actor, unroll=self.unroll,
-                seconds=seconds, seed=self.seed, compress=self.compress,
-                onpolicy=self.onpolicy, use_shm=self.use_shm,
-                quant=self.quant, coalesce=self.coalesce,
-                telemetry=self.telemetry,
-                heartbeat=self.heartbeat_callback is not None)
-            p = ctx.Process(target=run_actor_host, args=(cfg, result_q),
-                            daemon=True)
-            p.start()
-            if self.pid_callback is not None:
-                self.pid_callback(f"actor-host-{host_id}", p.pid)
-            procs.append(p)
-        deadline = time.perf_counter() + seconds + self.grace_s
-        results = []
+            self._spawn(host_id, actor_ids, addresses, seconds, 0,
+                        result_q, ctx)
+        deadline = window_end + self.grace_s
+        results: dict = {}           # host_id -> final stats (one epoch)
         try:
             # heartbeats interleave with final stats on the ONE queue, so
             # collect by count, not by iteration: a {"__heartbeat__": h}
             # frame is relayed and skipped. The deadline is re-checked
             # explicitly — a child whose actors wedged keeps beating, and
             # those beats must not let it dodge the hard timeout.
-            while len(results) < len(procs):
+            while len(results) < self.num_hosts:
                 remaining = deadline - time.perf_counter()
                 if remaining <= 0:
-                    self._timed_out(results, procs, seconds)
+                    self._timed_out(list(results.values()), seconds)
+                poll = min(max(remaining, 0.1), 0.25) if self.supervise \
+                    else max(remaining, 0.1)
                 try:
-                    r = result_q.get(timeout=max(remaining, 0.1))
+                    r = result_q.get(timeout=poll)
                 except _queue.Empty:
-                    self._timed_out(results, procs, seconds)
+                    r = None
+                    if not self.supervise:
+                        self._timed_out(list(results.values()), seconds)
+                now = time.perf_counter()
                 if isinstance(r, dict) and "__heartbeat__" in r:
-                    if self.heartbeat_callback is not None:
-                        self.heartbeat_callback(
-                            f"actor-host-{r['__heartbeat__']}")
-                    continue
-                results.append(r)
+                    h = r["__heartbeat__"]
+                    st = self._hosts.get(h)
+                    if st is not None \
+                            and r.get("__epoch__", 0) < st["epoch"]:
+                        self.stale_frames_rejected += 1   # dead epoch
+                    else:
+                        if st is not None:
+                            st["last_beat"] = now
+                        if self.heartbeat_callback is not None:
+                            self.heartbeat_callback(f"actor-host-{h}")
+                elif r is not None:
+                    h = r.get("host_id")
+                    st = self._hosts.get(h)
+                    if st is not None and r.get("epoch", 0) < st["epoch"]:
+                        self.stale_frames_rejected += 1   # late stats from
+                        #                                   a dead epoch
+                    else:
+                        if st is not None:
+                            st["reported"] = True
+                        results[h] = r
+                if self.supervise:
+                    self._scan(results, addresses, window_end, result_q,
+                               ctx, budget, now)
         finally:
             if self.heartbeat_close is not None:
                 # completed (or killed) children stop beating; drop their
                 # registry entries so they don't read as stalled forever
-                for host_id in range(len(procs)):
+                for host_id in range(self.num_hosts):
                     self.heartbeat_close(f"actor-host-{host_id}")
-            for p in procs:
+            for p in self._all_procs:
                 p.join(timeout=5.0)
                 if p.is_alive():
                     p.terminate()
                     p.join(timeout=5.0)
-        self.last_stats = sorted(results, key=lambda s: s["host_id"])
+        self.last_stats = sorted(results.values(),
+                                 key=lambda s: s["host_id"])
         return self.last_stats
 
-    def _timed_out(self, results, procs, seconds):
+    def _timed_out(self, results, seconds):
         msg = (
             f"actor host timed out after {seconds + self.grace_s:.0f}s "
-            f"({len(results)}/{len(procs)} reported) — wire-level "
+            f"({len(results)}/{self.num_hosts} reported) — wire-level "
             f"deadlock or crash; partial stats: {results}")
         if self.failure_callback is not None:
             try:

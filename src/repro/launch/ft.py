@@ -1,89 +1,27 @@
-"""Fault tolerance: supervised training with checkpoint/restart, actor
-heartbeat monitoring (straggler mitigation), and elastic re-meshing.
+"""Fault tolerance for the launch layer — now backed by `repro.fault`.
 
-At 1000+ nodes, failures are routine events, not exceptions:
-  * the Supervisor runs the learner loop, persists state via the async
-    CheckpointManager, and on ANY failure restores the latest checkpoint
-    and continues — bounded only by max_restarts within a window;
-  * the HeartbeatMonitor watches actor progress counters; an actor whose
-    env-step counter stalls past `stall_s` is declared a straggler and
-    restarted (the inference server's batching deadline already prevents a
-    stalled actor from blocking a batch — this removes it entirely);
-  * `reshard_state` restores a checkpoint onto a DIFFERENT mesh (elastic
-    scale-up/down after losing or gaining a slice): checkpoint leaves are
-    host arrays, so restoring is a device_put with the new shardings.
+The restart policy (`Supervisor` + `RestartBudget`), failure-injection
+exception (`SimulatedFailure`), and straggler monitor
+(`HeartbeatMonitor`) live in `repro.fault.supervisor` so the serving
+loop (`SeedSystem`, `ActorHostPool`) and the launch layer share ONE
+restart policy. This module re-exports them for compatibility and keeps
+the one launch-specific piece: `reshard_state`, which restores a
+checkpoint onto a DIFFERENT mesh (elastic scale-up/down after losing or
+gaining a slice) — checkpoint leaves are host arrays, so restoring is a
+device_put with the new shardings.
 """
 
-import time
-from dataclasses import dataclass, field
-from typing import Callable, List, Optional
+from typing import Optional
 
 import jax
 
 from repro.checkpoint import CheckpointManager
+from repro.fault.supervisor import (HeartbeatMonitor, RestartBudget,
+                                    SimulatedFailure, Supervisor)
 from repro.launch.specs import rules_for, state_specs
 
-
-class SimulatedFailure(RuntimeError):
-    """Raised by failure-injection hooks in tests/examples."""
-
-
-@dataclass
-class Supervisor:
-    ckpt: CheckpointManager
-    max_restarts: int = 5
-    restart_window_s: float = 3600.0
-    restarts: List[float] = field(default_factory=list)
-
-    def run(self, make_state: Callable, train_loop: Callable):
-        """make_state() -> fresh state; train_loop(state, start_step) runs
-        until completion or raises. Returns the final state."""
-        state = make_state()
-        start = 0
-        if self.ckpt.latest_step() is not None:
-            state, start = self.ckpt.restore(state)
-        while True:
-            try:
-                return train_loop(state, start)
-            except SimulatedFailure as e:
-                now = time.monotonic()
-                self.restarts = [t for t in self.restarts
-                                 if now - t < self.restart_window_s]
-                self.restarts.append(now)
-                if len(self.restarts) > self.max_restarts:
-                    raise RuntimeError(
-                        f"{len(self.restarts)} restarts within window") from e
-                state = make_state()
-                start = 0
-                if self.ckpt.latest_step() is not None:
-                    state, start = self.ckpt.restore(state)
-
-
-@dataclass
-class HeartbeatMonitor:
-    """Declares stalled actors stragglers and restarts them."""
-    stall_s: float = 10.0
-    _last: dict = field(default_factory=dict)
-
-    def check(self, actors) -> List[int]:
-        now = time.monotonic()
-        stragglers = []
-        for a in actors:
-            steps, t = self._last.get(a.actor_id, (-1, now))
-            if a.steps != steps:
-                self._last[a.actor_id] = (a.steps, now)
-            elif now - t > self.stall_s:
-                stragglers.append(a.actor_id)
-        return stragglers
-
-    def restart(self, actors, straggler_ids):
-        for a in actors:
-            if a.actor_id in straggler_ids:
-                a.stop()
-                a.join(timeout=1.0)
-                a._stop.clear()
-                a.start()
-                self._last.pop(a.actor_id, None)
+__all__ = ["HeartbeatMonitor", "RestartBudget", "SimulatedFailure",
+           "Supervisor", "reshard_state"]
 
 
 def reshard_state(ckpt: CheckpointManager, bundle, optimizer, cfg, new_mesh,

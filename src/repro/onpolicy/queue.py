@@ -80,6 +80,7 @@ class TrajectoryQueue:
         self.frames_dropped_stale = 0
         self.frames_dropped_overflow = 0
         self.frames_dropped_shutdown = 0
+        self.frames_dropped_fault = 0
         self.frames_pending = 0
         self.unrolls_trained = 0
         self.trained_lag_sum = 0
@@ -194,6 +195,29 @@ class TrajectoryQueue:
                     self.frames_dropped_shutdown += f
             self._cond.notify_all()
 
+    def reopen(self):
+        """Undo `close()` so a resumed run can admit again — the
+        `SeedSystem.resume()` path. The ledger carries over: counters are
+        cumulative across the crash boundary, which is exactly what makes
+        conservation a cross-restart oracle. Idempotent."""
+        with self._cond:
+            self._closed = False
+
+    def drop_pending(self) -> int:
+        """Fault path (a producer died mid-run): drain every queued unroll
+        into the FAULT drop count so frames from the dead incarnation are
+        never handed to the learner as trained data. Conservation holds
+        across the call — pending moves to dropped under the one lock.
+        Returns the number of frames dropped."""
+        with self._cond:
+            dropped = 0
+            while self._q:
+                _, f, _ = self._q.popleft()
+                self.frames_pending -= f
+                dropped += f
+            self.frames_dropped_fault += dropped
+            return dropped
+
     # ---------------------------------------------------------------- stats
 
     def __len__(self):
@@ -203,7 +227,7 @@ class TrajectoryQueue:
     @property
     def frames_dropped(self) -> int:
         return (self.frames_dropped_stale + self.frames_dropped_overflow
-                + self.frames_dropped_shutdown)
+                + self.frames_dropped_shutdown + self.frames_dropped_fault)
 
     def stats(self) -> dict:
         """One consistent snapshot of the frame ledger (see module doc:
@@ -216,6 +240,7 @@ class TrajectoryQueue:
                 "frames_dropped_stale": self.frames_dropped_stale,
                 "frames_dropped_overflow": self.frames_dropped_overflow,
                 "frames_dropped_shutdown": self.frames_dropped_shutdown,
+                "frames_dropped_fault": self.frames_dropped_fault,
                 "frames_pending": self.frames_pending,
                 "drop_rate": self.frames_dropped
                 / max(self.frames_generated, 1),

@@ -45,6 +45,40 @@ the writers forward as ``ERROR`` frames before exiting; a dropped
 connection poisons every pending reply client-side. The shm rings carry
 NO liveness state — peer death is always detected on the TCP socket, so a
 dead reader severs the connection exactly like the plain socket path.
+
+Failure domains (`repro.fault` integration — see also `repro.fault`'s
+docstring for the system-wide matrix):
+
+  what dies                  what survives                 ledger records
+  -------------------------  ----------------------------  ----------------
+  one TCP connection         the gateway, every other      unrolls already
+  (sever / RST / peer        conn; the client reconnects   sunk stay
+  crash)                     with `reconnect=` backoff,    `trained`-able;
+                             re-HELLOs, re-sends the one   in-flight reply
+                             in-flight request             is re-requested
+  one gateway (of G)         the server + other gateways;  same — TRAJ
+                             clients re-hash host_id %     frames buffered
+                             |surviving| over              client-side
+                             `failover_addresses`          flush after
+                                                           failover
+  the shm ring pair          the TCP spill path; on        identical to the
+  (peer died mid-attach)     reconnect the client unlinks  TCP sever row
+                             and creates FRESH rings
+  the whole client host      gateway reader exits with a   frames that
+  (SIGKILL)                  postmortem; `ActorHostPool`   never reached
+                             respawns the host (same       the sink were
+                             host_id -> same slots);       never generated;
+                             stale pending unrolls drain   pending drains to
+                             via `drop_pending()`          `dropped_fault`
+
+Reconnect is strictly opt-in (`reconnect=None` keeps every path
+bit-identical to the fail-fast behavior above). The multiplexed
+`SocketTransport` does NOT reconnect — its N-actors-one-wire sharing
+makes transparent re-submit ambiguous; deployments that want survival
+use the per-actor sync transports, where the one-in-flight-request
+contract makes recovery exact. One caveat: a recovered request re-runs
+the policy forward for that observation, so recurrent slots see one
+duplicated step per failover (feedforward policies are unaffected).
 """
 
 import contextlib
@@ -63,6 +97,7 @@ from typing import Callable, Dict, List, Optional, Tuple
 import numpy as np
 
 from repro.core.inference import InferenceRequest, ReplyError
+from repro.fault.backoff import BackoffPolicy
 from repro.telemetry.metrics import MetricsRegistry
 from repro.telemetry.tracer import next_trace_seq
 from repro.transport.codec import (CODEC_ONPOLICY, CODEC_QUANT, CODEC_RLE,
@@ -217,6 +252,7 @@ class SocketTransport(Transport):
                  quant: Optional[str] = None, telemetry=None):
         sock.setsockopt(_socket.IPPROTO_TCP, _socket.TCP_NODELAY, 1)
         self._sock = sock
+        self._dialed_address: Optional[Address] = None
         self.max_frame = max_frame
         self._tracer = (telemetry.tracer
                         if telemetry is not None and telemetry.enabled
@@ -264,8 +300,12 @@ class SocketTransport(Transport):
             try:
                 sock = _socket.create_connection(address, timeout=2.0)
                 sock.settimeout(None)
-                return cls(sock, max_frame=max_frame, compress=compress,
-                           onpolicy=onpolicy, **kwargs)
+                t = cls(sock, max_frame=max_frame, compress=compress,
+                        onpolicy=onpolicy, **kwargs)
+                # remember where we dialed so the reconnect path can re-dial
+                # (a raw-socket constructor has no address to remember)
+                t._dialed_address = address
+                return t
             except OSError:
                 if time.perf_counter() >= deadline:
                     raise
@@ -605,9 +645,13 @@ class SyncSocketTransport(Transport):
                  max_frame: int = DEFAULT_MAX_FRAME,
                  compress: bool = False, onpolicy: bool = False,
                  quant: Optional[str] = None, coalesce: bool = False,
-                 telemetry=None, _offer_shm: bool = False):
+                 telemetry=None, _offer_shm: bool = False,
+                 reconnect: Optional[BackoffPolicy] = None,
+                 failover_addresses: Optional[List[Address]] = None,
+                 host_id: int = 0):
         sock.setsockopt(_socket.IPPROTO_TCP, _socket.TCP_NODELAY, 1)
         self._sock = sock
+        self._dialed_address: Optional[Address] = None
         self.max_frame = max_frame
         self._tracer = (telemetry.tracer
                         if telemetry is not None and telemetry.enabled
@@ -625,13 +669,23 @@ class SyncSocketTransport(Transport):
         self._hello_seen = False
         self.param_version = 0   # latest behavior version seen on replies
         self.error: Optional[str] = None
-        offer = _offer_mask(compress, onpolicy, quant=quant,
-                            coalesce=coalesce, shm=_offer_shm)
-        if not offer:
+        # survival knobs (repro.fault): None keeps every path bit-identical
+        # to the historical fail-fast behavior
+        self._reconnect = reconnect
+        self._addresses = list(failover_addresses or [])
+        self._host_id = host_id
+        self._dead_addresses: set = set()
+        self._inflight: Optional[Tuple[int, np.ndarray, int]] = None
+        self._consec_recoveries = 0   # reset on every successful reply
+        self.reconnects = 0           # successful re-dials
+        self.gateway_failovers = 0    # re-dials that changed address
+        self._offer = _offer_mask(compress, onpolicy, quant=quant,
+                                  coalesce=coalesce, shm=_offer_shm)
+        if not self._offer:
             self._hello_seen = True          # nothing to negotiate
         else:
             try:
-                sock.sendall(encode_hello(offer))
+                sock.sendall(encode_hello(self._offer))
             except OSError as e:
                 self.error = f"send failed: {e}"
 
@@ -672,15 +726,29 @@ class SyncSocketTransport(Transport):
 
     def submit_batch(self, actor_id: int, obs: np.ndarray,
                      trace_seq: int = 0) -> _SyncReply:
+        obs = np.asarray(obs)
+        if self.error is not None:
+            self._recover()      # no-op (and still failed) without a policy
         self._flush_traj()
+        # the one-in-flight-request contract makes transparent recovery
+        # exact: this is the only request a reconnect could ever re-send
+        self._inflight = (actor_id, obs, trace_seq)
+        return _SyncReply(self, self._send_request(actor_id, obs, trace_seq))
+
+    def _send_request(self, actor_id: int, obs: np.ndarray,
+                      trace_seq: int) -> int:
         request_id = self._next_id
         self._next_id += 1
         if self.error is None:
             self._send_parts(encode_request_parts(
-                actor_id, request_id, np.asarray(obs),
+                actor_id, request_id, obs,
                 compress=self._rle, quant=self._quant_eff,
                 trace_seq=trace_seq))
-        return _SyncReply(self, request_id)
+            if self.error is not None and self._recover():
+                # re-encode under the fresh connection's grants; a new
+                # request id keeps any half-sent frame unambiguous
+                return self._send_request(actor_id, obs, trace_seq)
+        return request_id
 
     def submit(self, actor_id: int, obs: np.ndarray):
         return _ScalarReply(
@@ -794,6 +862,8 @@ class SyncSocketTransport(Transport):
                     if frame.param_version > self.param_version:
                         self.param_version = frame.param_version
                     if frame.request_id == request_id:
+                        self._inflight = None
+                        self._consec_recoveries = 0
                         return frame.array
                     continue            # stale reply from an abandoned rid
                 if frame.kind == KIND_HELLO:
@@ -808,12 +878,116 @@ class SyncSocketTransport(Transport):
                     f"unexpected frame kind {frame.kind} on sync client")
         except queue.Empty:
             raise
-        except (ConnectionError, CodecError) as e:
+        except ConnectionError as e:
+            self.error = str(e)
+            if self._recover():
+                # the old socket died with our reply; re-send the in-flight
+                # request on the fresh connection and wait for THAT reply
+                # (a fresh socket cannot deliver stale replies, so the new
+                # request id is the only one we will ever see)
+                rid = self._resubmit_inflight()
+                if rid is not None and self.error is None:
+                    return self._read_reply(rid, timeout)
+            return ReplyError(self.error)
+        except CodecError as e:
             self.error = str(e)
             return ReplyError(self.error)
         except Exception as e:       # decode bug must not kill the actor
             self.error = f"receiver crashed: {e!r}"
             return ReplyError(self.error)
+
+    # ------------------------------------------------------------ recovery
+
+    def _pre_reconnect(self):
+        """Subclass hook: runs before each re-dial (shm unlinks rings)."""
+
+    def _pick_address(self) -> Optional[Address]:
+        """Re-hash `host_id` over the surviving gateway list — the stable
+        failover rule: every host computes the same assignment from the
+        same survivor set, no coordination needed."""
+        live = [a for a in self._addresses
+                if tuple(a) not in self._dead_addresses]
+        if not live:
+            # everything is marked dead: forget the marks and retry the
+            # full list (a restarted gateway reuses its address)
+            self._dead_addresses.clear()
+            live = list(self._addresses)
+        if not live:
+            return self._dialed_address
+        return tuple(live[self._host_id % len(live)])
+
+    def _recover(self) -> bool:
+        """Bounded exponential-backoff reconnect: re-dial (re-hashing over
+        surviving gateway addresses), re-HELLO, re-negotiate capabilities.
+        Returns True with `error` cleared on success; False leaves the
+        transport failed exactly like the historical fail-fast path."""
+        if self._reconnect is None:
+            return False
+        if self._consec_recoveries >= 8:
+            # flapping guard: repeated recoveries without one successful
+            # reply in between means the plane is gone, not blinking
+            self.error = (self.error or "wire lost") \
+                + " [consecutive-recovery cap hit]"
+            return False
+        self._consec_recoveries += 1
+        was_onpolicy = self._onpolicy
+        if self._dialed_address is not None:
+            self._dead_addresses.add(tuple(self._dialed_address))
+        try:
+            self._sock.close()
+        except OSError:
+            pass
+        self._pre_reconnect()
+        for delay in self._reconnect.delays():
+            addr = self._pick_address()
+            if addr is None:
+                break            # raw-socket construction: nowhere to dial
+            try:
+                sock = _socket.create_connection(addr, timeout=2.0)
+            except OSError:
+                self._dead_addresses.add(tuple(addr))
+                time.sleep(delay)
+                continue
+            sock.settimeout(None)
+            sock.setsockopt(_socket.IPPROTO_TCP, _socket.TCP_NODELAY, 1)
+            self._sock = sock
+            self._buf = bytearray()
+            # grants are per-connection: reset and re-negotiate from scratch
+            self._rle = self._onpolicy = self._quant = False
+            self._trajbatch = self._shm_granted = False
+            self._hello_seen = not self._offer
+            self.error = None
+            if self._offer:
+                try:
+                    sock.sendall(encode_hello(self._offer))
+                except OSError as e:
+                    self.error = f"send failed: {e}"
+                if self.error is not None or not self.wait_hello(5.0) \
+                        or (was_onpolicy and not self._onpolicy):
+                    # no (or wrong) HELLO answer: a gateway that stopped
+                    # granting what the deployment requires is as dead as
+                    # one that refused the dial
+                    self.error = self.error or \
+                        "reconnect HELLO re-negotiation failed"
+                    self._dead_addresses.add(tuple(addr))
+                    time.sleep(delay)
+                    continue
+            failover = (self._dialed_address is not None
+                        and tuple(addr) != tuple(self._dialed_address))
+            self._dialed_address = tuple(addr)
+            self._dead_addresses.discard(tuple(addr))
+            self.reconnects += 1
+            if failover:
+                self.gateway_failovers += 1
+            return True
+        self.error = self.error or "reconnect retries exhausted"
+        return False
+
+    def _resubmit_inflight(self) -> Optional[int]:
+        if self._inflight is None:
+            return None
+        aid, obs, seq = self._inflight
+        return self._send_request(aid, obs, seq)
 
 
 class ShmTransport(SyncSocketTransport):
@@ -842,7 +1016,10 @@ class ShmTransport(SyncSocketTransport):
                  compress: bool = False, onpolicy: bool = False,
                  quant: Optional[str] = None, coalesce: bool = False,
                  telemetry=None, slot_size: int = DEFAULT_SLOT_SIZE,
-                 num_slots: int = DEFAULT_NUM_SLOTS):
+                 num_slots: int = DEFAULT_NUM_SLOTS,
+                 reconnect: Optional[BackoffPolicy] = None,
+                 failover_addresses: Optional[List[Address]] = None,
+                 host_id: int = 0):
         self._c2s: Optional[ShmRing] = None
         self._s2c: Optional[ShmRing] = None
         self._slot_size = slot_size
@@ -857,7 +1034,10 @@ class ShmTransport(SyncSocketTransport):
         peer = sock.getpeername()[0]
         super().__init__(sock, max_frame=max_frame, compress=compress,
                          onpolicy=onpolicy, quant=quant, coalesce=coalesce,
-                         telemetry=telemetry, _offer_shm=_is_loopback(peer))
+                         telemetry=telemetry, _offer_shm=_is_loopback(peer),
+                         reconnect=reconnect,
+                         failover_addresses=failover_addresses,
+                         host_id=host_id)
 
     @property
     def shm_active(self) -> bool:
@@ -913,6 +1093,17 @@ class ShmTransport(SyncSocketTransport):
             if deadline is not None and time.perf_counter() >= deadline:
                 raise queue.Empty
             self._backoff.wait()
+
+    def _pre_reconnect(self):
+        """Rings are per-connection state: unlink the old pair so the
+        post-reconnect HELLO grant creates a FRESH pair (`_post_hello`
+        skips creation only while `_c2s` is set). The gateway side closed
+        its attachments when the old reader died."""
+        for ring in (self._c2s, self._s2c):
+            if ring is not None:
+                ring.unlink()    # client created them, client unlinks
+        self._c2s = self._s2c = None
+        self._backoff.reset()
 
     def close(self):
         super().close()          # flush trajectories, sever TCP
@@ -1053,6 +1244,24 @@ class InferenceGateway:
             sock.close()
         for t in self._threads:
             t.join(timeout=5.0)
+
+    def sever_connection(self, index: int = 0) -> bool:
+        """Fault-injection / ops hook: forcibly shut down one LIVE client
+        connection (`index` into the live set, modulo). The reader thread
+        takes the normal sever path — error recorded, postmortem filed —
+        and a client with a reconnect policy re-dials; one without poisons
+        fail-fast, exactly as if the wire had been cut by the network.
+        Returns False when no live connection exists."""
+        with self._lock:
+            live = [s for s in self._conns if s.fileno() != -1]
+            if not live:
+                return False
+            sock = live[index % len(live)]
+        try:
+            sock.shutdown(_socket.SHUT_RDWR)
+        except OSError:
+            pass
+        return True
 
     def _accept_loop(self):
         while not self._stop.is_set():

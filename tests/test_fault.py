@@ -1,0 +1,456 @@
+"""Survivable serving plane tests: backoff math, restart budgets,
+checkpoint failure surfacing, the fault half of the frame ledger,
+transport failover, deterministic chaos schedules — and the two
+acceptance e2es: a chaos-injected vtrace socket run (actor host KILLED
+and a gateway connection SEVERED mid-training) that must complete with
+an exactly conserved ledger, and a learner crash + `SeedSystem.resume()`
+round-trip with bit-exact restored params and a monotonic
+`param_version`.
+"""
+
+import json
+import os
+import socket
+import threading
+import time
+import urllib.error
+import urllib.request
+
+import jax
+import numpy as np
+import pytest
+
+from repro.checkpoint import CheckpointManager
+from repro.checkpoint.ckpt import restore_pytree
+from repro.core.learner import Learner
+from repro.core.system import SeedSystem
+from repro.envs.catch import CatchEnv
+from repro.fault import (BackoffPolicy, ChaosEvent, ChaosMonkey,
+                         RestartBudget)
+from repro.onpolicy import TrajectoryQueue, VTraceLearner, mlp_actor_critic
+from repro.optim import adamw
+from repro.telemetry import Telemetry
+from repro.transport.socket import SyncSocketTransport
+
+OBS_DIM = 50
+
+
+# ----------------------------------------------------------- backoff math
+
+def test_backoff_no_jitter_is_exact_doubling_to_cap():
+    p = BackoffPolicy(base_s=0.05, cap_s=0.4, max_retries=6, jitter=0.0)
+    assert list(p.delays()) == pytest.approx(
+        [0.05, 0.1, 0.2, 0.4, 0.4, 0.4])
+
+
+def test_backoff_validation():
+    with pytest.raises(ValueError):
+        BackoffPolicy(base_s=2.0, cap_s=1.0)
+    with pytest.raises(ValueError):
+        BackoffPolicy(max_retries=-1)
+    with pytest.raises(ValueError):
+        BackoffPolicy(jitter=1.5)
+
+
+def _check_backoff_properties(base, cap, retries, jitter, seed):
+    """Never exceeds the cap, gives up after exactly max_retries, stays
+    strictly positive, and is deterministic under a seed."""
+    p = BackoffPolicy(base_s=base, cap_s=cap, max_retries=retries,
+                      jitter=jitter, seed=seed)
+    d1 = list(p.delays())
+    assert d1 == list(p.delays())            # same seed -> same schedule
+    assert len(d1) == retries                # gives up, never loops forever
+    for d in d1:
+        assert 0.0 < d <= cap
+
+
+def test_backoff_properties_seeded_sweep():
+    """Deterministic sweep of the property (always runs, even without
+    hypothesis — the container has no hypothesis wheel, CI does)."""
+    import random
+    rng = random.Random(0)
+    for _ in range(60):
+        _check_backoff_properties(rng.uniform(1e-3, 1.0),
+                                  rng.uniform(1.0, 8.0),
+                                  rng.randrange(13),
+                                  rng.uniform(0.0, 1.0),
+                                  rng.randrange(2 ** 31))
+
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:
+    pass
+else:
+    @settings(deadline=None, max_examples=40)
+    @given(st.floats(1e-3, 1.0), st.floats(1.0, 8.0), st.integers(0, 12),
+           st.floats(0.0, 1.0), st.integers(0, 2 ** 31 - 1))
+    def test_backoff_properties(base, cap, retries, jitter, seed):
+        _check_backoff_properties(base, cap, retries, jitter, seed)
+
+
+# --------------------------------------------------------- restart budget
+
+def test_restart_budget_window():
+    b = RestartBudget(max_restarts=2, window_s=1.0)
+    assert b.spend(now=0.0)
+    assert b.spend(now=0.1)
+    assert not b.spend(now=0.2)              # 3rd inside the window: over
+    assert b.spend(now=5.0)                  # old spends aged out
+    assert b.spent == 1
+
+
+# ------------------------------------- checkpoint async failure surfacing
+
+def _block_step(mgr: CheckpointManager, step: int):
+    """Make the NEXT save of `step` fail: plant a plain FILE where the
+    atomic-save staging directory must go (os.makedirs then raises).
+    chmod tricks don't work here — the test container runs as root,
+    which ignores directory write bits."""
+    open(mgr._step_dir(step) + ".tmp", "w").close()
+
+
+def test_async_save_failure_reraised_on_next_save(tmp_path):
+    mgr = CheckpointManager(str(tmp_path / "ck"))
+    state = {"w": np.arange(3.0)}
+    mgr.save(state, 1)
+    mgr.wait()
+    assert mgr.saves == 1
+    _block_step(mgr, 2)
+    mgr.save(state, 2)                       # async thread fails silently…
+    with pytest.raises(RuntimeError, match="async checkpoint save failed"):
+        mgr.save(state, 3)                   # …and surfaces HERE
+    # the failure is consumed: the manager keeps working afterwards
+    mgr.save(state, 3)
+    mgr.wait()
+    assert mgr.latest_step() == 3
+    restored, step = mgr.restore({"w": np.zeros(3)})
+    assert step == 3 and np.array_equal(restored["w"], state["w"])
+    assert mgr.restores == 1
+
+
+def test_async_save_failure_reraised_on_wait(tmp_path):
+    mgr = CheckpointManager(str(tmp_path / "ck"))
+    _block_step(mgr, 1)
+    mgr.save({"w": np.zeros(2)}, 1)
+    with pytest.raises(RuntimeError, match="async checkpoint save failed"):
+        mgr.wait()
+
+
+# -------------------------------------------- time-based learner cadence
+
+def test_learner_time_based_checkpointing(tmp_path):
+    mgr = CheckpointManager(str(tmp_path / "ck"), async_save=False)
+    state = {"params": np.zeros(2), "step": np.asarray(0)}
+
+    def train(s, batch):
+        return {"params": s["params"] + 1, "step": s["step"] + 1}, {}
+
+    ln = Learner(train, state, lambda: ({}, None),
+                 checkpoint_manager=mgr, checkpoint_every_s=0.05)
+    ln.run_steps(1)                          # cadence not due yet
+    assert mgr.saves == 0
+    time.sleep(0.06)
+    ln.run_steps(1)                          # now it is
+    assert mgr.saves == 1 and mgr.latest_step() == 2
+
+
+# ------------------------------------------- fault half of the ledger
+
+def _unroll(frames=5):
+    return {"rewards": np.zeros(frames, np.float32)}
+
+
+def test_queue_drop_pending_counts_fault_and_conserves():
+    q = TrajectoryQueue(8)
+    for _ in range(3):
+        q.put(_unroll())
+    assert q.stats()["frames_pending"] == 15
+    assert q.drop_pending() == 15
+    s = q.stats()
+    assert s["frames_dropped_fault"] == 15
+    assert s["frames_pending"] == 0
+    assert s["frames_generated"] == (s["frames_trained"]
+                                     + s["frames_dropped"]
+                                     + s["frames_pending"])
+
+
+def test_queue_reopen_admits_again_with_cumulative_ledger():
+    q = TrajectoryQueue(8)
+    q.close()
+    q.put(_unroll())                         # shutdown drop
+    q.reopen()
+    q.put(_unroll())                         # admitted again
+    s = q.stats()
+    assert s["frames_dropped_shutdown"] == 5
+    assert s["frames_pending"] == 5
+    assert s["frames_generated"] == 10       # counters carried across
+    assert s["frames_generated"] == (s["frames_trained"]
+                                     + s["frames_dropped"]
+                                     + s["frames_pending"])
+
+
+# ------------------------------------------------- transport failover
+
+def _tcp_pair():
+    """A connected loopback TCP pair (socketpair is AF_UNIX, which the
+    transport's TCP_NODELAY setsockopt rejects)."""
+    lst = socket.socket()
+    lst.bind(("127.0.0.1", 0))
+    lst.listen(1)
+    a = socket.create_connection(lst.getsockname())
+    b, _ = lst.accept()
+    lst.close()
+    return a, b
+
+
+def test_pick_address_rehashes_over_survivors():
+    a, b = _tcp_pair()
+    try:
+        tr = SyncSocketTransport(
+            a, reconnect=BackoffPolicy(max_retries=1),
+            failover_addresses=[("127.0.0.1", 1), ("127.0.0.1", 2)],
+            host_id=3)
+        tr._dialed_address = ("127.0.0.1", 2)
+        assert tr._pick_address() == ("127.0.0.1", 2)   # 3 % 2 -> idx 1
+        tr._dead_addresses.add(("127.0.0.1", 2))
+        assert tr._pick_address() == ("127.0.0.1", 1)   # re-hash over live
+        tr._dead_addresses.add(("127.0.0.1", 1))
+        # everything dead: marks forgotten, full list retried
+        assert tr._pick_address() == ("127.0.0.1", 2)
+    finally:
+        a.close()
+        b.close()
+
+
+def test_recover_is_opt_in_and_flap_guarded():
+    a, b = _tcp_pair()
+    try:
+        tr = SyncSocketTransport(a)          # reconnect=None: historical
+        tr.error = "wire cut"
+        assert tr._recover() is False        # fail-fast preserved
+        c, d = _tcp_pair()
+        try:
+            tr2 = SyncSocketTransport(c, reconnect=BackoffPolicy(
+                base_s=0.001, cap_s=0.002, max_retries=1))
+            tr2.error = "wire cut"
+            tr2._consec_recoveries = 8       # flapping: plane is gone
+            assert tr2._recover() is False
+            assert "consecutive-recovery cap" in tr2.error
+        finally:
+            c.close()
+            d.close()
+    finally:
+        a.close()
+        b.close()
+
+
+# --------------------------------------------------- chaos schedules
+
+def test_chaos_schedule_is_deterministic_under_seed():
+    a = ChaosMonkey.random(seed=7, horizon_s=10.0)
+    b = ChaosMonkey.random(seed=7, horizon_s=10.0)
+    assert a.events == b.events
+    assert a.events == sorted(a.events, key=lambda e: e.at_s)
+    c = ChaosMonkey.random(seed=8, horizon_s=10.0)
+    assert a.events != c.events
+
+
+def test_chaos_event_validation():
+    with pytest.raises(ValueError):
+        ChaosEvent(0.5, "explode_sun")
+    with pytest.raises(ValueError):
+        ChaosEvent(-1.0, "kill_actor_host")
+
+
+# ------------------------------------------------------------- helpers
+
+def _http_get(url, timeout=5.0):
+    try:
+        with urllib.request.urlopen(url, timeout=timeout) as resp:
+            return resp.status, resp.read().decode()
+    except urllib.error.HTTPError as e:
+        return e.code, e.read().decode()
+
+
+def _vtrace_parts():
+    init_fn, apply_fn = mlp_actor_critic(OBS_DIM, 3)
+    vl = VTraceLearner(apply_fn, adamw(1e-3))
+    params = init_fn(jax.random.PRNGKey(0))
+    state = vl.init_state(params)
+    policy = vl.sampling_policy(params)
+    for lanes in (4, 8):
+        policy(np.zeros((lanes, OBS_DIM), np.float32), None)
+    vl.warmup(state, batch_size=4, unroll=8, obs_shape=(OBS_DIM,))
+    return vl, state, policy
+
+
+# -------------------------- acceptance: learner crash + resume round-trip
+
+def test_learner_crash_checkpoint_resume_roundtrip(tmp_path):
+    """Acceptance: crash the learner mid-run (SimulatedFailure via the
+    chaos seam), `resume()` from the live-loop checkpoints, and continue:
+    restored params are bit-exact, `param_version` stays monotonic, and
+    the frame ledger remains conserved across the crash boundary."""
+    vl, state, policy = _vtrace_parts()
+    sys_ = SeedSystem(env_factory=CatchEnv, policy_step=policy,
+                      num_actors=2, unroll=8, envs_per_actor=4,
+                      deadline_ms=1.0, algo="vtrace",
+                      train_step=vl.train_step, state=state,
+                      learner_batch=4, policy_publish=policy.publish,
+                      checkpoint_dir=str(tmp_path / "ck"),
+                      checkpoint_every=1)
+    sys_.warmup()
+    monkey = ChaosMonkey.scripted(ChaosEvent(0.6, "crash_learner_step"))
+    monkey.start(sys_)
+    stats = sys_.run(seconds=1.5)
+    monkey.stop()
+    assert monkey.injected and monkey.injected[0][2], monkey.injected
+    assert stats["learner_error"] is not None
+    assert "SimulatedFailure" in stats["learner_error"]
+    steps_before_crash = stats["learner_steps"]
+    assert steps_before_crash > 0, "learner never stepped before the crash"
+    mgr = sys_._ckpt
+    mgr.wait()
+    assert mgr.saves > 0, "no live-loop checkpoint landed before the crash"
+    latest = mgr.latest_step()
+    expected = restore_pytree(sys_.learner.state,
+                              mgr._step_dir(latest))
+
+    version = sys_.resume()
+    # monotonic across the crash: never republished below what actors saw
+    assert version >= steps_before_crash >= latest
+    assert sys_._version() == version
+    assert sys_.learner.error is None
+    # bit-exact: the restored params ARE the checkpointed ones
+    for got, want in zip(jax.tree_util.tree_leaves(
+            sys_.learner.state["params"]),
+            jax.tree_util.tree_leaves(expected["params"])):
+        assert np.array_equal(np.asarray(got), np.asarray(want))
+    assert sys_.throughput(1.0)["recovery"]["checkpoint_restores"] == 1
+
+    stats2 = sys_.run(seconds=1.0)
+    assert stats2["learner_error"] is None
+    assert stats2["learner_steps"] > version, \
+        "resumed learner never trained"
+    onp = stats2["onpolicy"]
+    assert onp["frames_generated"] == (onp["frames_trained"]
+                                       + onp["frames_dropped"]
+                                       + onp["frames_pending"])
+    assert onp["frames_pending"] == 0
+
+
+# ------------------------- acceptance: chaos e2e on the socket transport
+
+def test_chaos_kill_and_sever_run_survives_with_exact_ledger(tmp_path):
+    """Acceptance e2e: mid-vtrace-training over the socket transport, a
+    chaos schedule KILLS an actor host (SIGKILL) and SEVERS a gateway
+    connection. The run must complete with zero host errors, the killed
+    host respawned once (same host_id — slot table still within budget),
+    the severed client reconnected, /healthz observed degraded mid-run
+    and healthy at the end, and the frame ledger EXACTLY conserved with
+    nothing pending."""
+    vl, state, policy = _vtrace_parts()
+    tel = Telemetry(process_name="learner", out_dir=str(tmp_path))
+    tel.health.event_window_s = 3.0      # fault events age out before the
+    #                                      final healthz check below
+    sys_ = SeedSystem(env_factory=CatchEnv, policy_step=policy,
+                      num_actors=2, unroll=8, envs_per_actor=4,
+                      deadline_ms=1.0, algo="vtrace", max_param_lag=100,
+                      train_step=vl.train_step, state=state,
+                      learner_batch=4, policy_publish=policy.publish,
+                      transport="socket", num_actor_hosts=2,
+                      num_gateways=2, telemetry=tel, ops_port=0,
+                      supervise_hosts=True, host_stall_s=4.0,
+                      wire_reconnect=BackoffPolicy(base_s=0.05, cap_s=0.5,
+                                                   max_retries=8, seed=0))
+    host, port = sys_.ops_address
+    base = f"http://{host}:{port}"
+    verdicts = set()
+    done = threading.Event()
+
+    def _poll():
+        while not done.wait(0.25):
+            try:
+                _, hz = _http_get(base + "/healthz")
+                verdicts.add(json.loads(hz)["verdict"])
+            except Exception:
+                pass
+
+    # the chaos anchor is adaptive (spawned children pay jax import +
+    # jit warmup before serving) but the schedule itself is fixed data:
+    # kill host 0 at +0.5s, sever a connection on gateway 1 at +2.5s —
+    # host 1 hashes to gateway 1, so the surviving host's transport is
+    # the one that must reconnect and report it.
+    monkey = ChaosMonkey.scripted(
+        ChaosEvent(0.5, "kill_actor_host", target=0),
+        ChaosEvent(2.5, "sever_gateway_conn", target=1))
+    threading.Thread(target=_poll, daemon=True).start()
+
+    def _arm_when_hosts_up():
+        deadline = time.perf_counter() + 60.0
+        while time.perf_counter() < deadline:
+            try:
+                _, hz = _http_get(base + "/healthz")
+                comps = json.loads(hz)["components"]
+                if "actor-host-0" in comps and "actor-host-1" in comps:
+                    monkey.start(sys_)
+                    return
+            except Exception:
+                pass
+            time.sleep(0.2)
+
+    threading.Thread(target=_arm_when_hosts_up, daemon=True).start()
+    try:
+        stats = sys_.run(seconds=12.0)
+    finally:
+        done.set()
+        monkey.stop()
+    try:
+        assert [i for i in monkey.injected if not i[2]] == [], \
+            monkey.injected
+        assert len(monkey.injected) == 2, monkey.injected
+        assert stats["host_errors"] == [], stats["host_errors"]
+        assert stats["learner_steps"] > 0
+        rec = stats["recovery"]
+        assert rec["host_faults"] >= 1
+        assert rec["host_restarts"] >= 1
+        assert rec["reconnects"] >= 1
+        # the respawned incarnation (epoch >= 1) produced real frames
+        assert any(s.get("epoch", 0) >= 1 and s["frames"] > 0
+                   for s in sys_.pool.last_stats), sys_.pool.last_stats
+        # slot re-adoption: same host_id/actor_ids means the slot table
+        # never grew past the lane budget
+        assert sys_.server.num_slots <= \
+            sys_.num_actors * sys_.envs_per_actor
+        # EXACT conservation, nothing pending, and the fault drops are in
+        # the dropped total — the dead host's frames were never trained
+        onp = stats["onpolicy"]
+        assert onp["frames_generated"] == (onp["frames_trained"]
+                                           + onp["frames_dropped"]
+                                           + onp["frames_pending"])
+        assert onp["frames_pending"] == 0
+        assert onp["frames_dropped_fault"] == \
+            rec["frames_dropped_by_fault"]
+        assert tel.auditor.violations == [], tel.auditor.violations
+        # the deaths were OBSERVABLE (degraded seen mid-run)…
+        assert "degraded" in verdicts, verdicts
+        # …and a postmortem bundle was filed for the host death
+        assert any("host_death" in b for b in tel.flightrec.bundles), \
+            tel.flightrec.bundles
+        # …but the system healed: final verdict healthy once events aged
+        deadline = time.perf_counter() + 5.0
+        while time.perf_counter() < deadline:
+            status, hz = _http_get(base + "/healthz")
+            if status == 200 and json.loads(hz)["verdict"] == "healthy":
+                break
+            time.sleep(0.25)
+        else:
+            pytest.fail(f"healthz never healed: {hz}")
+        # recovery counters are scrape-atomic alongside the ledger
+        _, vz = _http_get(base + "/varz")
+        varz = json.loads(vz)
+        assert varz["stats"]["recovery"]["host_restarts"] == \
+            rec["host_restarts"]
+    finally:
+        sys_.stop_ops()

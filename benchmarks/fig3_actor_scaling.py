@@ -346,7 +346,8 @@ def run_telemetry(args, sec, out_dir="."):
     """
     import threading
 
-    from repro.telemetry import (Telemetry, merge_bench_json,
+    from repro.telemetry import (Telemetry, append_bench_history,
+                                 bench_commit, merge_bench_json,
                                  validate_prometheus)
 
     seconds = max(sec * 4, 1.2) if args.smoke else 4.0
@@ -493,6 +494,11 @@ def run_telemetry(args, sec, out_dir="."):
     }
     merge_bench_json(os.path.join(out_dir, "BENCH_telemetry.json"),
                      "fig3_telemetry", payload)
+    append_bench_history(
+        os.path.join(out_dir, "BENCH_history.json"), "fig3_telemetry",
+        {"commit": bench_commit(), "ts": time.time(),
+         "frames_per_s": stats["env_frames_per_s"],
+         "smoke": bool(args.smoke)})
 
     print("# fig3g: telemetry validation (socket transport, 2 hosts)")
     print("name,value,derived")
@@ -725,6 +731,241 @@ def run_chaos(args, sec, out_dir="."):
     print("fig3h_ok,1,all chaos checks passed")
 
 
+def _autoscale_overhead_gate(repeats=3, seconds=0.8):
+    """The closed loop must be free while it merely watches: an in-proc
+    run with the autoscale controller ARMED (sensing, deciding, logging
+    every tick — but with no pool to resize) must cost < 3% best-of-N
+    frames/s vs the identical telemetry-only run."""
+    from repro.autoscale import AutoscaleConfig
+    from repro.telemetry import Telemetry
+
+    def best_fps(armed):
+        best = 0.0
+        for _ in range(repeats):
+            kw = {"autoscale": AutoscaleConfig(interval_s=0.25)} \
+                if armed else {}
+            tel = Telemetry(process_name="learner")
+            sys_ = SeedSystem(
+                env_factory=CatchEnv, policy_step=_telemetry_policy,
+                num_actors=2, unroll=8, envs_per_actor=2,
+                deadline_ms=2.0, telemetry=tel, **kw)
+            sys_.warmup()
+            stats = sys_.run(seconds=seconds, with_learner=False)
+            best = max(best, stats["env_frames_per_s"])
+        return best
+
+    base = best_fps(False)       # telemetry only, controller absent
+    armed = best_fps(True)       # controller sensing/deciding every tick
+    overhead = 1.0 - armed / base if base > 0 else 0.0
+    return base, armed, overhead
+
+
+def run_autoscale(args, sec, out_dir="."):
+    """Part (i): the closed-loop elastic autoscaler, end to end.
+
+    A DELIBERATELY actor-bound vtrace socket run (FlatSimEnv burns real
+    CPU per step behind a flat observation; one actor host to start) runs
+    with `SeedSystem(autoscale=AutoscaleConfig(...))` armed. Gates:
+
+    - the controller grows actor hosts until the live BottleneckReport
+      flips away from actor-bound OR the host cap binds (a saturated
+      ``grow_hosts`` decision) — the convergence criterion;
+    - at least one grow was actually applied, and EVERY applied resize
+      has a decision-log entry scrapeable at ``/autoscaler`` carrying its
+      evidence (trigger series, bottleneck class, SLO verdicts, topology
+      before/after);
+    - the frame ledger stays exactly conserved across the topology
+      changes (generated == trained + dropped + pending, pending == 0);
+    - the armed-but-idle controller costs < 3% frames/s vs autoscale-off
+      (in-proc best-of-N pair).
+
+    Appends ``{commit, frames_per_s}`` into ``BENCH_history.json`` (the
+    `check_trend.py` guard's input) and the full evidence payload into
+    ``BENCH_telemetry.json`` under ``fig3_autoscale``; exits nonzero on
+    any failed check (CI runs ``--smoke --autoscale`` under a hard
+    timeout).
+    """
+    import functools
+    import threading
+
+    import jax
+
+    from repro.autoscale import AutoscaleConfig
+    from repro.envs.alesim import FlatSimEnv
+    from repro.onpolicy import VTraceLearner, mlp_actor_critic
+    from repro.optim import adamw
+    from repro.telemetry import (Telemetry, append_bench_history,
+                                 bench_commit, merge_bench_json)
+
+    failures = []
+
+    def check(ok, what):
+        if not ok:
+            failures.append(what)
+        return ok
+
+    os.makedirs(out_dir, exist_ok=True)
+    env_factory = functools.partial(FlatSimEnv, step_cost=20000)
+    obs_dim = FlatSimEnv().obs_dim
+    init_fn, apply_fn = mlp_actor_critic(obs_dim, FlatSimEnv.num_actions)
+    vl = VTraceLearner(apply_fn, adamw(1e-3))
+    params = init_fn(jax.random.PRNGKey(0))
+    state = vl.init_state(params)
+    policy = vl.sampling_policy(params)
+    for lanes in (4, 8, 16):
+        policy(np.zeros((lanes, obs_dim), np.float32), None)
+    vl.warmup(state, batch_size=2, unroll=8, obs_shape=(obs_dim,))
+    tel = Telemetry(process_name="learner", out_dir=out_dir)
+    # generous staleness bound + small learner batch: the learner must
+    # keep up, so the window stays ACTOR-bound (the premise under test)
+    sys_ = SeedSystem(env_factory=env_factory, policy_step=policy,
+                      num_actors=4, unroll=8, envs_per_actor=2,
+                      deadline_ms=2.0, algo="vtrace",
+                      train_step=vl.train_step, state=state,
+                      learner_batch=2, max_param_lag=10 ** 6,
+                      policy_publish=policy.publish,
+                      transport="socket", num_actor_hosts=1,
+                      telemetry=tel, ops_port=0,
+                      autoscale=AutoscaleConfig(
+                          interval_s=0.25, max_hosts=3,
+                          grow_after_ticks=2, cooldown_s=1.5,
+                          churn_window_s=2.0))
+    ops_host, ops_port = sys_.ops_address
+    base_url = f"http://{ops_host}:{ops_port}"
+    seconds = 8.0 if args.smoke else 12.0
+    scrapes = {"autoscaler": [], "timeseries": [], "errors": []}
+    done = threading.Event()
+
+    def _scrape_loop():
+        while not done.wait(0.4):
+            try:
+                _, body = _http_get(base_url + "/autoscaler")
+                scrapes["autoscaler"].append(json.loads(body))
+                _, ts = _http_get(base_url + "/timeseries?window=30")
+                scrapes["timeseries"].append(json.loads(ts))
+            except Exception as e:       # noqa: BLE001 — recorded, checked
+                scrapes["errors"].append(str(e))
+
+    threading.Thread(target=_scrape_loop, daemon=True).start()
+    try:
+        stats = sys_.run(seconds=seconds)
+    finally:
+        done.set()
+    # final scrape AFTER the window: the complete decision log, over HTTP
+    # (the acceptance path — not the in-process object)
+    status, body = _http_get(base_url + "/autoscaler", timeout=5.0)
+    final = json.loads(body) if status == 200 else {}
+    sys_.stop_ops()
+
+    check(status == 200, f"/autoscaler returned {status}")
+    check(stats["host_errors"] == [],
+          f"host errors: {stats['host_errors']}")
+    check(stats["learner_steps"] > 0, "learner never stepped")
+
+    # conserved ledger across grow (and any drain)
+    onp = stats["onpolicy"]
+    check(onp["frames_generated"] == (onp["frames_trained"]
+                                      + onp["frames_dropped"]
+                                      + onp["frames_pending"]),
+          f"frame ledger NOT conserved across resizes: {onp}")
+    check(onp["frames_pending"] == 0,
+          f"frames still pending at rest: {onp['frames_pending']}")
+
+    # convergence: grew, then flipped away from actor-bound or hit the cap
+    entries = final.get("decisions", {}).get("entries", [])
+    grown = stats.get("hosts_grown", 0)
+    applied_total = sum(final.get("actions_applied", {}).values())
+    check(grown >= 1, f"actor-bound run never grew a host "
+                      f"(hosts_grown={grown})")
+    saturated = any(e["action"]["saturated"]
+                    and e["action"]["candidate"] == "grow_hosts"
+                    for e in entries)
+    tail = [e["bottleneck"].get("bottleneck") for e in entries[-8:]]
+    flipped = bool(tail) and tail[-1] != "actor-bound"
+    check(saturated or flipped,
+          f"no convergence: never saturated grow_hosts nor flipped away "
+          f"from actor-bound (tail classes: {tail})")
+
+    # every applied resize is scrapeable evidence at /autoscaler
+    applied_entries = [e for e in entries if e.get("applied")]
+    check(len(applied_entries) == applied_total,
+          f"{applied_total} applied actions but {len(applied_entries)} "
+          f"applied decision-log entries scraped")
+    for e in applied_entries:
+        ok = (e.get("trigger") and "bottleneck" in e
+              and "slo" in e and "topology_before" in e
+              and "topology_after" in e)
+        check(ok, f"applied decision entry missing evidence: "
+                  f"{sorted(e.keys())}")
+    check(bool(scrapes["autoscaler"]),
+          f"no mid-run /autoscaler scrape landed "
+          f"(errors: {scrapes['errors'][:3]})")
+    series_seen = set()
+    for ts_doc in scrapes["timeseries"][-1:]:
+        series_seen = set(ts_doc.get("series", {}))
+    check("frames_generated" in series_seen,
+          f"/timeseries missing frames_generated (saw {sorted(series_seen)[:8]})")
+
+    # armed-but-idle controller overhead (in-proc best-of-N pair)
+    fps_off, fps_armed, frac = _autoscale_overhead_gate(
+        seconds=max(sec * 2, 0.6))
+    check(frac < 0.03,
+          f"armed-but-idle autoscaler costs {frac:.1%} frames/s "
+          f"({fps_armed:.0f} vs {fps_off:.0f}) — gate is 3%")
+
+    payload = {
+        "seconds": seconds,
+        "env_frames": stats["env_frames"],
+        "env_frames_per_s": stats["env_frames_per_s"],
+        "learner_steps": stats["learner_steps"],
+        "hosts_grown": grown,
+        "hosts_drained": stats.get("hosts_drained", 0),
+        "actor_hosts_live": stats.get("actor_hosts_live"),
+        "actions_applied": final.get("actions_applied", {}),
+        "decision_entries": len(entries),
+        "converged_by": ("saturated" if saturated else
+                         "flipped" if flipped else "none"),
+        "ledger": {k: onp[k] for k in
+                   ("frames_generated", "frames_trained", "frames_dropped",
+                    "frames_pending")},
+        "fps_autoscale_off": fps_off,
+        "fps_autoscale_armed": fps_armed,
+        "autoscale_overhead_frac": frac,
+        "failures": failures,
+    }
+    merge_bench_json(os.path.join(out_dir, "BENCH_telemetry.json"),
+                     "fig3_autoscale", payload)
+    append_bench_history(
+        os.path.join(out_dir, "BENCH_history.json"), "fig3_autoscale",
+        {"commit": bench_commit(), "ts": time.time(),
+         "frames_per_s": stats["env_frames_per_s"],
+         "smoke": bool(args.smoke)})
+
+    print("# fig3i: closed-loop autoscaler (vtrace, socket, actor-bound)")
+    print("name,value,derived")
+    print(f"fig3i_frames_per_s,{stats['env_frames_per_s']:.1f},"
+          f"frames={stats['env_frames']} "
+          f"learner_steps={stats['learner_steps']}")
+    print(f"fig3i_hosts_grown,{grown},"
+          f"live={stats.get('actor_hosts_live')} "
+          f"drained={stats.get('hosts_drained', 0)} cap=3")
+    print(f"fig3i_decisions,{len(entries)},"
+          f"applied={applied_total} "
+          f"converged_by={payload['converged_by']}")
+    print(f"fig3i_ledger,{onp['frames_generated']},"
+          f"trained={onp['frames_trained']} "
+          f"dropped={onp['frames_dropped']} pending={onp['frames_pending']}")
+    print(f"fig3i_scrapes,{len(scrapes['autoscaler'])},"
+          f"mid-run /autoscaler + /timeseries")
+    print(f"fig3i_overhead_pct,{100.0 * frac:.2f},"
+          f"armed={fps_armed:.0f} off={fps_off:.0f} gate=3%")
+    if failures:
+        for f_ in failures:
+            print(f"fig3i_FAIL,1,{f_}")
+        sys.exit(1)
+    print("fig3i_ok,1,all autoscale checks passed")
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
@@ -741,9 +982,15 @@ def main():
                     help="part (h): chaos-injected vtrace socket run "
                          "(host killed + gateway conn severed) gating the "
                          "conserved ledger and fault-path overhead")
+    ap.add_argument("--autoscale", action="store_true",
+                    help="part (i): deliberately actor-bound vtrace socket "
+                         "run under the closed-loop autoscaler, gating "
+                         "convergence, /autoscaler decision evidence, the "
+                         "conserved ledger and armed-idle overhead")
     ap.add_argument("--out-dir", default=".",
-                    help="where --telemetry/--chaos write trace.json, "
-                         "metrics.jsonl and BENCH_telemetry.json")
+                    help="where --telemetry/--chaos/--autoscale write "
+                         "trace.json, metrics.jsonl, BENCH_telemetry.json "
+                         "and BENCH_history.json")
     args = ap.parse_args()
     sec = 0.3 if args.smoke else 1.2
     if args.telemetry:
@@ -751,6 +998,9 @@ def main():
         return
     if args.chaos:
         run_chaos(args, sec, out_dir=args.out_dir)
+        return
+    if args.autoscale:
+        run_autoscale(args, sec, out_dir=args.out_dir)
         return
     if args.algo == "vtrace":
         run_vtrace(args, sec)

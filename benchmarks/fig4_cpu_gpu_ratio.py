@@ -20,6 +20,7 @@ import argparse
 import json
 import os
 import sys
+import time
 
 import numpy as np
 
@@ -344,6 +345,17 @@ def main():
         json.dump(bench, f, indent=2, sort_keys=True)
         f.write("\n")
     print(f"# wrote {out}")
+    # trend-guard history: one point per wire transport measured this run
+    # (BENCH_wire.json above is wholesale-replaced; the history ledger
+    # accumulates — see benchmarks/check_trend.py)
+    from repro.telemetry import append_bench_history, bench_commit
+    hist_path = os.path.join(os.path.dirname(out), "BENCH_history.json")
+    for wire_t in wire_transports[1:]:
+        if fps.get(wire_t, 0) > 0:
+            append_bench_history(
+                hist_path, f"fig4_{wire_t}",
+                {"commit": bench_commit(), "ts": time.time(),
+                 "frames_per_s": fps[wire_t], "smoke": bool(args.smoke)})
     if gate_failed and "shm" in wire_transports:
         print(f"fig4_shm_gate,FAIL,{gate_failed}")
         sys.exit(1)

@@ -1,0 +1,23 @@
+"""Elastic control plane: the closed loop that RESIZES.
+
+PR 7 built the senses (registry, bottleneck attribution), PR 8 the live
+scrape plane, PR 9 the survival plane; this package closes the ROADMAP's
+"elastic control plane" item with the half that acts: a hysteresis
+policy (`policy.py`) mapping the live `BottleneckReport` class + SLO
+burn state to a resize recommendation, and a controller thread
+(`controller.py`) that drives the seams that already exist —
+`ActorHostPool.request_grow`/`request_drain` and
+`InferenceServer.set_active_replicas` — while logging every decision
+with its evidence at the ``/autoscaler`` ops endpoint.
+
+Opt-in via ``SeedSystem(autoscale=AutoscaleConfig(...))``; fully inert
+by default.
+"""
+
+from .policy import Action, AutoscaleConfig, AutoscalePolicy, PolicyInputs
+from .controller import AutoscaleController, DecisionLog
+
+__all__ = [
+    "Action", "AutoscaleConfig", "AutoscalePolicy", "PolicyInputs",
+    "AutoscaleController", "DecisionLog",
+]

@@ -292,6 +292,13 @@ class InferenceServer:
         budget = -(-max_batch // num_replicas)
         self._replicas = [_Replica(self, k, budget)
                           for k in range(num_replicas)]
+        # elastic activation: routing spreads actors over the first
+        # `active_replicas` workers only; the rest stay started but idle
+        # (their queues drain, then _collect just times out). The
+        # autoscaler raises/lowers this within [1, num_replicas].
+        self._active = num_replicas
+        self.metrics.gauge("inference/active_replicas",
+                           fn=lambda: self._active)
         self._stop = threading.Event()
         self._slots: Dict[Tuple[int, int], int] = {}   # (actor, lane) -> slot
         self._slot_cache: Dict[Tuple[int, int], np.ndarray] = {}
@@ -301,12 +308,37 @@ class InferenceServer:
     # ------------------------------------------------------------- routing
 
     def replica_for(self, actor_id: int) -> int:
-        """STABLE actor -> replica hash: the whole point of sharding the
-        dense slot table is that a lane's recurrent state never migrates,
-        so this must be a pure function of actor_id (not load, not time).
-        Plain modulo also spreads the contiguous actor-id blocks that
-        `ActorHostPool` assigns per host across all replicas."""
-        return actor_id % self.num_replicas
+        """STABLE actor -> replica hash over the ACTIVE worker count: the
+        whole point of sharding the dense slot table is that a lane's
+        recurrent state is never touched by two replicas at once, so
+        between resizes this must be a pure function of actor_id (not
+        load, not time). Plain modulo also spreads the contiguous
+        actor-id blocks that `ActorHostPool` assigns per host across all
+        active replicas.
+
+        A resize re-homes some actors to a different replica, which is
+        safe under the system's one-in-flight-request-per-actor
+        discipline: an actor's next request is only routed after its
+        previous reply was delivered, so the old replica has finished
+        with that actor's slot rows before the new one can see them —
+        stickiness holds at every instant even though the mapping moves.
+        """
+        return actor_id % self._active
+
+    @property
+    def active_replicas(self) -> int:
+        return self._active
+
+    def set_active_replicas(self, n: int) -> int:
+        """Activate/drain replica workers, clamped to [1, num_replicas]
+        (capacity can only be toggled, never built: every worker thread,
+        queue, and lane-budget shard was constructed up front). Draining
+        is passive — routing stops sending to the tail workers and their
+        queues empty naturally; no request is dropped or re-queued.
+        Returns the resulting active count."""
+        n = max(1, min(int(n), self.num_replicas))
+        self._active = n
+        return n
 
     # ------------------------------------------------------------ lifecycle
 

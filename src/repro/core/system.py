@@ -74,6 +74,22 @@ from repro.core.inference import InferenceServer
 from repro.core.learner import BatchSourceClosed, Learner
 from repro.core.replay import PrioritizedReplay
 
+# /varz document schema (bumped when top-level keys change so external
+# scrapers can dispatch): 2 = schema_version/uptime_s + always-present
+# onpolicy/recovery stats keys + optional autoscale block
+VARZ_SCHEMA_VERSION = 2
+
+# the frame ledger's stable key set: `throughput()["onpolicy"]` carries
+# exactly these keys on EVERY run — zero-valued when the vtrace queue is
+# off — so time-series collectors never see ledger keys appear mid-run
+ZERO_LEDGER = {
+    "frames_generated": 0, "frames_trained": 0, "frames_dropped": 0,
+    "frames_dropped_stale": 0, "frames_dropped_overflow": 0,
+    "frames_dropped_shutdown": 0, "frames_dropped_fault": 0,
+    "frames_pending": 0, "drop_rate": 0.0, "unrolls_trained": 0,
+    "mean_trained_lag": 0.0, "max_param_lag": 0, "capacity": 0,
+}
+
 
 class SeedSystem:
     def __init__(self, *, env_factory: Callable, policy_step: Optional[Callable] = None,
@@ -99,7 +115,7 @@ class SeedSystem:
                  telemetry=None, ops_port: Optional[int] = None,
                  supervise_hosts: bool = False,
                  max_host_restarts: int = 3, host_stall_s: float = 5.0,
-                 wire_reconnect=None):
+                 wire_reconnect=None, autoscale=None):
         if backend not in ("host", "device"):
             raise ValueError(f"unknown backend {backend!r}; use 'host' or 'device'")
         if algo not in ("r2d2", "vtrace"):
@@ -199,6 +215,23 @@ class SeedSystem:
                 "supervise_hosts / wire_reconnect apply to wire transports "
                 "(in-process actors have no host processes to supervise "
                 "or connections to re-dial)")
+        if autoscale is not None:
+            from repro.autoscale import AutoscaleConfig
+            if not isinstance(autoscale, AutoscaleConfig):
+                raise TypeError(
+                    f"autoscale must be a repro.autoscale.AutoscaleConfig "
+                    f"(or None), got {type(autoscale).__name__}")
+            if backend != "host":
+                raise ValueError(
+                    "autoscale applies to backend='host' (the device "
+                    "backend has no actor hosts or inference replicas "
+                    "to resize)")
+            if telemetry is None:
+                # the controller senses through the registry + bottleneck
+                # attribution; a bare SeedSystem(autoscale=...) gets a
+                # default bundle exactly like ops_port does
+                from repro.telemetry import Telemetry
+                telemetry = Telemetry(process_name="learner")
         self.backend = backend
         self.transport = transport
         self.algo = algo
@@ -216,6 +249,8 @@ class SeedSystem:
         self.num_actors = num_actors
         self.ops_address = None
         self._run_t0 = None
+        self._t_created = time.perf_counter()    # /varz uptime_s
+        self.autoscaler = None
         # fault-recovery bookkeeping (see throughput()["recovery"])
         self.host_faults = 0
         self.frames_dropped_by_fault_events = 0
@@ -290,7 +325,8 @@ class SeedSystem:
                     max_host_restarts=max_host_restarts,
                     host_stall_s=host_stall_s,
                     reconnect=wire_reconnect,
-                    fault_callback=self._host_fault)
+                    fault_callback=self._host_fault,
+                    elastic=autoscale is not None)
                 self.actors = []
             else:
                 self.actors = [Actor(i, env_factory, self.server, self._sink,
@@ -368,6 +404,35 @@ class SeedSystem:
             self.ops_address = telemetry.serve_ops(port=ops_port)
             telemetry.ops.set_varz(self._varz)
             telemetry.ops.add_collector(self._ops_ledger_gauges)
+        if autoscale is not None:
+            from repro.autoscale import AutoscaleController
+            from repro.telemetry.slo import SLO, SLOSet
+            slos = autoscale.slos
+            if slos is None:
+                # deliberately loose defaults: a 1 frame/s floor ("not
+                # stalled"), the drop-rate knee the learner-bound override
+                # uses, and a generous batch-wait ceiling — operators
+                # tighten via AutoscaleConfig(slos=SLOSet([...]))
+                slos = SLOSet([
+                    SLO(name="frames_floor", series="frames_generated",
+                        target=1.0, kind="floor", mode="rate",
+                        fast_window_s=3.0, slow_window_s=10.0),
+                    SLO(name="drop_rate", series="drop_rate", target=0.5,
+                        kind="ceiling", fast_window_s=3.0,
+                        slow_window_s=10.0),
+                    SLO(name="infer_p99_ms", series="infer_p99_ms",
+                        target=1000.0, kind="ceiling", fast_window_s=3.0,
+                        slow_window_s=10.0),
+                ])
+            self.autoscaler = AutoscaleController(
+                autoscale, telemetry, stats_fn=self._autoscale_stats,
+                pool=self.pool, server=self.server, slos=slos)
+            self.autoscaler.store.add_source(self._live_series)
+            telemetry.flightrec.add_provider("autoscaler",
+                                             self.autoscaler.dump)
+            if telemetry.ops is not None:
+                telemetry.ops.set_autoscaler(self.autoscaler.dump)
+                telemetry.ops.set_timeseries(self.autoscaler.store.dump)
 
     # --------------------------------------------------------- fault plane
 
@@ -466,13 +531,58 @@ class SeedSystem:
         scrape can never observe generated != trained+dropped+pending —
         individual callback gauges cannot promise that."""
         out = {}
-        if self.onpolicy_queue is not None:
-            for k, v in self.onpolicy_queue.stats().items():
-                if isinstance(v, bool) or not isinstance(v, (int, float)):
-                    continue
-                out[f"onpolicy/{k}"] = v
+        ledger = (self.onpolicy_queue.stats()
+                  if self.onpolicy_queue is not None else ZERO_LEDGER)
+        for k, v in ledger.items():
+            if isinstance(v, bool) or not isinstance(v, (int, float)):
+                continue
+            out[f"onpolicy/{k}"] = v
         if self.server is not None:
             out["inference/num_slots"] = self.server.num_slots
+        for k, v in self._recovery_stats().items():
+            out[f"recovery/{k}"] = v
+        return out
+
+    def _autoscale_stats(self) -> dict:
+        """Mid-run stats document for the controller's bottleneck
+        attribution. `throughput()` needs the pool's final per-host stats
+        (which only land at window end), so this feeds the ledger's live
+        frame count instead — `bottleneck_report` falls back to registry
+        lane counters when `env_frames` is absent."""
+        elapsed = (time.perf_counter() - self._run_t0) \
+            if self._run_t0 is not None else 0.0
+        stats = {"elapsed_s": max(elapsed, 1e-9)}
+        if self.onpolicy_queue is not None:
+            s = self.onpolicy_queue.stats()
+            stats["onpolicy"] = s
+            stats["env_frames"] = s["frames_generated"]
+        return stats
+
+    def _live_series(self) -> dict:
+        """The time-series sampler source: one flat {name: value} dict per
+        tick, read from single atomic snapshots (queue stats, registry
+        histograms, recovery counters) so points are mutually consistent."""
+        out = {}
+        if self.onpolicy_queue is not None:
+            s = self.onpolicy_queue.stats()
+            for k in ("frames_generated", "frames_trained",
+                      "frames_dropped", "frames_pending", "drop_rate"):
+                out[k] = s[k]
+            out["queue_depth"] = len(self.onpolicy_queue)
+        elif self.telemetry is not None:
+            # r2d2/replay runs: lanes served is the frame-supply counter
+            out["frames_generated"] = \
+                self.telemetry._counter_total("/requests")
+        if self.telemetry is not None:
+            h = self.telemetry.metrics.snapshot()["histograms"].get(
+                "inference/batch_wait_s")
+            if h and h.get("count") and h.get("p99") is not None:
+                out["infer_p99_ms"] = 1e3 * h["p99"]
+        if self.autoscaler is not None:
+            # derived view over the points already in the store (up to the
+            # previous tick) — the decision log's headline trigger value
+            out["frames_per_s"] = self.autoscaler.store.rate(
+                "frames_generated", 5.0)
         for k, v in self._recovery_stats().items():
             out[f"recovery/{k}"] = v
         return out
@@ -484,7 +594,14 @@ class SeedSystem:
         elapsed = (time.perf_counter() - self._run_t0) \
             if self._run_t0 is not None else 0.0
         stats = self.throughput(max(elapsed, 1e-9))
-        out = {"stats": stats}
+        out = {"schema_version": VARZ_SCHEMA_VERSION,
+               "uptime_s": round(time.perf_counter() - self._t_created, 3),
+               "stats": stats}
+        if self.autoscaler is not None:
+            out["autoscale"] = {
+                "topology": self.autoscaler.topology(),
+                "ticks": self.autoscaler.ticks,
+                "actions_applied": dict(self.autoscaler.actions_applied)}
         if self.telemetry is not None:
             try:
                 out["bottleneck"] = \
@@ -517,7 +634,12 @@ class SeedSystem:
     def _audit_slots(self):
         v = []
         n = self.server.num_slots
-        budget = self.num_actors * self.envs_per_actor
+        # the pool's high-water actor-id mark, not the constructed count:
+        # autoscale grows issue fresh actor ids, and their slots are
+        # legitimate table rows forever (slots never shrink)
+        actors = (self.pool.hw_actors if self.pool is not None
+                  else self.num_actors)
+        budget = actors * self.envs_per_actor
         if n > budget:
             v.append(f"slot table has {n} slots > lane budget {budget}")
         if n < self._audit_prev_slots:
@@ -587,10 +709,17 @@ class SeedSystem:
         self._run_t0 = time.perf_counter()
         if self.telemetry is not None:
             self.telemetry.start()
+        if self.autoscaler is not None:
+            # the controller thread senses/decides/acts while the window
+            # runs; pool commands execute inside the collect loop, replica
+            # activation is a plain attribute flip — both thread-safe
+            self.autoscaler.start()
         if self.pool is not None:
             try:
                 return self._run_socket(seconds, with_learner)
             finally:
+                if self.autoscaler is not None:
+                    self.autoscaler.stop()
                 if self.telemetry is not None:
                     self.telemetry.stop()
         if self.server:
@@ -616,6 +745,8 @@ class SeedSystem:
             # count so generated == trained + dropped in throughput()
             # (learner.stop() already closed it when a learner ran)
             self.onpolicy_queue.close()
+        if self.autoscaler is not None:
+            self.autoscaler.stop()
         if self.telemetry is not None:
             self.telemetry.stop()
         return self.throughput(elapsed)
@@ -704,11 +835,13 @@ class SeedSystem:
                 lag_total = sum(a.param_lag_total for a in self.actors)
             out["unroll_flushes"] = unroll_flushes
             out["mean_param_lag"] = lag_total / max(unroll_flushes, 1)
-        if self.onpolicy_queue is not None:
-            # the conserved frame ledger: generated == trained + dropped
-            # (+ pending mid-run); drop_rate is the paper's actor-scaling
-            # knee seen from the algorithm side
-            out["onpolicy"] = self.onpolicy_queue.stats()
+        # the conserved frame ledger: generated == trained + dropped
+        # (+ pending mid-run); drop_rate is the paper's actor-scaling
+        # knee seen from the algorithm side. ALWAYS present — zero-valued
+        # when the vtrace queue is off — so scrapers see a stable schema
+        out["onpolicy"] = (self.onpolicy_queue.stats()
+                           if self.onpolicy_queue is not None
+                           else dict(ZERO_LEDGER))
         # survival counters: how much dying/reconnecting/checkpointing the
         # run absorbed (all zero on a calm run — the overhead gate's claim)
         out["recovery"] = self._recovery_stats()
@@ -742,6 +875,9 @@ class SeedSystem:
                 gs = [gw.stats for gw in self.gateways]
                 out.update({
                     "actor_hosts": self.pool.num_hosts,
+                    "actor_hosts_live": self.pool.live_hosts(),
+                    "hosts_grown": self.pool.hosts_grown,
+                    "hosts_drained": self.pool.hosts_drained,
                     "num_gateways": len(self.gateways),
                     "gateway_connections": sum(g["connections"] for g in gs),
                     "gateway_request_frames": sum(g["request_frames"]

@@ -1,6 +1,6 @@
 from repro.envs.catch import CatchEnv  # noqa: F401
 from repro.envs.cartpole import CartPoleEnv  # noqa: F401
-from repro.envs.alesim import ALESimEnv  # noqa: F401
+from repro.envs.alesim import ALESimEnv, FlatSimEnv  # noqa: F401
 from repro.envs.tokenworld import TokenWorld  # noqa: F401
 from repro.envs.vector import (JaxVectorEnv, SyncVectorEnv,  # noqa: F401
                                VectorEnv, make_vector_env)

@@ -96,6 +96,14 @@ class ActorHostConfig:
     #                              (None: no failover, fail-fast)
     reconnect: Any = None        # repro.fault.BackoffPolicy (picklable) or
     #                              None = historical fail-fast wire
+    stop_event: Any = None       # mp.Event (spawn-inheritable): graceful
+    #                              drain — when set, the child leaves its
+    #                              measured window early, stops its actors
+    #                              cleanly (in-flight unroll flushed or
+    #                              discarded BEFORE the ledger, so frame
+    #                              conservation is exact by construction),
+    #                              and reports final stats like a normal
+    #                              window end
 
 
 def run_actor_host(cfg: ActorHostConfig, result_q) -> None:
@@ -197,6 +205,9 @@ def run_actor_host(cfg: ActorHostConfig, result_q) -> None:
                 break
             if all(not a._thread.is_alive() for a in actors):
                 break
+            if cfg.stop_event is not None and cfg.stop_event.is_set():
+                stats["drained"] = True      # autoscaler shrink: leave the
+                break                        # window early but exit CLEANLY
             time.sleep(0.02)
         for a in actors:
             a.stop()
@@ -272,7 +283,8 @@ class ActorHostPool:
                  supervise: bool = False, max_host_restarts: int = 3,
                  host_stall_s: float = 5.0,
                  min_respawn_window_s: float = 0.25,
-                 reconnect=None, fault_callback=None):
+                 reconnect=None, fault_callback=None,
+                 elastic: bool = False):
         if not 1 <= num_hosts <= num_actors:
             raise ValueError(
                 f"num_hosts={num_hosts} must be in [1, num_actors={num_actors}]")
@@ -322,6 +334,24 @@ class ActorHostPool:
         self._hosts: dict = {}       # host_id -> incarnation record
         self._all_procs: List[Any] = []
         self.last_stats: List[dict] = []
+        # --- elasticity (the autoscaler's actor-plane actuator) ----------
+        # request_grow/request_drain enqueue commands that ONLY the collect
+        # loop executes (self._hosts is single-threaded by design; the
+        # controller thread never touches it). `elastic=True` also caps the
+        # idle poll at 0.25 s so commands execute promptly without
+        # supervision. hw_actors is the HIGH-WATER actor-id mark — it only
+        # grows, because the server's (actor_id, env_id) slot table never
+        # shrinks and the slot auditor's budget must cover every id ever
+        # issued; num_actors stays the constructed base partition.
+        self.elastic = elastic
+        self.hw_actors = num_actors
+        self.hosts_grown = 0
+        self.hosts_drained = 0
+        self._commands: "_queue.Queue" = _queue.Queue()
+        self._running = False
+        self._expected = num_hosts   # hosts whose final stats run() awaits
+        self._next_host_id = num_hosts
+        self._grow_log: List[str] = []
 
     def _partitions(self) -> List[Tuple[int, ...]]:
         ids = list(range(self.num_actors))
@@ -347,6 +377,9 @@ class ActorHostPool:
     def _spawn(self, host_id: int, actor_ids: Tuple[int, ...],
                addresses: List[Tuple[str, int]], seconds: float,
                epoch: int, result_q, ctx) -> None:
+        # an mp.Event is spawn-inheritable through Process args, so every
+        # incarnation carries a drain flag even if elasticity never fires
+        stop_event = ctx.Event() if self.elastic else None
         cfg = ActorHostConfig(
             address=addresses[host_id % len(addresses)], host_id=host_id,
             actor_ids=tuple(actor_ids), env_factory=self.env_factory,
@@ -360,7 +393,8 @@ class ActorHostPool:
             epoch=epoch,
             addresses=(tuple(addresses)
                        if self.reconnect is not None else None),
-            reconnect=self.reconnect)
+            reconnect=self.reconnect,
+            stop_event=stop_event)
         p = ctx.Process(target=run_actor_host, args=(cfg, result_q),
                         daemon=True)
         p.start()
@@ -368,8 +402,90 @@ class ActorHostPool:
             self.pid_callback(f"actor-host-{host_id}", p.pid)
         self._hosts[host_id] = {
             "proc": p, "epoch": epoch, "actor_ids": tuple(actor_ids),
-            "last_beat": time.perf_counter(), "reported": False}
+            "last_beat": time.perf_counter(), "reported": False,
+            "draining": False, "stop_event": stop_event}
         self._all_procs.append(p)
+
+    # ---------------------------------------------------------- elasticity
+
+    def live_hosts(self) -> int:
+        """Hosts currently producing frames (spawned, not reported, not
+        draining). Before/after a run the constructed count is reported so
+        the autoscaler's bounds checks stay meaningful."""
+        if not self._running:
+            return self.num_hosts
+        return sum(1 for st in self._hosts.values()
+                   if not st["reported"] and not st["draining"])
+
+    def request_grow(self) -> bool:
+        """Ask the collect loop to spawn one more actor host mid-window
+        (thread-safe; executes within one poll tick). The new host gets
+        the next host_id — `host_id % G` hashes it onto a live gateway,
+        which accepts connections continuously — and a FRESH contiguous
+        actor-id block above `hw_actors`, so its (actor_id, env_id)
+        recurrent slots are new rows in the server's dense table, never a
+        collision with an existing host's. Returns False when no window
+        is running or the pool was not built elastic."""
+        if not (self.elastic and self._running):
+            return False
+        self._commands.put("grow")
+        return True
+
+    def request_drain(self) -> bool:
+        """Ask the collect loop to gracefully drain the newest live host:
+        its stop_event is set, the child leaves its window early, stops
+        actors cleanly and reports final stats like a normal window end —
+        frames stay exactly conserved because partial unrolls never enter
+        the ledger. LIFO (highest host_id first) keeps the constructed
+        base partition intact."""
+        if not (self.elastic and self._running):
+            return False
+        self._commands.put("drain")
+        return True
+
+    def _execute_commands(self, addresses, window_end, result_q, ctx,
+                          now) -> None:
+        """Drain the command queue inside the collect loop — the ONLY
+        place `self._hosts` is ever mutated, so grow/drain need no lock
+        against `_scan` or the heartbeat relay."""
+        while True:
+            try:
+                cmd = self._commands.get_nowait()
+            except _queue.Empty:
+                return
+            if cmd == "grow":
+                remaining = window_end - now
+                if remaining < self.min_respawn_window_s:
+                    self._grow_log.append(
+                        f"grow skipped: {remaining:.2f}s left in window")
+                    continue
+                host_id = self._next_host_id
+                self._next_host_id += 1
+                per = max(len(p) for p in self._partitions())
+                actor_ids = tuple(range(self.hw_actors,
+                                        self.hw_actors + per))
+                self.hw_actors += per
+                self._expected += 1
+                self._spawn(host_id, actor_ids, addresses, remaining, 0,
+                            result_q, ctx)
+                self.hosts_grown += 1
+                self._grow_log.append(
+                    f"grew actor-host-{host_id} (actors {actor_ids[0]}.."
+                    f"{actor_ids[-1]}, {remaining:.1f}s left)")
+            elif cmd == "drain":
+                live = [h for h, st in self._hosts.items()
+                        if not st["reported"] and not st["draining"]
+                        and st["stop_event"] is not None]
+                if len(live) <= 1:
+                    self._grow_log.append(
+                        "drain skipped: would leave no live host")
+                    continue
+                h = max(live)
+                st = self._hosts[h]
+                st["draining"] = True
+                st["stop_event"].set()
+                self.hosts_drained += 1
+                self._grow_log.append(f"draining actor-host-{h}")
 
     def kill_host(self, host_id: int) -> bool:
         """Chaos hook: SIGKILL the live incarnation of `host_id` (no
@@ -385,7 +501,10 @@ class ActorHostPool:
               budget, now) -> None:
         """One supervision sweep: detect dead/silent hosts, respawn."""
         for h, st in list(self._hosts.items()):
-            if st["reported"]:
+            if st["reported"] or st["draining"]:
+                # a draining host exits on purpose; seeing its (still
+                # queued) final stats as a death would respawn the host
+                # the autoscaler just removed
                 continue
             dead = not st["proc"].is_alive()
             stalled = (not dead
@@ -453,6 +572,9 @@ class ActorHostPool:
         result_q = ctx.Queue()
         self._hosts = {}
         self._all_procs = []
+        self._commands = _queue.Queue()      # no stale commands carry over
+        self._expected = self.num_hosts
+        self._next_host_id = self.num_hosts
         t0 = time.perf_counter()
         window_end = t0 + seconds
         budget = RestartBudget(self.max_host_restarts,
@@ -460,6 +582,7 @@ class ActorHostPool:
         for host_id, actor_ids in enumerate(self._partitions()):
             self._spawn(host_id, actor_ids, addresses, seconds, 0,
                         result_q, ctx)
+        self._running = True
         deadline = window_end + self.grace_s
         results: dict = {}           # host_id -> final stats (one epoch)
         try:
@@ -468,17 +591,22 @@ class ActorHostPool:
             # frame is relayed and skipped. The deadline is re-checked
             # explicitly — a child whose actors wedged keeps beating, and
             # those beats must not let it dodge the hard timeout.
-            while len(results) < self.num_hosts:
+            # `_expected` is re-read every iteration: an autoscale grow
+            # adds a host (and its final stats) to this window on the fly.
+            while len(results) < self._expected:
                 remaining = deadline - time.perf_counter()
                 if remaining <= 0:
                     self._timed_out(list(results.values()), seconds)
-                poll = min(max(remaining, 0.1), 0.25) if self.supervise \
+                # supervision AND elasticity both need prompt idle ticks
+                # (death scans / command execution within 0.25 s)
+                poll = min(max(remaining, 0.1), 0.25) \
+                    if (self.supervise or self.elastic) \
                     else max(remaining, 0.1)
                 try:
                     r = result_q.get(timeout=poll)
                 except _queue.Empty:
                     r = None
-                    if not self.supervise:
+                    if not (self.supervise or self.elastic):
                         self._timed_out(list(results.values()), seconds)
                 now = time.perf_counter()
                 if isinstance(r, dict) and "__heartbeat__" in r:
@@ -502,14 +630,23 @@ class ActorHostPool:
                         if st is not None:
                             st["reported"] = True
                         results[h] = r
+                        if self.heartbeat_close is not None:
+                            # final stats are the child's LAST frame — drop
+                            # its heartbeat now so a drained host doesn't
+                            # read as stalled for the rest of the window
+                            self.heartbeat_close(f"actor-host-{h}")
                 if self.supervise:
                     self._scan(results, addresses, window_end, result_q,
                                ctx, budget, now)
+                if self.elastic:
+                    self._execute_commands(addresses, window_end, result_q,
+                                           ctx, now)
         finally:
+            self._running = False
             if self.heartbeat_close is not None:
                 # completed (or killed) children stop beating; drop their
                 # registry entries so they don't read as stalled forever
-                for host_id in range(self.num_hosts):
+                for host_id in self._hosts:
                     self.heartbeat_close(f"actor-host-{host_id}")
             for p in self._all_procs:
                 p.join(timeout=5.0)
@@ -523,7 +660,7 @@ class ActorHostPool:
     def _timed_out(self, results, seconds):
         msg = (
             f"actor host timed out after {seconds + self.grace_s:.0f}s "
-            f"({len(results)}/{self.num_hosts} reported) — wire-level "
+            f"({len(results)}/{self._expected} reported) — wire-level "
             f"deadlock or crash; partial stats: {results}")
         if self.failure_callback is not None:
             try:

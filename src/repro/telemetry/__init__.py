@@ -73,17 +73,22 @@ from .ops import (OpsServer, parse_prometheus, render_prometheus,
                   sanitize_metric_name, validate_prometheus)
 from .sampler import (BottleneckReport, UtilizationSampler,
                       attribute_bottleneck, read_process_cpu_s)
-from .sink import TelemetrySink, merge_bench_json
+from .sink import (TelemetrySink, append_bench_history, bench_commit,
+                   merge_bench_json)
+from .slo import SLO, SLOSet, SLOVerdict
+from .timeseries import TimeSeries, TimeSeriesStore
 from .tracer import Tracer, chrome_trace, flow_events, next_trace_seq
 
 __all__ = [
     "Telemetry", "Tracer", "MetricsRegistry", "Counter", "Gauge",
     "Histogram", "UtilizationSampler", "BottleneckReport",
     "attribute_bottleneck", "read_process_cpu_s", "TelemetrySink",
-    "merge_bench_json", "next_trace_seq", "flow_events", "chrome_trace",
+    "merge_bench_json", "append_bench_history", "bench_commit",
+    "next_trace_seq", "flow_events", "chrome_trace",
     "HeartbeatRegistry", "HealthReport", "Watchdog", "FlightRecorder",
     "InvariantAuditor", "OpsServer", "render_prometheus",
     "parse_prometheus", "validate_prometheus", "sanitize_metric_name",
+    "TimeSeries", "TimeSeriesStore", "SLO", "SLOSet", "SLOVerdict",
 ]
 
 

@@ -20,6 +20,13 @@ the piece GA3C-style runtime tuning and the ROADMAP's autoscaler need.
   bundle paths. The autoscaler's input document.
 - ``/trace``    — Chrome trace JSON of the current span rings, on
   demand, without waiting for `dump()`.
+- ``/autoscaler`` — the elastic control plane's append-only decision
+  log + live topology (`AutoscaleController.dump()`): every resize with
+  the series values, bottleneck class and SLO verdicts that justified
+  it. 404s with a hint until a controller registers.
+- ``/timeseries`` — windowed dump of every `TimeSeriesStore` series
+  (``?window=<seconds>`` narrows it) — the raw points behind the
+  autoscaler's decisions, for external plotting/debugging.
 
 The scrape path does work only per-request (a snapshot + string build);
 an idle ops server costs one blocked `accept`. Everything is stdlib —
@@ -41,8 +48,10 @@ __all__ = ["OpsServer", "render_prometheus", "parse_prometheus",
            "validate_prometheus", "sanitize_metric_name"]
 
 _NAME_OK = re.compile(r"^[a-zA-Z_:][a-zA-Z0-9_:]*$")
-_SAMPLE = re.compile(                    # name{labels} value
-    r"^([a-zA-Z_:][a-zA-Z0-9_:]*)(\{[^}]*\})?\s+(\S+)$")
+_SAMPLE = re.compile(                    # name{labels} value — the label
+    # group is GREEDY to the last '}' so quoted label values may contain
+    # a raw '}' (legal in the exposition format; only \ " need escaping)
+    r"^([a-zA-Z_:][a-zA-Z0-9_:]*)(\{.*\})?\s+(\S+)$")
 
 
 def sanitize_metric_name(name: str) -> str:
@@ -142,13 +151,53 @@ def parse_prometheus(text: str) -> dict:
         name, rawlabels, rawval = m.groups()
         labels = {}
         if rawlabels:
-            for item in rawlabels[1:-1].split(","):
-                if not item:
-                    continue
-                k, _, v = item.partition("=")
-                labels[k.strip()] = v.strip().strip('"')
+            try:
+                labels = _parse_labels(rawlabels[1:-1])
+            except ValueError as exc:
+                raise ValueError(f"line {lineno}: {exc}") from None
         samples.append((name, labels, float(rawval)))
     return {"types": types, "samples": samples}
+
+
+def _parse_labels(raw: str) -> Dict[str, str]:
+    """Escape-aware label scanner: ``k1="v1",k2="v2"`` where values may
+    contain commas, raw ``}``, and the exposition-format escapes ``\\\\``
+    ``\\"`` ``\\n``. A naive split-on-comma silently mangles all three —
+    this is a character scanner instead."""
+    labels: Dict[str, str] = {}
+    i, n = 0, len(raw)
+    while i < n:
+        if raw[i] in ", \t":
+            i += 1
+            continue
+        eq = raw.find("=", i)
+        if eq < 0:
+            raise ValueError(f"label item without '=' in {raw!r}")
+        key = raw[i:eq].strip()
+        j = eq + 1
+        if j < n and raw[j] == '"':
+            j += 1
+            out = []
+            while j < n and raw[j] != '"':
+                c = raw[j]
+                if c == "\\" and j + 1 < n:
+                    nxt = raw[j + 1]
+                    out.append({"n": "\n", "\\": "\\", '"': '"'}
+                               .get(nxt, "\\" + nxt))
+                    j += 2
+                    continue
+                out.append(c)
+                j += 1
+            if j >= n:
+                raise ValueError(f"unterminated label value in {raw!r}")
+            labels[key] = "".join(out)
+            i = j + 1                   # past the closing quote
+        else:                           # lenient: historical unquoted form
+            end = raw.find(",", j)
+            end = n if end < 0 else end
+            labels[key] = raw[j:end].strip().strip('"')
+            i = end
+    return labels
 
 
 def value_of(parsed: dict, name: str) -> Optional[float]:
@@ -271,12 +320,45 @@ class _Handler(BaseHTTPRequestHandler):
                            json.dumps(chrome_trace(
                                ops.telemetry.trace_events())),
                            "application/json")
+            elif path == "/autoscaler":
+                doc = ops.autoscaler()
+                if doc is None:
+                    self._send(404, json.dumps(
+                        {"error": "no autoscaler registered",
+                         "hint": "SeedSystem(autoscale=AutoscaleConfig())"
+                         }), "application/json")
+                else:
+                    self._send(200, json.dumps(_jsonable(doc),
+                                               default=str),
+                               "application/json")
+            elif path == "/timeseries":
+                window = 120.0
+                q = self.path.split("?", 1)
+                if len(q) == 2:
+                    for item in q[1].split("&"):
+                        k, _, v = item.partition("=")
+                        if k == "window":
+                            try:
+                                window = float(v)
+                            except ValueError:
+                                pass
+                doc = ops.timeseries(window)
+                if doc is None:
+                    self._send(404, json.dumps(
+                        {"error": "no time-series store registered"}),
+                        "application/json")
+                else:
+                    self._send(200, json.dumps(_jsonable(doc),
+                                               default=str),
+                               "application/json")
             else:
                 self._send(404, json.dumps({"error": "not found",
                                             "endpoints": ["/metrics",
                                                           "/healthz",
                                                           "/varz",
-                                                          "/trace"]}),
+                                                          "/trace",
+                                                          "/autoscaler",
+                                                          "/timeseries"]}),
                            "application/json")
         except Exception as exc:             # an exporter bug must not wedge
             try:                             # the scraper's connection
@@ -301,6 +383,8 @@ class OpsServer:
         self.scrapes = 0                 # /metrics hits, for the tests
         self._collectors: List[Callable[[], Dict[str, float]]] = []
         self._varz_fn: Optional[Callable[[], dict]] = None
+        self._autoscaler_fn: Optional[Callable[[], dict]] = None
+        self._timeseries_fn: Optional[Callable[..., dict]] = None
         self._httpd: Optional[ThreadingHTTPServer] = None
         self._thread: Optional[threading.Thread] = None
 
@@ -309,6 +393,16 @@ class OpsServer:
 
     def set_varz(self, fn: Callable[[], dict]):
         self._varz_fn = fn
+
+    def set_autoscaler(self, fn: Callable[[], dict]):
+        """Install the /autoscaler document provider (the controller's
+        `dump`: decision log + topology + bounds)."""
+        self._autoscaler_fn = fn
+
+    def set_timeseries(self, fn: Callable[..., dict]):
+        """Install the /timeseries provider: ``fn(window_s)`` returning a
+        `TimeSeriesStore.dump()`-shaped document."""
+        self._timeseries_fn = fn
 
     # ----------------------------------------------------- endpoint bodies
 
@@ -322,6 +416,16 @@ class OpsServer:
                 pass                     # a dead collector must not 500 /metrics
         return render_prometheus(self.telemetry.merged_snapshot(),
                                  extra_gauges=extra)
+
+    def autoscaler(self) -> Optional[dict]:
+        if self._autoscaler_fn is None:
+            return None
+        return self._autoscaler_fn()
+
+    def timeseries(self, window_s: float = 120.0) -> Optional[dict]:
+        if self._timeseries_fn is None:
+            return None
+        return self._timeseries_fn(window_s)
 
     def health_report(self) -> dict:
         health = getattr(self.telemetry, "health", None)
